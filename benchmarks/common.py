@@ -1,0 +1,68 @@
+"""Shared benchmark configuration: scaled dataset instances + configs."""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.algorithms.common import Problem
+from repro.core import accugraph, hitgraph
+from repro.core.dram import ddr4_2400r
+from repro.core.hitgraph import CONTIGUOUS_ORDER
+from repro.graphs.datasets import TABLE1, instantiate
+from repro.graphs.formats import Graph
+
+# default benchmark scale: ~1% of the full datasets (seconds per sim)
+SCALE = 0.01
+
+
+@functools.lru_cache(maxsize=32)
+def graph(abbr: str, scale: float = SCALE, undirected: bool = False):
+    cap = scale
+    if abbr == "tw":                    # 1.47B edges: scale down further
+        cap = min(scale, 0.002)
+    g = instantiate(abbr, scale=cap, seed=0)
+    return g.undirected_view() if undirected else g
+
+
+def scaled_q(q_full: int, abbr: str, scale: float = SCALE) -> int:
+    """Preserve the paper's partition COUNT on scaled stand-ins."""
+    spec = TABLE1[abbr]
+    n_full = spec.vertices
+    g = graph(abbr, scale)
+    frac = g.n / n_full
+    return max(int(q_full * frac), 256)
+
+
+def hitgraph_cfg(abbr: str, scale: float = SCALE) -> hitgraph.HitGraphConfig:
+    return hitgraph.HitGraphConfig(
+        partition_elements=scaled_q(256_000, abbr, scale))
+
+
+def accugraph_cfg(abbr: str, scale: float = SCALE,
+                  value_bytes: int = 4,
+                  q_full: Optional[int] = None) -> accugraph.AccuGraphConfig:
+    # paper: all vertices fit BRAM for BFS; q=1.7M for PR/WCC on lj/or
+    q = None
+    if q_full is not None:
+        q = scaled_q(q_full, abbr, scale)
+    return accugraph.AccuGraphConfig(partition_elements=q,
+                                     value_bytes=value_bytes)
+
+
+def comparability_cfgs(abbr: str, scale: float = SCALE):
+    dram = dataclasses.replace(
+        ddr4_2400r(channels=1, density="8Gb"), order=CONTIGUOUS_ORDER)
+    q = scaled_q(1_024_000, abbr, scale)
+    hg = hitgraph.HitGraphConfig(n_pes=1, pipelines=16,
+                                 partition_elements=q, dram=dram)
+    ag = accugraph.AccuGraphConfig(partition_elements=q, dram=dram)
+    return hg, ag
+
+
+def pct_error(sim: float, truth: float) -> float:
+    """Paper Sect. 4.1: e = 100 * |s - t| / t."""
+    return 100.0 * abs(sim - truth) / truth

@@ -1,0 +1,43 @@
+"""E7 (paper §7 future work): DRAM-type exploration — the same AccuGraph
+logic on DDR4-2400R vs HBM2 vs HBM2E, and HitGraph on DDR3 vs HBM2."""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List
+
+from benchmarks import common
+from repro.algorithms.common import Problem
+from repro.core import accugraph, hitgraph
+from repro.core.dram import ddr4_2400r, hbm2, hbm2e
+from repro.core.hitgraph import CONTIGUOUS_ORDER
+
+
+def run(scale: float = common.SCALE) -> List[Dict]:
+    rows = []
+    g = common.graph("lj", scale, undirected=True)
+    drams = {
+        "ddr4_2400r": ddr4_2400r(channels=1),
+        "hbm2": hbm2(channels=8),
+        "hbm2e": hbm2e(channels=16),
+    }
+    for name, dram in drams.items():
+        dram = dataclasses.replace(dram, order=CONTIGUOUS_ORDER)
+        cfg = accugraph.AccuGraphConfig(
+            partition_elements=common.scaled_q(1_700_000, "lj", scale),
+            dram=dram)
+        t0 = time.perf_counter()
+        rep = accugraph.simulate(g, Problem.WCC, cfg)
+        rows.append({
+            "bench": "dram_types", "system": "accugraph", "dram": name,
+            "runtime_ms": rep.runtime_ms, "greps": rep.reps / 1e9,
+            "peak_gbps": dram.peak_gbps,
+            "wall_s": time.perf_counter() - t0,
+        })
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

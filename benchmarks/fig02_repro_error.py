@@ -1,0 +1,40 @@
+"""E6 (paper Fig. 2b): percentage-error summary across accelerators and
+problems — our simulated numbers vs the (approximate, see
+ground_truth.py) paper anchors, grouped the way Fig. 2b groups them.
+SSSP is reported separately, as the paper does (root-dependence)."""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks import common, fig09_hitgraph, fig10_accugraph
+
+
+def run(scale: float = common.SCALE) -> List[Dict]:
+    rows = []
+    errors_no_sssp = []
+    hg = fig09_hitgraph.run(scale)
+    ag = fig10_accugraph.run(scale)
+    for r in hg + ag:
+        if r["pct_error"] is None:
+            continue
+        sysname = "hitgraph" if r["bench"] == "fig09" else "accugraph"
+        rows.append({
+            "bench": "fig02b", "system": sysname,
+            "problem": r["problem"], "dataset": r["dataset"],
+            "pct_error": r["pct_error"],
+        })
+        if r["problem"] != "sssp":
+            errors_no_sssp.append(r["pct_error"])
+    rows.append({
+        "bench": "fig02b", "system": "all", "problem": "mean_no_sssp",
+        "dataset": "-", "pct_error": float(np.mean(errors_no_sssp)),
+    })
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,53 @@
+"""E2 (paper Fig. 10): AccuGraph GREPS for BFS / PR / WCC.
+
+GREPS is size-normalized, so scaled stand-ins compare directly against
+the Fig. 10 anchors (provenance caveat in ground_truth.py).
+Configuration per the paper: BFS uses 8-bit values with everything in
+BRAM; PR/WCC on lj/or use partition size 1.7M (scaled).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+from benchmarks import common, ground_truth as GT
+from repro.algorithms.common import Problem
+from repro.core import accugraph
+from repro.graphs.datasets import ACCUGRAPH_SETS
+
+
+def run(scale: float = common.SCALE, datasets=None) -> List[Dict]:
+    datasets = datasets or ACCUGRAPH_SETS
+    rows = []
+    for abbr in datasets:
+        for pname, prob, vb in (("bfs", Problem.BFS, 1),
+                                ("pr", Problem.PR, 4),
+                                ("wcc", Problem.WCC, 4)):
+            q_full = 1_700_000 if (abbr in ("lj", "or")
+                                   and pname != "bfs") else None
+            cfg = common.accugraph_cfg(abbr, scale, value_bytes=vb,
+                                       q_full=q_full)
+            g = common.graph(abbr, scale,
+                             undirected=(prob == Problem.WCC))
+            t0 = time.perf_counter()
+            rep = accugraph.simulate(
+                g, prob, cfg,
+                fixed_iters=1 if prob == Problem.PR else None)
+            wall = time.perf_counter() - t0
+            gt = GT.ACCUGRAPH_GREPS[pname].get(abbr)
+            rows.append({
+                "bench": "fig10", "dataset": abbr, "problem": pname,
+                "greps": rep.reps / 1e9,
+                "gt_greps": gt,
+                "pct_error": (common.pct_error(rep.reps / 1e9, gt)
+                              if gt else None),
+                "iterations": rep.iterations,
+                "wall_s": wall,
+            })
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

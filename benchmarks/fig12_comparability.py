@@ -1,0 +1,45 @@
+"""E4 (paper Fig. 12): HitGraph vs AccuGraph, equal configuration.
+
+WCC on unweighted, undirected stand-ins; DDR4-2400R 1ch 8Gb for both;
+16 edges/cycle; partition size 1,024,000 (count-preserving scaled).
+Reports runtime ratio (Fig. 12a) and iteration counts (Fig. 12b), plus
+the REPS-vs-runtime inversion the paper calls out.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+from benchmarks import common
+from repro.algorithms.common import Problem
+from repro.core import accugraph, hitgraph
+from repro.graphs.datasets import COMPARABILITY_SETS
+
+
+def run(scale: float = common.SCALE, datasets=None) -> List[Dict]:
+    datasets = datasets or COMPARABILITY_SETS
+    rows = []
+    for abbr in datasets:
+        hg_cfg, ag_cfg = common.comparability_cfgs(abbr, scale)
+        g = common.graph(abbr, scale, undirected=True)
+        t0 = time.perf_counter()
+        rh = hitgraph.simulate(g, Problem.WCC, hg_cfg)
+        ra = accugraph.simulate(g, Problem.WCC, ag_cfg)
+        rows.append({
+            "bench": "fig12", "dataset": abbr,
+            "hitgraph_ms": rh.runtime_ms,
+            "accugraph_ms": ra.runtime_ms,
+            "runtime_ratio": rh.runtime_ns / ra.runtime_ns,
+            "hitgraph_iters": rh.iterations,
+            "accugraph_iters": ra.iterations,
+            "hitgraph_reps": rh.reps,
+            "accugraph_reps": ra.reps,
+            "wall_s": time.perf_counter() - t0,
+        })
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

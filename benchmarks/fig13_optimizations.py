@@ -1,0 +1,43 @@
+"""E5 (paper Fig. 13): prefetch / partition skipping speedups over the
+AccuGraph baseline (BFS and WCC; PR noted as partition-skip-inapplicable).
+Includes the beyond-paper HBM variant (paper §7 future work)."""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+from benchmarks import common
+from repro.algorithms.common import Problem
+from repro.core import optimizations
+from repro.graphs.datasets import ACCUGRAPH_SETS
+
+
+def run(scale: float = common.SCALE, datasets=None) -> List[Dict]:
+    datasets = datasets or ["sd", "db", "yt", "wt"]
+    rows = []
+    for abbr in datasets:
+        for pname, prob in (("bfs", Problem.BFS), ("wcc", Problem.WCC)):
+            base_cfg = common.accugraph_cfg(
+                abbr, scale, q_full=1_024_000)
+            g = common.graph(abbr, scale,
+                             undirected=(prob == Problem.WCC))
+            t0 = time.perf_counter()
+            res = optimizations.run_study(
+                g, prob, base_cfg,
+                variants=["prefetch_skip", "partition_skip", "both",
+                          "hbm"])
+            for r in res:
+                rows.append({
+                    "bench": "fig13", "dataset": abbr, "problem": pname,
+                    "variant": r.variant,
+                    "runtime_ms": r.report.runtime_ms,
+                    "speedup": r.speedup,
+                    "wall_s": time.perf_counter() - t0,
+                })
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,80 @@
+"""E8: kernel microbenchmarks (interpret-mode wall time + structural
+VMEM/MXU accounting — no TPU in this container, so the structural sizes
+are the per-step working-set claims the BlockSpecs encode)."""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.dram import ddr4_2400r
+from repro.core.trace import Trace, bulk_issue
+from repro.core.timing import simulate_trace
+from repro.core.vectorized import simulate_trace_jax
+from repro.kernels.dram_timing.ops import simulate_trace_kernel
+from repro.kernels.segment_reduce.ops import segment_reduce
+from repro.kernels.edge_scatter.ops import edge_scatter
+from repro.kernels.spmv_ell.ops import spmv_ell
+
+
+def _time(fn, reps=3):
+    fn()                                     # compile/warm
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fn()
+    return (time.perf_counter() - t0) / reps * 1e6      # us
+
+
+def run() -> List[Dict]:
+    rows = []
+    rng = np.random.default_rng(0)
+    cfg = ddr4_2400r()
+    n = 20000
+    tr = Trace(rng.integers(0, 1 << 20, n), np.zeros(n, bool),
+               bulk_issue(n, 0))
+
+    t_numpy = _time(lambda: simulate_trace(tr.line_addr, tr.issue, cfg), 1)
+    t_jax = _time(lambda: simulate_trace_jax(tr, cfg))
+    t_kern = _time(lambda: simulate_trace_kernel(tr, cfg, chunk=512))
+    rows += [
+        {"bench": "kernel", "name": "dram_timing_numpy_oracle",
+         "us_per_call": t_numpy, "derived": f"n={n}"},
+        {"bench": "kernel", "name": "dram_timing_jax_scan",
+         "us_per_call": t_jax,
+         "derived": f"speedup_vs_oracle={t_numpy / t_jax:.1f}x"},
+        {"bench": "kernel", "name": "dram_timing_pallas_interpret",
+         "us_per_call": t_kern,
+         "derived": "vmem_per_step=8KiB(trace)+state"},
+    ]
+
+    m, nseg, d = 8192, 1024, 4
+    ids = jnp.asarray(rng.integers(0, nseg, m), jnp.int32)
+    vals = jnp.asarray(rng.normal(size=(m, d)), jnp.float32)
+    t = _time(lambda: segment_reduce(ids, vals, nseg, op="sum"))
+    rows.append({"bench": "kernel", "name": "segment_reduce_sum",
+                 "us_per_call": t,
+                 "derived": f"mxu_tiles={m//128}x{nseg//128}"})
+
+    src = jnp.asarray(rng.integers(0, 4096, 8192), jnp.int32)
+    w = jnp.ones(8192, jnp.float32)
+    values = jnp.asarray(rng.normal(size=4096), jnp.float32)
+    act = jnp.ones(4096, jnp.float32)
+    t = _time(lambda: edge_scatter(src, w, values, act, op="add"))
+    rows.append({"bench": "kernel", "name": "edge_scatter",
+                 "us_per_call": t, "derived": "one-hot gather on MXU"})
+
+    cols = jnp.asarray(rng.integers(0, 2048, (2048, 8)), jnp.int32)
+    ev = jnp.asarray(rng.normal(size=(2048, 8)), jnp.float32)
+    x = jnp.asarray(rng.normal(size=2048), jnp.float32)
+    t = _time(lambda: spmv_ell(cols, ev, x))
+    rows.append({"bench": "kernel", "name": "spmv_ell",
+                 "us_per_call": t, "derived": "ELL k=8"})
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,75 @@
+"""Benchmark harness: one entry per paper table/figure + kernels.
+
+Prints ``name,us_per_call,derived`` CSV per the harness contract, and a
+per-suite summary on stderr.  ``--scale`` shrinks/grows the dataset
+stand-ins (default 1% of Tab. 1 sizes).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=0.01)
+    ap.add_argument("--only", default=None,
+                    help="comma list: fig09,fig10,fig11,fig12,fig13,"
+                         "fig02,dram,kernels")
+    ap.add_argument("--json-out", default=None)
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    from benchmarks import (dram_types, fig02_repro_error,
+                            fig09_hitgraph, fig10_accugraph, fig11_degree,
+                            fig12_comparability, fig13_optimizations,
+                            kernel_bench)
+
+    suites = {
+        "fig09": lambda: fig09_hitgraph.run(args.scale),
+        "fig10": lambda: fig10_accugraph.run(args.scale),
+        "fig11": lambda: fig11_degree.run(),
+        "fig12": lambda: fig12_comparability.run(args.scale),
+        "fig13": lambda: fig13_optimizations.run(args.scale),
+        "fig02": lambda: fig02_repro_error.run(args.scale),
+        "dram": lambda: dram_types.run(args.scale),
+        "kernels": kernel_bench.run,
+    }
+
+    all_rows = []
+    print("name,us_per_call,derived")
+    for name, fn in suites.items():
+        if only and name not in only:
+            continue
+        t0 = time.perf_counter()
+        rows = fn()
+        wall = time.perf_counter() - t0
+        all_rows.extend(rows)
+        for r in rows:
+            if "us_per_call" in r:
+                print(f"{r['name']},{r['us_per_call']:.1f},"
+                      f"{r.get('derived', '')}")
+            else:
+                key = "-".join(str(r.get(k)) for k in
+                               ("dataset", "problem", "variant",
+                                "avg_degree", "dram", "system")
+                               if r.get(k) is not None)
+                val_us = r.get("wall_s", 0) * 1e6
+                derived = ";".join(
+                    f"{k}={round(v, 4) if isinstance(v, float) else v}"
+                    for k, v in r.items()
+                    if k not in ("bench", "wall_s") and v is not None)
+                print(f"{r['bench']}:{key},{val_us:.0f},{derived}")
+        print(f"# {name}: {len(rows)} rows in {wall:.1f}s",
+              file=sys.stderr)
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump(all_rows, f, indent=1, default=str)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

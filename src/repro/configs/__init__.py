@@ -1,0 +1,35 @@
+"""Assigned-architecture registry: ``get_config(arch, smoke=False)``.
+
+Each module exports ``CONFIG`` (the exact published configuration) and
+``SMOKE`` (a reduced same-family config for CPU tests).  Full configs are
+exercised only via the dry-run (ShapeDtypeStruct, no allocation).
+"""
+
+from __future__ import annotations
+
+import importlib
+from typing import List
+
+from repro.models.config import ModelConfig
+
+ARCHS: List[str] = [
+    "command_r_35b",
+    "qwen3_0_6b",
+    "gemma_2b",
+    "qwen3_1_7b",
+    "arctic_480b",
+    "llama4_scout_17b_a16e",
+    "hymba_1_5b",
+    "phi_3_vision_4_2b",
+    "whisper_tiny",
+    "xlstm_1_3b",
+]
+
+# CLI aliases (--arch command-r-35b etc.)
+ALIASES = {a.replace("_", "-"): a for a in ARCHS}
+
+
+def get_config(arch: str, smoke: bool = False) -> ModelConfig:
+    arch = arch.replace("-", "_").replace(".", "_")
+    mod = importlib.import_module(f"repro.configs.{arch}")
+    return mod.SMOKE if smoke else mod.CONFIG

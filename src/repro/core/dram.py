@@ -1,0 +1,295 @@
+"""DRAM device models: timing, organization, and address mapping.
+
+Faithful to the paper's setup (Sect. 2.2, Tab. 2):
+
+* HitGraph   -> DDR3, 4 channels, 2 ranks, speed grade 1600K, org 8Gb_x16
+* AccuGraph  -> DDR4, 1 channel, 1 rank, speed grade 2400R, org 4Gb_x16
+* Comparability -> DDR4, 1 channel, 1 rank, 2400R, 8Gb_x16
+* HBM2/HBM2E -> the paper's "future work" DRAM types, used by the TPU/HBM
+  adapter (``core/hbm_adapter.py``).
+
+All requests are modelled at cache-line (64 B) granularity: DDR3/DDR4 return
+64 B per request over 8 bursts (Sect. 2.2).  Timing parameters are expressed
+in *memory-controller clock cycles* of the given speed grade.
+
+The address mapping follows the paper's Fig. 5: a physical line address is
+split LSB-to-MSB according to a configurable component order; the default
+order ``("channel", "column", "rank", "bank", "row")`` interleaves
+subsequent lines over channels first (the paper's example scheme).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Sequence, Tuple
+
+import numpy as np
+
+CACHE_LINE_BYTES = 64
+
+AddressOrder = Tuple[str, ...]
+
+DEFAULT_ORDER: AddressOrder = ("channel", "column", "rank", "bank", "row")
+
+
+@dataclasses.dataclass(frozen=True)
+class DRAMTiming:
+    """Timing parameters in memory-clock cycles.
+
+    tCL   column (CAS) latency                  (row-buffer hit)
+    tRCD  RAS-to-CAS delay                      (activate -> column cmd)
+    tRP   precharge latency                     (row-buffer conflict)
+    tRAS  minimum time between ACT and PRE of the same bank; the paper's
+          "minimum latency between switching rows".
+    tBL   data-bus occupancy per request (burst length 8 at DDR -> 4 clocks)
+    tRRD  ACT-to-ACT, different banks, same rank
+    tFAW  four-activate window per rank — together with tRRD this is what
+          makes random (row-missing) streams degrade vs sequential ones,
+          the paper's central phenomenon [Dr07].
+    """
+
+    tCL: int
+    tRCD: int
+    tRP: int
+    tRAS: int
+    tBL: int
+    tRRD: int = 6
+    tFAW: int = 32
+
+
+@dataclasses.dataclass(frozen=True)
+class DRAMOrganization:
+    """Component counts of one memory *channel* (per Fig. 4)."""
+
+    ranks: int
+    banks: int            # banks per rank (bank groups folded in)
+    rows: int             # rows per bank
+    row_bytes: int        # bytes per row across the rank (columns x width)
+
+    @property
+    def lines_per_row(self) -> int:
+        return self.row_bytes // CACHE_LINE_BYTES
+
+
+@dataclasses.dataclass(frozen=True)
+class DRAMConfig:
+    """A complete device model: standard, speed, organization, addressing."""
+
+    name: str
+    standard: str                     # DDR3 | DDR4 | HBM2 | HBM2E
+    channels: int
+    timing: DRAMTiming
+    org: DRAMOrganization
+    clock_ghz: float                  # memory-controller clock
+    order: AddressOrder = DEFAULT_ORDER
+
+    # ---- derived ----------------------------------------------------
+    @property
+    def banks_total(self) -> int:
+        return self.channels * self.org.ranks * self.org.banks
+
+    @property
+    def banks_per_channel(self) -> int:
+        return self.org.ranks * self.org.banks
+
+    @property
+    def peak_gbps(self) -> float:
+        """Peak data bandwidth in GB/s over all channels."""
+        lines_per_cycle = 1.0 / self.timing.tBL
+        return (
+            self.channels * lines_per_cycle * CACHE_LINE_BYTES * self.clock_ghz
+        )
+
+    @property
+    def capacity_bytes(self) -> int:
+        return (
+            self.channels
+            * self.org.ranks
+            * self.org.banks
+            * self.org.rows
+            * self.org.row_bytes
+        )
+
+    def component_sizes(self) -> Dict[str, int]:
+        return {
+            "channel": self.channels,
+            "column": self.org.lines_per_row,
+            "rank": self.org.ranks,
+            "bank": self.org.banks,
+            "row": self.org.rows,
+        }
+
+    # ---- address mapping (Fig. 5) ------------------------------------
+    def decode_lines(self, line_addrs: np.ndarray) -> Dict[str, np.ndarray]:
+        """Split line addresses into DRAM components per the address order.
+
+        Returns a dict with ``channel``, ``rank``, ``bank``, ``row``,
+        ``column`` arrays plus ``bank_in_channel`` (rank*banks + bank) and
+        ``bank_global``.
+        """
+        rem = np.asarray(line_addrs, dtype=np.int64)
+        sizes = self.component_sizes()
+        comps: Dict[str, np.ndarray] = {}
+        for comp in self.order:
+            size = sizes[comp]
+            comps[comp] = rem % size
+            rem = rem // size
+        # Addresses beyond capacity wrap into higher rows (documented
+        # simplification; traces are expected to fit).
+        comps["row"] = comps["row"] + rem * 0
+        comps["bank_in_channel"] = (
+            comps["rank"] * self.org.banks + comps["bank"]
+        )
+        comps["bank_global"] = (
+            comps["channel"] * self.banks_per_channel
+            + comps["bank_in_channel"]
+        )
+        return comps
+
+    def bytes_to_lines(self, byte_addrs: np.ndarray) -> np.ndarray:
+        return np.asarray(byte_addrs, dtype=np.int64) // CACHE_LINE_BYTES
+
+
+# ---------------------------------------------------------------------------
+# Presets (Tab. 2 of the paper + HBM future-work configs)
+# ---------------------------------------------------------------------------
+
+def ddr3_1600k(channels: int = 4, ranks: int = 2) -> DRAMConfig:
+    """DDR3-1600K (11-11-11), 8Gb x16 devices, 64-bit channel.
+
+    Row size: 1024 columns x 16 bit x 4 devices = 8 KiB.
+    Clock 800 MHz (1600 MT/s).
+    """
+    return DRAMConfig(
+        name=f"DDR3_1600K_{channels}ch",
+        standard="DDR3",
+        channels=channels,
+        timing=DRAMTiming(tCL=11, tRCD=11, tRP=11, tRAS=28, tBL=4,
+                          tRRD=6, tFAW=40),
+        org=DRAMOrganization(ranks=ranks, banks=8, rows=65536, row_bytes=8192),
+        clock_ghz=0.8,
+    )
+
+
+def ddr4_2400r(channels: int = 1, ranks: int = 1,
+               density: str = "4Gb") -> DRAMConfig:
+    """DDR4-2400R (16-16-16), x16 devices, 64-bit channel.
+
+    4Gb_x16: 32768 rows/bank (AccuGraph); 8Gb_x16: 65536 (Comparability).
+    Clock 1200 MHz (2400 MT/s).  16 banks = 4 bank groups x 4 (folded).
+    """
+    rows = {"4Gb": 32768, "8Gb": 65536}[density]
+    return DRAMConfig(
+        name=f"DDR4_2400R_{density}_{channels}ch",
+        standard="DDR4",
+        channels=channels,
+        timing=DRAMTiming(tCL=16, tRCD=16, tRP=16, tRAS=32, tBL=4,
+                          tRRD=7, tFAW=36),
+        org=DRAMOrganization(ranks=ranks, banks=16, rows=rows, row_bytes=8192),
+        clock_ghz=1.2,
+    )
+
+
+def hbm2(channels: int = 8) -> DRAMConfig:
+    """HBM2, 8 legacy channels (128-bit each), 2 Gb/s per pin.
+
+    64 B = 4 beats on a 128-bit bus = 2 clocks at 1 GHz.  Per-channel row
+    size 2 KiB, 16 banks.  This is the paper's §7 "future work" DRAM type
+    and the base device model for the TPU HBM adapter.
+    """
+    return DRAMConfig(
+        name=f"HBM2_{channels}ch",
+        standard="HBM2",
+        channels=channels,
+        timing=DRAMTiming(tCL=14, tRCD=14, tRP=14, tRAS=34, tBL=2,
+                          tRRD=2, tFAW=16),
+        org=DRAMOrganization(ranks=1, banks=16, rows=16384, row_bytes=2048),
+        clock_ghz=1.0,
+    )
+
+
+def hbm2e(channels: int = 16) -> DRAMConfig:
+    """HBM2E-like stack: 16 pseudo-channels, 3.2 Gb/s/pin class.
+
+    Used to model one TPU-v5e-class HBM stack neighborhood (819 GB/s with
+    two stacks -> ~410 GB/s per stack; we expose channels so the adapter
+    can scale to the chip's aggregate).
+    """
+    return DRAMConfig(
+        name=f"HBM2E_{channels}ch",
+        standard="HBM2E",
+        channels=channels,
+        timing=DRAMTiming(tCL=18, tRCD=18, tRP=18, tRAS=42, tBL=2,
+                          tRRD=3, tFAW=20),
+        org=DRAMOrganization(ranks=1, banks=16, rows=32768, row_bytes=1024),
+        clock_ghz=1.6,
+    )
+
+
+PRESETS = {
+    "hitgraph": lambda: ddr3_1600k(channels=4, ranks=2),
+    "accugraph": lambda: ddr4_2400r(channels=1, ranks=1, density="4Gb"),
+    "comparability": lambda: ddr4_2400r(channels=1, ranks=1, density="8Gb"),
+    "hbm2": hbm2,
+    "hbm2e": hbm2e,
+}
+
+
+# ---------------------------------------------------------------------------
+# Memory layout helper: "data structures lie adjacent in memory as plain
+# arrays" (Sect. 3.1).
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class MemoryLayout:
+    """Sequential allocator of plain arrays, cache-line aligned."""
+
+    base: int = 0
+    _offsets: Dict[str, Tuple[int, int]] = dataclasses.field(
+        default_factory=dict
+    )
+    _cursor: int = 0
+
+    def __post_init__(self) -> None:
+        self._cursor = self.base
+
+    def allocate(self, name: str, nbytes: int) -> int:
+        """Allocate ``nbytes`` for array ``name``; returns byte offset."""
+        start = self._cursor
+        self._offsets[name] = (start, nbytes)
+        aligned = (nbytes + CACHE_LINE_BYTES - 1) // CACHE_LINE_BYTES
+        self._cursor = start + aligned * CACHE_LINE_BYTES
+        return start
+
+    def offset(self, name: str) -> int:
+        return self._offsets[name][0]
+
+    def nbytes(self, name: str) -> int:
+        return self._offsets[name][1]
+
+    def element_lines(
+        self, name: str, indices: np.ndarray, width_bytes: int
+    ) -> np.ndarray:
+        """Line addresses of elements ``indices`` of array ``name``."""
+        byte_addrs = self.offset(name) + (
+            np.asarray(indices, dtype=np.int64) * width_bytes
+        )
+        return byte_addrs // CACHE_LINE_BYTES
+
+    def sequential_lines(
+        self, name: str, count: int, width_bytes: int, start_elem: int = 0
+    ) -> np.ndarray:
+        """Unique line addresses touched by a sequential scan of ``count``
+        elements, i.e. after perfect cache-line buffering (Fig. 6e)."""
+        if count <= 0:
+            return np.empty(0, dtype=np.int64)
+        first = self.offset(name) + start_elem * width_bytes
+        last = self.offset(name) + (start_elem + count) * width_bytes - 1
+        return np.arange(
+            first // CACHE_LINE_BYTES, last // CACHE_LINE_BYTES + 1,
+            dtype=np.int64,
+        )
+
+    @property
+    def total_bytes(self) -> int:
+        return self._cursor - self.base

@@ -1,0 +1,262 @@
+"""HitGraph [Zh19] — edge-centric scatter/gather accelerator model.
+
+Faithful to paper Sect. 3.2 / Fig. 7:
+
+* p horizontal partitions (by source vertex), stored as dst-sorted edge
+  lists; partitions statically assigned to memory channels, one PE per
+  channel (4 channels, DDR3-1600K, 2 ranks, Tab. 2).
+* Per iteration: **scatter** (prefetch partition values -> read edges
+  rate-limited to 8 pipelines -> produce updates through a per-partition
+  crossbar + cache-line buffers into per-partition update queues), then a
+  phase barrier, then **gather** (prefetch values -> read update queues ->
+  semi-random value writes through a cache-line buffer).
+* Optimizations of the original system (all modelled): dst-sorted update
+  *merging* (u < n x p), active-bitmap update *filtering*, and partition
+  *skipping* (unchanged / no-update partitions).
+
+Vectorized realization: per-iteration statistics come from the JAX
+edge-centric engine; request streams are generated analytically with
+issue-cycle lower bounds (bulk prefetches, rate-limited edge/update reads,
+update/value writes spread over their producing window) and fed through
+the carried-state DRAM scan with an inter-phase barrier.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.algorithms import edge_centric
+from repro.algorithms.common import Problem, RunResult
+from repro.core.accel import SimReport, VectorizedDRAM
+from repro.core.dram import (CACHE_LINE_BYTES, DRAMConfig, MemoryLayout,
+                             ddr3_1600k)
+from repro.core.trace import Trace, bulk_issue, interleave_issue_ordered
+from repro.graphs.formats import Graph, partition_intervals
+
+CONTIGUOUS_ORDER = ("column", "rank", "bank", "row", "channel")
+
+
+@dataclasses.dataclass(frozen=True)
+class HitGraphConfig:
+    """Tab. 4 'HitGraph' row (reproducibility defaults)."""
+
+    n_pes: int = 4                    # == memory channels
+    pipelines: int = 8                # edges/cycle per PE
+    partition_elements: int = 256_000  # q
+    acc_ghz: float = 0.2
+    edge_bytes: int = 8               # 64 bit/edge (paper Sect. 4.2)
+    update_bytes: int = 8             # (dst, value)
+    value_bytes: int = 4              # 32-bit values (Tab. 3)
+    update_merging: bool = True
+    update_filtering: bool = True
+    partition_skipping: bool = True
+    dram: Optional[DRAMConfig] = None
+
+    def dram_config(self) -> DRAMConfig:
+        if self.dram is not None:
+            return self.dram
+        base = ddr3_1600k(channels=self.n_pes, ranks=2)
+        return dataclasses.replace(base, order=CONTIGUOUS_ORDER)
+
+
+def _spread(n: int, start: int, end: int) -> np.ndarray:
+    """Issue lower bounds spread uniformly over a producing window."""
+    if n == 0:
+        return np.empty(0, dtype=np.int64)
+    if n == 1 or end <= start:
+        return np.full(n, start, dtype=np.int64)
+    return (start + (np.arange(n, dtype=np.float64) * (end - start) / n)
+            ).astype(np.int64)
+
+
+def _line_span(byte_start: int, nbytes: int) -> np.ndarray:
+    """All lines of a sequential region (cache-line buffered)."""
+    if nbytes <= 0:
+        return np.empty(0, dtype=np.int64)
+    first = byte_start // CACHE_LINE_BYTES
+    last = (byte_start + nbytes - 1) // CACHE_LINE_BYTES
+    return np.arange(first, last + 1, dtype=np.int64)
+
+
+class HitGraphModel:
+    """Builds per-iteration traces and simulates them."""
+
+    def __init__(self, g: Graph, cfg: HitGraphConfig = HitGraphConfig()):
+        self.cfg = cfg
+        self.g = g.with_unit_weights() if g.weights is None else g
+        self.dram = cfg.dram_config()
+        q = cfg.partition_elements
+        self.q = q
+        self.intervals = partition_intervals(g.n, q)
+        self.p = len(self.intervals)
+        # dst-sorted edge order; per-edge partition ids
+        order = np.argsort(self.g.dst, kind="stable")
+        self.e_src = self.g.src[order]
+        self.e_dst = self.g.dst[order]
+        self.e_spart = self.e_src // q
+        self.e_dpart = self.e_dst // q
+        part_order = np.argsort(self.e_spart, kind="stable")
+        self.e_src = self.e_src[part_order]
+        self.e_dst = self.e_dst[part_order]
+        self.e_spart = self.e_spart[part_order]
+        self.e_dpart = self.e_dpart[part_order]
+        self.m_k = np.bincount(self.e_spart, minlength=self.p)
+        self.edge_key = self.e_spart * g.n + self.e_dst  # merge key
+        self._layout()
+
+    # ------------------------------------------------------------------
+    def _chan(self, k: int) -> int:
+        return k % self.cfg.n_pes
+
+    def _layout(self) -> None:
+        """Per-channel contiguous arrays (channel = MSBs of the address)."""
+        cfg, g = self.cfg, self.g
+        cap_ch = self.dram.capacity_bytes // self.dram.channels
+        self.layouts = [MemoryLayout(base=c * cap_ch)
+                        for c in range(self.dram.channels)]
+        self.val_base: List[int] = []
+        self.edge_base: List[int] = []
+        self.queue_base: List[int] = []
+        in_counts = np.bincount(self.e_dpart, minlength=self.p)
+        for k, (s, e) in enumerate(self.intervals):
+            lay = self.layouts[self._chan(k)]
+            n_k = e - s
+            self.val_base.append(
+                lay.allocate(f"values_{k}", n_k * cfg.value_bytes))
+            self.edge_base.append(
+                lay.allocate(f"edges_{k}",
+                             int(self.m_k[k]) * cfg.edge_bytes))
+            cap = int(min(in_counts[k], (n_k) * self.p)) + self.p
+            self.queue_base.append(
+                lay.allocate(f"queue_{k}", cap * cfg.update_bytes))
+        for lay in self.layouts:
+            if lay.total_bytes > cap_ch:
+                raise ValueError(
+                    "graph does not fit the per-channel capacity; use a "
+                    "scaled dataset instance")
+
+    # ------------------------------------------------------------------
+    def _iteration_pairs(self, active: np.ndarray):
+        """Merged updates per (src partition, dst): unique active pairs."""
+        sel = active[self.e_src]
+        if self.cfg.update_filtering:
+            keys = self.edge_key[sel]
+        else:
+            keys = self.edge_key
+        if self.cfg.update_merging:
+            keys = np.unique(keys)
+        else:
+            keys = np.sort(keys, kind="stable")
+        k_part = keys // self.g.n
+        dsts = keys % self.g.n
+        return k_part, dsts
+
+    def simulate(self, problem: Problem, root: int = 0,
+                 fixed_iters: Optional[int] = None,
+                 run: Optional[RunResult] = None) -> SimReport:
+        cfg = self.cfg
+        if run is None:
+            run = edge_centric.run(self.g, problem, root=root,
+                                   fixed_iters=fixed_iters)
+        dram = VectorizedDRAM(self.dram)
+        ratio = self.dram.clock_ghz / cfg.acc_ghz
+        vb, eb, ub = cfg.value_bytes, cfg.edge_bytes, cfg.update_bytes
+
+        for it, st in enumerate(run.per_iter):
+            active = (st.active_before if not problem.stationary
+                      else np.ones(self.g.n, dtype=bool))
+            kp, dsts = self._iteration_pairs(active)
+            dpart = dsts // self.q
+            # updates grouped by (src part k, dst part j)
+            u_count = np.zeros((self.p, self.p), dtype=np.int64)
+            np.add.at(u_count, (kp, dpart), 1)
+            q_off = np.zeros((self.p, self.p), dtype=np.int64)
+            q_off[1:] = np.cumsum(u_count, axis=0)[:-1]  # offset into queue j
+
+            # ---------------- scatter ---------------------------------
+            scatter_traces: List[Trace] = []
+            pe_cursor = np.zeros(cfg.n_pes, dtype=np.int64)
+            part_active = np.array(
+                [active[s:e].any() for (s, e) in self.intervals], dtype=bool)
+            for k, (s, e) in enumerate(self.intervals):
+                c = self._chan(k)
+                skip = (cfg.partition_skipping and not problem.stationary
+                        and not part_active[k])
+                if skip:
+                    continue
+                t0 = int(pe_cursor[c])
+                # 1. value prefetch (bulk, cache-line buffered)
+                pre = _line_span(self.val_base[k], (e - s) * vb)
+                scatter_traces.append(Trace(
+                    pre, np.zeros(len(pre), bool), bulk_issue(len(pre), t0)))
+                # 2. edge reads, rate-limited to `pipelines` edges/cycle
+                m_k = int(self.m_k[k])
+                elines = _line_span(self.edge_base[k], m_k * eb)
+                window = int(np.ceil(m_k / cfg.pipelines) * ratio)
+                scatter_traces.append(Trace(
+                    elines, np.zeros(len(elines), bool),
+                    _spread(len(elines), t0, t0 + window)))
+                # 3. update writes through the crossbar to each queue j
+                mask_k = kp == k
+                dpart_k = dpart[mask_k]
+                for j in np.unique(dpart_k):
+                    cnt = int(u_count[k, j])
+                    byte0 = (self.queue_base[j] + int(q_off[k, j]) * ub)
+                    qlines = _line_span(byte0, cnt * ub)
+                    scatter_traces.append(Trace(
+                        qlines, np.ones(len(qlines), bool),
+                        _spread(len(qlines), t0, t0 + window)))
+                pe_cursor[c] = t0 + max(window, 1)
+            dram.run_phase(interleave_issue_ordered(scatter_traces),
+                           f"it{it}_scatter")
+
+            # ---------------- gather ----------------------------------
+            gather_traces = []
+            pe_cursor[:] = 0
+            for j, (s, e) in enumerate(self.intervals):
+                c = self._chan(j)
+                U_j = int(u_count[:, j].sum())
+                if cfg.partition_skipping and U_j == 0:
+                    continue
+                t0 = int(pe_cursor[c])
+                pre = _line_span(self.val_base[j], (e - s) * vb)
+                gather_traces.append(Trace(
+                    pre, np.zeros(len(pre), bool), bulk_issue(len(pre), t0)))
+                qlines = _line_span(self.queue_base[j], U_j * ub)
+                window = int(np.ceil(U_j / cfg.pipelines) * ratio)
+                gather_traces.append(Trace(
+                    qlines, np.zeros(len(qlines), bool),
+                    _spread(len(qlines), t0, t0 + window)))
+                # semi-random value writes (changed only, line-buffered
+                # per dst-sorted queue region)
+                mask_j = dpart == j
+                wdst = dsts[mask_j]
+                wdst = wdst[st.changed[wdst]]
+                wlines = np.unique(
+                    (self.val_base[j] + (wdst - s) * vb) // CACHE_LINE_BYTES)
+                gather_traces.append(Trace(
+                    wlines, np.ones(len(wlines), bool),
+                    _spread(len(wlines), t0, t0 + window)))
+                pe_cursor[c] = t0 + max(window, 1)
+            dram.run_phase(interleave_issue_ordered(gather_traces),
+                           f"it{it}_gather")
+
+        total_bytes = sum(ph.bytes for ph in dram.phases)
+        return SimReport(
+            system="hitgraph", problem=problem.value, graph=self.g.name,
+            runtime_ns=dram.now / self.dram.clock_ghz,
+            iterations=run.iterations, edges=self.g.m, vertices=self.g.n,
+            total_requests=dram.total_requests, total_bytes=total_bytes,
+            row_hit_rate=(dram.total_row_hits / max(dram.total_requests, 1)),
+            phases=dram.phases,
+        )
+
+
+def simulate(g: Graph, problem: Problem,
+             cfg: HitGraphConfig = HitGraphConfig(), root: int = 0,
+             fixed_iters: Optional[int] = None) -> SimReport:
+    return HitGraphModel(g, cfg).simulate(problem, root=root,
+                                          fixed_iters=fixed_iters)

@@ -1,0 +1,208 @@
+"""Vectorized DRAM-timing model: ``lax.scan`` over per-channel streams.
+
+Implements exactly the semantics of :mod:`repro.core.timing` (bit-exact on
+integer cycles; property-tested) but as a JAX program:
+
+* channels are independent -> packed to a ``[C, L]`` batch and ``vmap``-ed,
+* each channel is an associative-state scan with carry
+  ``(open_row[B], act_time[B], bank_avail[B], bus_free)``.
+
+This is the TPU-native adaptation of the paper's hot loop: Ramulator ticks
+one cycle at a time; we exploit the same structural property Ramulator's
+state-machine tree encodes (banks evolve independently except for the
+shared data bus, which is a running max) to turn the event loop into a
+scan.  The Pallas kernel (``kernels/dram_timing``) fuses the same scan with
+VMEM-resident state; this module is its jnp oracle *and* the fast path on
+CPU.
+
+Cycle math is int32 (TPU-friendly): traces must satisfy
+``max_cycles < 2**31`` (asserted); large workloads are simulated in chunks
+with carried state.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.dram import DRAMConfig, CACHE_LINE_BYTES
+from repro.core import timing as timing_mod
+from repro.core.trace import Trace
+
+NEG_INF32 = -(1 << 30)
+
+
+@dataclasses.dataclass(frozen=True)
+class PackedChannels:
+    """Per-channel padded request streams + scatter metadata."""
+
+    issue: np.ndarray        # int32[C, L]
+    bank: np.ndarray         # int32[C, L]
+    row: np.ndarray          # int32[C, L]
+    valid: np.ndarray        # bool[C, L]
+    scatter_index: np.ndarray  # int64[C, L] -> position in original trace
+
+
+def pack_channels(trace: Trace, cfg: DRAMConfig) -> PackedChannels:
+    """Split a program-order trace into per-channel padded streams."""
+    comps = cfg.decode_lines(trace.line_addr)
+    ch = comps["channel"]
+    C = cfg.channels
+    counts = np.bincount(ch, minlength=C)
+    L = max(int(counts.max()) if len(trace) else 0, 1)
+    issue = np.zeros((C, L), dtype=np.int32)
+    bank = np.zeros((C, L), dtype=np.int32)
+    row = np.zeros((C, L), dtype=np.int32)
+    valid = np.zeros((C, L), dtype=bool)
+    scatter = np.zeros((C, L), dtype=np.int64)
+    if np.any(trace.issue < 0) or np.any(trace.issue >= 2**31 - 2**26):
+        raise ValueError("issue cycles out of int32 range; chunk the trace")
+    for c in range(C):
+        idx = np.nonzero(ch == c)[0]
+        n = len(idx)
+        issue[c, :n] = trace.issue[idx]
+        bank[c, :n] = comps["bank_in_channel"][idx]
+        row[c, :n] = comps["row"][idx]
+        valid[c, :n] = True
+        scatter[c, :n] = idx
+    return PackedChannels(issue, bank, row, valid, scatter)
+
+
+def init_channel_carry(n_banks: int, banks_per_rank: int):
+    """Initial scan carry for one channel (exposed for phase chaining)."""
+    n_ranks = n_banks // banks_per_rank
+    return (
+        jnp.full((n_banks,), -1, dtype=jnp.int32),         # open_row
+        jnp.full((n_banks,), NEG_INF32, dtype=jnp.int32),  # act_time
+        jnp.zeros((n_banks,), dtype=jnp.int32),            # bank_avail
+        jnp.zeros((), dtype=jnp.int32),                    # bus_free
+        jnp.full((n_ranks, 4), NEG_INF32, dtype=jnp.int32),  # act_hist
+        jnp.zeros((n_ranks,), dtype=jnp.int32),            # act_ptr
+        jnp.full((n_ranks,), NEG_INF32, dtype=jnp.int32),  # last_act_rank
+    )
+
+
+def _channel_scan(
+    issue: jnp.ndarray, bank: jnp.ndarray, row: jnp.ndarray,
+    valid: jnp.ndarray, n_banks: int, banks_per_rank: int,
+    tCL: int, tRCD: int, tRP: int, tRAS: int, tBL: int,
+    tRRD: int, tFAW: int,
+    carry=None,
+):
+    """Scan one channel's stream. Returns (finish[L], kind[L], carry)."""
+    if carry is None:
+        carry = init_channel_carry(n_banks, banks_per_rank)
+
+    def step(state, x):
+        (open_row, act_time, bank_avail, bus_free,
+         act_hist, act_ptr, last_act_rank) = state
+        iss, b, r, v = x
+        rank = b // banks_per_rank
+        o = open_row[b]
+        av = bank_avail[b]
+        at = act_time[b]
+        hit = o == r
+        empty = o == -1
+        base = jnp.maximum(iss, av)
+        # ACT rate limits per rank (tRRD, tFAW over the 4th-last ACT)
+        ptr = act_ptr[rank]
+        act_floor = jnp.maximum(last_act_rank[rank] + tRRD,
+                                act_hist[rank, ptr] + tFAW)
+        act = jnp.where(
+            empty,
+            jnp.maximum(base, act_floor),
+            jnp.maximum(jnp.maximum(base, at + tRAS) + tRP, act_floor),
+        )
+        col = jnp.where(hit, base, act + tRCD)
+        finish = jnp.maximum(col + tCL, bus_free) + tBL
+        kind = jnp.where(hit, 0, jnp.where(empty, 1, 2)).astype(jnp.int8)
+        did_act = jnp.logical_not(hit)
+        new_state = (
+            open_row.at[b].set(jnp.where(hit, o, r)),
+            act_time.at[b].set(jnp.where(hit, at, act)),
+            bank_avail.at[b].set(col + tBL),
+            finish,
+            act_hist.at[rank, ptr].set(
+                jnp.where(did_act, act, act_hist[rank, ptr])),
+            act_ptr.at[rank].set(
+                jnp.where(did_act, (ptr + 1) % 4, ptr)),
+            last_act_rank.at[rank].set(
+                jnp.where(did_act, act, last_act_rank[rank])),
+        )
+        state = jax.tree.map(
+            lambda new, old: jnp.where(v, new, old), new_state, state
+        )
+        out = (jnp.where(v, finish, jnp.int32(0)),
+               jnp.where(v, kind, jnp.int8(-1)))
+        return state, out
+
+    carry, (finish, kind) = jax.lax.scan(
+        step, carry, (issue, bank, row, valid)
+    )
+    return finish, kind, carry
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "n_banks", "banks_per_rank", "tCL", "tRCD", "tRP", "tRAS", "tBL",
+    "tRRD", "tFAW"))
+def _simulate_packed(issue, bank, row, valid, n_banks, banks_per_rank,
+                     tCL, tRCD, tRP, tRAS, tBL, tRRD, tFAW, carry=None):
+    fn = functools.partial(
+        _channel_scan, n_banks=n_banks, banks_per_rank=banks_per_rank,
+        tCL=tCL, tRCD=tRCD, tRP=tRP, tRAS=tRAS, tBL=tBL, tRRD=tRRD,
+        tFAW=tFAW,
+    )
+    if carry is None:
+        finish, kind, carry = jax.vmap(
+            lambda i, b, r, v: fn(i, b, r, v))(issue, bank, row, valid)
+    else:
+        finish, kind, carry = jax.vmap(
+            lambda i, b, r, v, c: fn(i, b, r, v, carry=c))(
+                issue, bank, row, valid, carry)
+    return finish, kind, carry
+
+
+def simulate_trace_jax(
+    trace: Trace, cfg: DRAMConfig, keep_finish: bool = False,
+) -> timing_mod.TraceResult:
+    """Drop-in replacement for :func:`repro.core.timing.simulate_trace`."""
+    if len(trace) == 0:
+        return timing_mod.simulate_trace(trace.line_addr, trace.issue, cfg)
+    packed = pack_channels(trace, cfg)
+    t = cfg.timing
+    finish, kind, _ = _simulate_packed(
+        jnp.asarray(packed.issue), jnp.asarray(packed.bank),
+        jnp.asarray(packed.row), jnp.asarray(packed.valid),
+        cfg.banks_per_channel, cfg.org.banks,
+        t.tCL, t.tRCD, t.tRP, t.tRAS, t.tBL, t.tRRD, t.tFAW,
+    )
+    finish = np.asarray(finish)
+    kind = np.asarray(kind)
+    v = packed.valid
+    finish_flat = np.zeros(len(trace), dtype=np.int64)
+    finish_flat[packed.scatter_index[v]] = finish[v]
+    cycles = int(finish_flat.max())
+    ns = cycles / cfg.clock_ghz
+    total_bytes = len(trace) * CACHE_LINE_BYTES
+    per_channel = {
+        c: (int(finish[c][v[c]].max()) if v[c].any() else 0)
+        for c in range(cfg.channels)
+    }
+    return timing_mod.TraceResult(
+        cycles=cycles,
+        ns=ns,
+        total_requests=len(trace),
+        total_bytes=total_bytes,
+        row_hits=int((kind == 0).sum()),
+        row_empty=int((kind == 1).sum()),
+        row_conflicts=int((kind == 2).sum()),
+        achieved_gbps=(total_bytes / ns) if ns > 0 else 0.0,
+        peak_gbps=cfg.peak_gbps,
+        per_channel_cycles=per_channel,
+        finish=finish_flat if keep_finish else None,
+    )

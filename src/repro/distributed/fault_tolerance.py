@@ -1,0 +1,115 @@
+"""Fault-tolerance runbook utilities: elastic rescale + straggler policy.
+
+At 1000+ nodes the failure model is: (a) node loss -> restart from the
+latest checkpoint on a *smaller or different* mesh, (b) stragglers ->
+deterministic data sharding lets any worker be replaced without data
+skew, (c) preemption mid-save -> atomic checkpoint commit (see
+``checkpoint.py``).
+
+``ElasticTrainer`` packages the loop: it owns the CheckpointManager,
+knows how to rebuild mesh + shardings for the currently-available device
+count, and resumes the data pipeline purely from the step counter
+(``train/data.py`` is a pure function of (seed, step, shard)).
+
+``StragglerMonitor`` implements the standard detect-and-mitigate policy:
+per-step wall-time EWMA; a step exceeding ``threshold x`` the EWMA is
+recorded, and the policy hook decides (log | re-dispatch | drop-node) —
+on a single host this degrades to bookkeeping, but the interface is the
+one the launcher wires to real health signals.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.distributed import checkpoint as ckpt
+from repro.distributed import sharding as shd
+
+
+@dataclasses.dataclass
+class StragglerEvent:
+    step: int
+    duration: float
+    ewma: float
+
+
+class StragglerMonitor:
+    def __init__(self, threshold: float = 3.0, alpha: float = 0.1,
+                 on_straggler: Optional[Callable[[StragglerEvent], None]]
+                 = None):
+        self.threshold = threshold
+        self.alpha = alpha
+        self.ewma: Optional[float] = None
+        self.events: List[StragglerEvent] = []
+        self.on_straggler = on_straggler
+
+    def observe(self, step: int, duration: float) -> bool:
+        is_straggler = (self.ewma is not None
+                        and duration > self.threshold * self.ewma)
+        if is_straggler:
+            ev = StragglerEvent(step, duration, self.ewma)
+            self.events.append(ev)
+            if self.on_straggler:
+                self.on_straggler(ev)
+            # do not poison the EWMA with the outlier
+        else:
+            self.ewma = (duration if self.ewma is None
+                         else (1 - self.alpha) * self.ewma
+                         + self.alpha * duration)
+        return is_straggler
+
+
+class ElasticTrainer:
+    """Checkpoint/restart + elastic-mesh resume driver.
+
+    ``build_state(mesh)`` -> (params, opt_state) for a fresh start;
+    ``make_step(mesh)`` -> jitted step.  On ``resume`` the manager loads
+    the latest checkpoint and device_puts it under the *current* mesh's
+    shardings — N -> N' rescale is transparent because checkpoints store
+    full (unsharded) arrays and the data pipeline is step-addressed.
+    """
+
+    def __init__(self, ckpt_dir: str, build_state, make_step,
+                 mesh_builder, save_every: int = 50, keep: int = 3):
+        self.manager = ckpt.CheckpointManager(ckpt_dir, keep=keep)
+        self.build_state = build_state
+        self.make_step = make_step
+        self.mesh_builder = mesh_builder
+        self.save_every = save_every
+        self.monitor = StragglerMonitor()
+
+    def resume_or_init(self, shardings=None):
+        mesh = self.mesh_builder()
+        params, opt_state = self.build_state(mesh)
+        restored, step = self.manager.restore_latest(
+            (params, opt_state), shardings)
+        if restored is not None:
+            params, opt_state = restored
+            start = step
+        else:
+            start = 0
+        return mesh, params, opt_state, start
+
+    def run(self, params, opt_state, batches, n_steps: int,
+            start_step: int = 0, log_every: int = 10,
+            log: Callable[[str], None] = print):
+        step_fn = self.make_step()
+        losses = []
+        for step in range(start_step, start_step + n_steps):
+            batch = next(batches)
+            t0 = time.perf_counter()
+            loss, params, opt_state = step_fn(params, opt_state, batch)
+            loss = float(loss)
+            dt = time.perf_counter() - t0
+            self.monitor.observe(step, dt)
+            losses.append(loss)
+            if step % log_every == 0:
+                log(f"step {step}: loss={loss:.4f} ({dt*1e3:.0f} ms)")
+            if (step + 1) % self.save_every == 0:
+                self.manager.save((params, opt_state), step + 1)
+        return params, opt_state, losses

@@ -1,0 +1,101 @@
+"""Synthetic graph generators.
+
+RMAT graphs are regenerated faithfully from their published parameters
+(the paper's rmat-24-16 / rmat-21-86 are themselves synthetic).  The SNAP
+graphs used by HitGraph/AccuGraph cannot be downloaded in this container;
+``degree_matched`` builds stand-ins matching (n, m, degree skew), and
+``grid_road`` matches the high-diameter/constant-degree regime of
+roadnet-ca.  All generators are seeded and deterministic.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.graphs.formats import Graph
+
+GRAPH500_ABCD = (0.57, 0.19, 0.19, 0.05)
+
+
+def rmat(
+    scale: int,
+    avg_degree: int,
+    seed: int = 0,
+    abcd=GRAPH500_ABCD,
+    name: str | None = None,
+    permute: bool = True,
+) -> Graph:
+    """R-MAT generator (Graph500 parameters by default).
+
+    ``n = 2**scale`` vertices, ``m = n * avg_degree`` edges, bit-recursive
+    quadrant sampling, vectorized over all edges at once.  ``permute``
+    applies the standard Graph500 vertex-label shuffle — without it the
+    recursive construction leaves heavily biased low id bits (33% of ids
+    ≡ 0 mod 16), an artifact real benchmark graphs do not have.
+    """
+    rng = np.random.default_rng(seed)
+    n = 1 << scale
+    m = n * avg_degree
+    a, b, c, d = abcd
+    src = np.zeros(m, dtype=np.int64)
+    dst = np.zeros(m, dtype=np.int64)
+    for bit in range(scale):
+        r = rng.random(m)
+        # quadrant: 0 -> (0,0), 1 -> (0,1), 2 -> (1,0), 3 -> (1,1)
+        quad = np.where(
+            r < a, 0, np.where(r < a + b, 1, np.where(r < a + b + c, 2, 3))
+        )
+        src = (src << 1) | (quad >> 1)
+        dst = (dst << 1) | (quad & 1)
+    if permute:
+        perm = rng.permutation(n)
+        src, dst = perm[src], perm[dst]
+    return Graph(n, src, dst, name=name or f"rmat-{scale}-{avg_degree}")
+
+
+def uniform_random(n: int, m: int, seed: int = 0,
+                   name: str = "uniform") -> Graph:
+    rng = np.random.default_rng(seed)
+    return Graph(n, rng.integers(0, n, m), rng.integers(0, n, m), name=name)
+
+
+def degree_matched(
+    n: int, m: int, skew: float = 1.0, seed: int = 0, name: str = "matched",
+) -> Graph:
+    """Power-law-ish stand-in: sample endpoints ~ Zipf(skew) over a random
+    permutation of vertex ids.  ``skew``≈0 -> uniform; larger -> heavier
+    hubs (social-network-like)."""
+    rng = np.random.default_rng(seed)
+    if skew <= 0.01:
+        return uniform_random(n, m, seed, name)
+    # inverse-CDF sampling of a truncated zipf
+    ranks = np.arange(1, n + 1, dtype=np.float64)
+    probs = ranks ** (-skew)
+    probs /= probs.sum()
+    cdf = np.cumsum(probs)
+    perm = rng.permutation(n)
+    src = perm[np.searchsorted(cdf, rng.random(m))]
+    dst = perm[np.searchsorted(cdf, rng.random(m))]
+    return Graph(n, src, dst, name=name)
+
+
+def grid_road(side: int, seed: int = 0, name: str = "grid") -> Graph:
+    """2-D grid with 4-neighborhood: high diameter, avg degree ~2-3,
+    roadnet-ca-like (paper: 'high diameter, constant degree graphs')."""
+    n = side * side
+    idx = np.arange(n).reshape(side, side)
+    right_s = idx[:, :-1].ravel()
+    right_d = idx[:, 1:].ravel()
+    down_s = idx[:-1, :].ravel()
+    down_d = idx[1:, :].ravel()
+    src = np.concatenate([right_s, down_s])
+    dst = np.concatenate([right_d, down_d])
+    # roadnet-ca is (treated as) undirected in the originals
+    return Graph(n, np.concatenate([src, dst]),
+                 np.concatenate([dst, src]), directed=False, name=name)
+
+
+def chain(n: int, name: str = "chain") -> Graph:
+    """Path graph — worst-case diameter; used by property tests."""
+    src = np.arange(n - 1, dtype=np.int64)
+    return Graph(n, src, src + 1, name=name)

@@ -1,0 +1,135 @@
+"""Pallas TPU kernel for the DRAM-timing scan (the paper's hot loop).
+
+Grid = (channels, trace_chunks): channels are independent bank-state
+machines (the property Ramulator's state-machine tree encodes) and map to
+parallel grid rows; the trace dimension is walked sequentially with the
+bank/rank state resident in VMEM scratch — the TPU analogue of the FPGA
+keeping controller state in registers/BRAM.
+
+BlockSpec tiling: each step loads a ``(1, chunk)`` tile of the four trace
+arrays into VMEM (4 x chunk x 4 B; chunk=512 -> 8 KiB working set, far
+under the ~16 MiB VMEM budget, leaving room for the double-buffered next
+tile).  The inner ``fori_loop`` is sequential by nature (bank state is a
+loop-carried dependency); throughput comes from the channel grid dimension
+— exactly how the timing model parallelizes on real DRAM too.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF32 = -(1 << 30)
+
+
+def _kernel(issue_ref, bank_ref, row_ref, valid_ref,
+            finish_ref, kind_ref,
+            open_row, act_time, bank_avail, bus_free,
+            act_hist, act_ptr, last_act,
+            *, chunk: int, n_banks: int, banks_per_rank: int,
+            tCL: int, tRCD: int, tRP: int, tRAS: int, tBL: int,
+            tRRD: int, tFAW: int):
+    t_idx = pl.program_id(1)
+
+    @pl.when(t_idx == 0)
+    def _init():
+        open_row[...] = jnp.full_like(open_row[...], -1)
+        act_time[...] = jnp.full_like(act_time[...], NEG_INF32)
+        bank_avail[...] = jnp.zeros_like(bank_avail[...])
+        bus_free[...] = jnp.zeros_like(bus_free[...])
+        act_hist[...] = jnp.full_like(act_hist[...], NEG_INF32)
+        act_ptr[...] = jnp.zeros_like(act_ptr[...])
+        last_act[...] = jnp.full_like(last_act[...], NEG_INF32)
+
+    def body(j, _):
+        b = bank_ref[0, j]
+        r = row_ref[0, j]
+        iss = issue_ref[0, j]
+        v = valid_ref[0, j]
+        rank = b // banks_per_rank
+
+        o = pl.load(open_row, (b,))
+        at = pl.load(act_time, (b,))
+        av = pl.load(bank_avail, (b,))
+        bf = bus_free[0]
+        ptr = pl.load(act_ptr, (rank,))
+        la = pl.load(last_act, (rank,))
+        oldest = pl.load(act_hist, (rank, ptr))
+
+        hit = o == r
+        empty = o == -1
+        base = jnp.maximum(iss, av)
+        act_floor = jnp.maximum(la + tRRD, oldest + tFAW)
+        act = jnp.where(
+            empty,
+            jnp.maximum(base, act_floor),
+            jnp.maximum(jnp.maximum(base, at + tRAS) + tRP, act_floor),
+        )
+        col = jnp.where(hit, base, act + tRCD)
+        finish = jnp.maximum(col + tCL, bf) + tBL
+        kind = jnp.where(hit, 0, jnp.where(empty, 1, 2)).astype(jnp.int32)
+        did_act = jnp.logical_and(jnp.logical_not(hit), v)
+
+        upd = jnp.logical_and(v, True)
+        pl.store(open_row, (b,), jnp.where(upd & ~hit, r, o))
+        pl.store(act_time, (b,), jnp.where(did_act, act, at))
+        pl.store(bank_avail, (b,), jnp.where(upd, col + tBL, av))
+        bus_free[0] = jnp.where(upd, finish, bf)
+        pl.store(act_hist, (rank, ptr),
+                 jnp.where(did_act, act, oldest))
+        pl.store(act_ptr, (rank,),
+                 jnp.where(did_act, (ptr + 1) % 4, ptr))
+        pl.store(last_act, (rank,), jnp.where(did_act, act, la))
+
+        finish_ref[0, j] = jnp.where(v, finish, 0)
+        kind_ref[0, j] = jnp.where(v, kind, -1)
+        return 0
+
+    jax.lax.fori_loop(0, chunk, body, 0)
+
+
+def dram_timing_kernel(
+    issue: jnp.ndarray, bank: jnp.ndarray, row: jnp.ndarray,
+    valid: jnp.ndarray, *, n_banks: int, banks_per_rank: int,
+    tCL: int, tRCD: int, tRP: int, tRAS: int, tBL: int,
+    tRRD: int, tFAW: int, chunk: int = 512, interpret: bool = True,
+):
+    """Run the timing scan over ``[C, L]`` per-channel padded streams.
+
+    L must be a multiple of ``chunk``.  Returns (finish, kind) int32[C, L].
+    """
+    C, L = issue.shape
+    assert L % chunk == 0, (L, chunk)
+    n_ranks = max(n_banks // banks_per_rank, 1)
+    grid = (C, L // chunk)
+    spec = pl.BlockSpec((1, chunk), lambda c, t: (c, t))
+    kern = functools.partial(
+        _kernel, chunk=chunk, n_banks=n_banks,
+        banks_per_rank=banks_per_rank, tCL=tCL, tRCD=tRCD, tRP=tRP,
+        tRAS=tRAS, tBL=tBL, tRRD=tRRD, tFAW=tFAW,
+    )
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[spec, spec, spec, spec],
+        out_specs=[spec, spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((C, L), jnp.int32),
+            jax.ShapeDtypeStruct((C, L), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((n_banks,), jnp.int32),      # open_row
+            pltpu.VMEM((n_banks,), jnp.int32),      # act_time
+            pltpu.VMEM((n_banks,), jnp.int32),      # bank_avail
+            pltpu.VMEM((1,), jnp.int32),            # bus_free
+            pltpu.VMEM((n_ranks, 4), jnp.int32),    # act_hist
+            pltpu.VMEM((n_ranks,), jnp.int32),      # act_ptr
+            pltpu.VMEM((n_ranks,), jnp.int32),      # last_act
+        ],
+        interpret=interpret,
+    )(issue.astype(jnp.int32), bank.astype(jnp.int32),
+      row.astype(jnp.int32), valid.astype(jnp.int32))

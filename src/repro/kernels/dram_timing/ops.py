@@ -1,0 +1,55 @@
+"""Jitted public wrapper for the dram_timing Pallas kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.dram import DRAMConfig
+from repro.core.trace import Trace
+from repro.core.vectorized import pack_channels
+from repro.kernels.dram_timing.kernel import dram_timing_kernel
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_banks", "banks_per_rank", "tCL", "tRCD", "tRP",
+                     "tRAS", "tBL", "tRRD", "tFAW", "chunk", "interpret"))
+def dram_timing(issue, bank, row, valid, *, n_banks, banks_per_rank,
+                tCL, tRCD, tRP, tRAS, tBL, tRRD, tFAW, chunk=512,
+                interpret=True):
+    return dram_timing_kernel(
+        issue, bank, row, valid, n_banks=n_banks,
+        banks_per_rank=banks_per_rank, tCL=tCL, tRCD=tRCD, tRP=tRP,
+        tRAS=tRAS, tBL=tBL, tRRD=tRRD, tFAW=tFAW, chunk=chunk,
+        interpret=interpret,
+    )
+
+
+def simulate_trace_kernel(trace: Trace, cfg: DRAMConfig,
+                          chunk: int = 512, interpret: bool = True):
+    """End-to-end: Trace -> per-channel pack -> kernel -> makespan."""
+    packed = pack_channels(trace, cfg)
+    C, L = packed.issue.shape
+    Lp = int(np.ceil(L / chunk)) * chunk
+    pad = Lp - L
+
+    def _pad(a, fill=0):
+        return np.pad(a, ((0, 0), (0, pad)), constant_values=fill)
+
+    t = cfg.timing
+    finish, kind = dram_timing(
+        jnp.asarray(_pad(packed.issue)), jnp.asarray(_pad(packed.bank)),
+        jnp.asarray(_pad(packed.row)), jnp.asarray(_pad(packed.valid)),
+        n_banks=cfg.banks_per_channel, banks_per_rank=cfg.org.banks,
+        tCL=t.tCL, tRCD=t.tRCD, tRP=t.tRP, tRAS=t.tRAS, tBL=t.tBL,
+        tRRD=t.tRRD, tFAW=t.tFAW, chunk=chunk, interpret=interpret,
+    )
+    finish = np.asarray(finish)[:, :L]
+    kind = np.asarray(kind)[:, :L]
+    valid = packed.valid
+    makespan = int(finish[valid].max()) if valid.any() else 0
+    return finish, kind, makespan

@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the dram_timing kernel: the lax.scan model from
+``core/vectorized`` (itself bit-exact against the python-loop semantics
+in ``core/timing`` — see tests/test_dram_timing.py)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import vectorized as vec
+
+
+def dram_timing_ref(issue, bank, row, valid, *, n_banks, banks_per_rank,
+                    tCL, tRCD, tRP, tRAS, tBL, tRRD, tFAW):
+    finish, kind, _ = vec._simulate_packed(
+        jnp.asarray(issue, jnp.int32), jnp.asarray(bank, jnp.int32),
+        jnp.asarray(row, jnp.int32), jnp.asarray(valid, bool),
+        n_banks, banks_per_rank, tCL, tRCD, tRP, tRAS, tBL, tRRD, tFAW,
+    )
+    return finish.astype(jnp.int32), kind.astype(jnp.int32)

@@ -1,0 +1,89 @@
+"""HitGraph's scatter phase as a Pallas kernel: BRAM -> VMEM adaptation.
+
+HitGraph keeps the current partition's vertex values in BRAM and streams
+edges past them, producing one update per (active) edge.  On TPU the
+partition values live in VMEM and the gather ``values[src]`` is expressed
+as a blocked one-hot matmul on the MXU (dynamic vector gathers do not map
+to the systolic array; one-hot contraction does — DESIGN.md §2).
+
+Grid = (edge_blocks, vertex_blocks): the vertex dimension is innermost;
+each edge block accumulates its gathered value across vertex tiles.
+Updates: ``upd = gather(values, src) (+ w | * w)``, masked by the active
+bitmap (HitGraph's update filtering) via the same one-hot contraction.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(src_ref, w_ref, vals_ref, act_ref, upd_ref, valid_ref,
+            *, op: str, be: int, bq: int):
+    q_idx = pl.program_id(1)
+
+    @pl.when(q_idx == 0)
+    def _init():
+        upd_ref[...] = jnp.zeros_like(upd_ref[...])
+        valid_ref[...] = jnp.zeros_like(valid_ref[...])
+
+    src = src_ref[...].reshape(be)
+    vals = vals_ref[...].reshape(bq)
+    act = act_ref[...].reshape(bq)
+    v0 = q_idx * bq
+    onehot = ((src[:, None] - v0) == jax.lax.broadcasted_iota(
+        jnp.int32, (be, bq), 1)).astype(vals.dtype)
+    gathered = jax.lax.dot_general(
+        onehot, vals[:, None], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ).reshape(be)
+    active = jax.lax.dot_general(
+        onehot, act[:, None].astype(vals.dtype),
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ).reshape(be)
+    upd_ref[...] += gathered.astype(upd_ref.dtype).reshape(be, 1)
+    valid_ref[...] += active.astype(valid_ref.dtype).reshape(be, 1)
+
+    # epilogue on the last vertex tile: apply the edge function
+    @pl.when(q_idx == pl.num_programs(1) - 1)
+    def _finish():
+        w = w_ref[...].reshape(be)
+        u = upd_ref[...].reshape(be)
+        if op == "add":
+            u = u + w
+        elif op == "mul":
+            u = u * w
+        upd_ref[...] = u.reshape(be, 1)
+
+
+def edge_scatter_kernel(src, weights, values, active, *, op: str = "copy",
+                        be: int = 128, bq: int = 128,
+                        interpret: bool = True):
+    """src int32[m] (vertex ids), weights [m], values [q], active [q]
+    -> (updates [m], valid [m]): updates = f(values[src], w),
+    valid = active[src]."""
+    m, = src.shape
+    q, = values.shape
+    assert m % be == 0 and q % bq == 0
+    grid = (m // be, q // bq)
+    kern = functools.partial(_kernel, op=op, be=be, bq=bq)
+    espec = pl.BlockSpec((be, 1), lambda e, qi: (e, 0))
+    vspec = pl.BlockSpec((bq, 1), lambda e, qi: (qi, 0))
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[espec, espec, vspec, vspec],
+        out_specs=[espec, espec],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, 1), values.dtype),
+            jax.ShapeDtypeStruct((m, 1), values.dtype),
+        ],
+        interpret=interpret,
+    )(src.astype(jnp.int32).reshape(m, 1),
+      weights.astype(values.dtype).reshape(m, 1),
+      values.reshape(q, 1),
+      active.astype(values.dtype).reshape(q, 1))

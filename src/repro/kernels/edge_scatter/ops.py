@@ -1,0 +1,36 @@
+"""Jitted wrapper for edge_scatter with shape padding."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.edge_scatter.kernel import edge_scatter_kernel
+
+
+@functools.partial(jax.jit, static_argnames=("op", "be", "bq", "interpret"))
+def _call(src, weights, values, active, op, be, bq, interpret):
+    return edge_scatter_kernel(src, weights, values, active, op=op, be=be,
+                               bq=bq, interpret=interpret)
+
+
+def edge_scatter(src, weights, values, active, op: str = "copy",
+                 be: int = 128, bq: int = 128, interpret: bool = True):
+    src = jnp.asarray(src, jnp.int32)
+    weights = jnp.asarray(weights)
+    values = jnp.asarray(values)
+    active = jnp.asarray(active)
+    m, q = len(src), len(values)
+    mp = int(np.ceil(max(m, 1) / be)) * be
+    qp = int(np.ceil(max(q, 1) / bq)) * bq
+    if mp != m:
+        src = jnp.pad(src, (0, mp - m), constant_values=qp + 1)
+        weights = jnp.pad(weights, (0, mp - m))
+    if qp != q:
+        values = jnp.pad(values, (0, qp - q))
+        active = jnp.pad(active, (0, qp - q))
+    upd, valid = _call(src, weights, values, active, op, be, bq, interpret)
+    return upd[:m, 0], valid[:m, 0]

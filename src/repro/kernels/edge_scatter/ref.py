@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for edge_scatter."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def edge_scatter_ref(src, weights, values, active, op: str = "copy"):
+    src = jnp.asarray(src, jnp.int32)
+    g = values[src]
+    if op == "add":
+        upd = g + weights.astype(values.dtype)
+    elif op == "mul":
+        upd = g * weights.astype(values.dtype)
+    else:
+        upd = g
+    return upd, active.astype(values.dtype)[src]

@@ -1,0 +1,82 @@
+"""Blocked segment-reduce Pallas kernel (AccuGraph's accumulator on TPU).
+
+AccuGraph's FPGA contribution is a parallel accumulator that merges many
+updates per cycle in LUT logic.  The TPU-idiomatic equivalent resolves the
+write conflicts on the MXU: a block of updates ``values[bm, d]`` with
+segment ids is reduced into ``out[bn, d]`` as ``one_hot(ids)^T @ values``
+— the systolic array performs the conflict resolution that AccuGraph's
+accumulator tree performs in LUTs (DESIGN.md §2).
+
+* ``sum``: one-hot matmul, MXU-aligned (bm, bn multiples of 128 on TPU).
+* ``min``/``max``: masked reduce on the VPU (d is kept small — graph
+  values are scalar; the (bm, bn, d) mask intermediate stays in VMEM).
+
+Grid = (segments/bn, m/bm); the m dimension is innermost so each output
+block accumulates across update blocks in VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_INIT = {"sum": 0.0, "min": jnp.inf, "max": -jnp.inf}
+
+
+def _kernel(ids_ref, vals_ref, out_ref, *, op: str, bn: int, bm: int):
+    n_idx = pl.program_id(0)
+    m_idx = pl.program_id(1)
+
+    @pl.when(m_idx == 0)
+    def _init():
+        out_ref[...] = jnp.full_like(out_ref[...], _INIT[op])
+
+    ids = ids_ref[...].reshape(bm)                    # (bm,)
+    vals = vals_ref[...]                              # (bm, d)
+    seg0 = n_idx * bn
+    local = ids - seg0
+    onehot = (local[:, None] == jax.lax.broadcasted_iota(
+        jnp.int32, (bm, bn), 1))
+    if op == "sum":
+        contrib = jax.lax.dot_general(
+            onehot.astype(vals.dtype), vals,
+            (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )                                             # (bn, d)
+        out_ref[...] += contrib.astype(out_ref.dtype)
+    else:
+        big = jnp.asarray(_INIT[op], vals.dtype)
+        masked = jnp.where(onehot[:, :, None], vals[:, None, :], big)
+        red = masked.min(axis=0) if op == "min" else masked.max(axis=0)
+        if op == "min":
+            out_ref[...] = jnp.minimum(out_ref[...], red)
+        else:
+            out_ref[...] = jnp.maximum(out_ref[...], red)
+
+
+def segment_reduce_kernel(ids, values, num_segments: int, *, op: str = "sum",
+                          bn: int = 128, bm: int = 128,
+                          interpret: bool = True):
+    """ids int32[m], values [m, d] -> out [num_segments, d].
+
+    m % bm == 0 and num_segments % bn == 0 (ops.py pads); out-of-range ids
+    (padding) simply match no one-hot column.
+    """
+    m, d = values.shape
+    assert m % bm == 0 and num_segments % bn == 0
+    grid = (num_segments // bn, m // bm)
+    kern = functools.partial(_kernel, op=op, bn=bn, bm=bm)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, 1), lambda n, mi: (mi, 0)),
+            pl.BlockSpec((bm, d), lambda n, mi: (mi, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn, d), lambda n, mi: (n, 0)),
+        out_shape=jax.ShapeDtypeStruct((num_segments, d), values.dtype),
+        interpret=interpret,
+    )(ids.astype(jnp.int32).reshape(m, 1), values)

@@ -1,0 +1,44 @@
+"""Jitted wrapper for segment_reduce with shape padding."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.segment_reduce.kernel import segment_reduce_kernel
+
+_IDENT = {"sum": 0.0, "min": np.inf, "max": -np.inf}
+
+
+@functools.partial(jax.jit, static_argnames=("num_segments", "op", "bn",
+                                             "bm", "interpret"))
+def _padded_call(ids, values, num_segments, op, bn, bm, interpret):
+    return segment_reduce_kernel(ids, values, num_segments, op=op, bn=bn,
+                                 bm=bm, interpret=interpret)
+
+
+def segment_reduce(ids, values, num_segments: int, op: str = "sum",
+                   bn: int = 128, bm: int = 128, interpret: bool = True):
+    """Segment reduce over arbitrary m/num_segments (pads to blocks).
+
+    For min/max the identity element is returned for empty segments
+    (callers combine with current values, so this is the natural choice;
+    ``jax.ops.segment_min`` matches with its fill).
+    """
+    ids = jnp.asarray(ids, jnp.int32)
+    values = jnp.asarray(values)
+    squeeze = values.ndim == 1
+    if squeeze:
+        values = values[:, None]
+    m, d = values.shape
+    mp = int(np.ceil(max(m, 1) / bm)) * bm
+    npad = int(np.ceil(max(num_segments, 1) / bn)) * bn
+    if mp != m:
+        ids = jnp.pad(ids, (0, mp - m), constant_values=npad + 1)
+        values = jnp.pad(values, ((0, mp - m), (0, 0)))
+    out = _padded_call(ids, values, npad, op, bn, bm, interpret)
+    out = out[:num_segments]
+    return out[:, 0] if squeeze else out

@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for segment_reduce."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def segment_reduce_ref(ids, values, num_segments: int, op: str = "sum"):
+    ids = jnp.asarray(ids, jnp.int32)
+    if op == "sum":
+        return jax.ops.segment_sum(values, ids, num_segments=num_segments)
+    if op == "min":
+        return jax.ops.segment_min(values, ids, num_segments=num_segments)
+    if op == "max":
+        return jax.ops.segment_max(values, ids, num_segments=num_segments)
+    raise ValueError(op)

@@ -1,0 +1,66 @@
+"""SpMV in ELLPACK layout — TPU regularization of the CSR SpMV problem.
+
+CSR's ragged rows do not map to fixed-shape TPU tiles; the standard
+adaptation packs each row to ``k`` slots (ELL), turning SpMV into a dense
+blocked contraction.  The x-gather is a one-hot contraction per slot, so
+the whole kernel runs on the MXU.
+
+Grid = (row_blocks, x_blocks), x innermost; y accumulates in VMEM.
+Working set per step: cols/vals (bn x k), x tile (bx), one-hot (bn x bx)
+— all  MXU-aligned for bn = bx = 128.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(cols_ref, vals_ref, x_ref, y_ref, *, k: int, bn: int, bx: int):
+    x_idx = pl.program_id(1)
+
+    @pl.when(x_idx == 0)
+    def _init():
+        y_ref[...] = jnp.zeros_like(y_ref[...])
+
+    cols = cols_ref[...]                       # (bn, k)
+    vals = vals_ref[...]                       # (bn, k)
+    x = x_ref[...].reshape(bx)                 # (bx,)
+    x0 = x_idx * bx
+    acc = jnp.zeros((bn,), jnp.float32)
+    for slot in range(k):                      # k is small and static
+        onehot = ((cols[:, slot][:, None] - x0)
+                  == jax.lax.broadcasted_iota(jnp.int32, (bn, bx), 1)
+                  ).astype(x.dtype)
+        gathered = jax.lax.dot_general(
+            onehot, x[:, None], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ).reshape(bn)
+        acc = acc + vals[:, slot].astype(jnp.float32) * gathered
+    y_ref[...] += acc.astype(y_ref.dtype).reshape(bn, 1)
+
+
+def spmv_ell_kernel(cols, vals, x, *, bn: int = 128, bx: int = 128,
+                    interpret: bool = True):
+    """cols int32[n, k] (padding: any id >= len(x)), vals [n, k], x [nx]
+    -> y [n] = sum_k vals[:, k] * x[cols[:, k]]."""
+    n, k = cols.shape
+    nx, = x.shape
+    assert n % bn == 0 and nx % bx == 0
+    grid = (n // bn, nx // bx)
+    kern = functools.partial(_kernel, k=k, bn=bn, bx=bx)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, k), lambda r, xi: (r, 0)),
+            pl.BlockSpec((bn, k), lambda r, xi: (r, 0)),
+            pl.BlockSpec((bx, 1), lambda r, xi: (xi, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn, 1), lambda r, xi: (r, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, 1), x.dtype),
+        interpret=interpret,
+    )(cols.astype(jnp.int32), vals.astype(x.dtype), x.reshape(nx, 1))

@@ -1,0 +1,57 @@
+"""Jitted wrapper for spmv_ell + CSR->ELL conversion."""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graphs.formats import CSR
+from repro.kernels.spmv_ell.kernel import spmv_ell_kernel
+
+
+def csr_to_ell(csr: CSR, k: int | None = None) -> Tuple[np.ndarray,
+                                                        np.ndarray]:
+    """Pack a CSR matrix to ELL (cols, vals); overflow rows truncate to
+    the k highest-magnitude entries (k defaults to the max degree)."""
+    deg = csr.degrees()
+    k = int(deg.max()) if k is None else k
+    n = csr.n
+    cols = np.full((n, k), n, dtype=np.int32)        # n == padding id
+    vals = np.zeros((n, k), dtype=np.float32)
+    w = (csr.weights if csr.weights is not None
+         else np.ones(csr.m, dtype=np.float32))
+    for i in range(n):
+        lo, hi = csr.pointers[i], csr.pointers[i + 1]
+        cnt = min(hi - lo, k)
+        cols[i, :cnt] = csr.neighbors[lo:lo + cnt]
+        vals[i, :cnt] = w[lo:lo + cnt]
+    return cols, vals
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "bx", "interpret"))
+def _call(cols, vals, x, bn, bx, interpret):
+    return spmv_ell_kernel(cols, vals, x, bn=bn, bx=bx,
+                           interpret=interpret)
+
+
+def spmv_ell(cols, vals, x, bn: int = 128, bx: int = 128,
+             interpret: bool = True):
+    cols = jnp.asarray(cols, jnp.int32)
+    vals = jnp.asarray(vals)
+    x = jnp.asarray(x)
+    n, k = cols.shape
+    nx = len(x)
+    np_ = int(np.ceil(max(n, 1) / bn)) * bn
+    nxp = int(np.ceil(max(nx, 1) / bx)) * bx
+    if np_ != n:
+        cols = jnp.pad(cols, ((0, np_ - n), (0, 0)),
+                       constant_values=nxp + 1)
+        vals = jnp.pad(vals, ((0, np_ - n), (0, 0)))
+    if nxp != nx:
+        x = jnp.pad(x, (0, nxp - nx))
+    y = _call(cols, vals, x, bn, bx, interpret)
+    return y[:n, 0]

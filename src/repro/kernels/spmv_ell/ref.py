@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for spmv_ell."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def spmv_ell_ref(cols, vals, x):
+    """Padding slots must carry val 0 (their gathered x is ignored)."""
+    nx = len(x)
+    safe = jnp.clip(cols, 0, nx - 1)
+    gathered = x[safe]
+    gathered = jnp.where(cols < nx, gathered, 0)
+    return (vals.astype(x.dtype) * gathered).sum(axis=1)

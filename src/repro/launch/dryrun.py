@@ -1,0 +1,261 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape)
+on the production meshes and extract memory / cost / collective data.
+
+This proves the distribution config is coherent without hardware: a
+sharding mismatch, compile-time OOM, or unsupported collective fails the
+cell.  The 512-device flag above MUST precede any other import (jax locks
+the device count on first init), which is why this module sets it before
+its own imports and why it must never be set globally.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-0.6b \
+      --shape train_4k [--multi-pod] [--all] [--out results.json]
+"""
+
+import argparse          # noqa: E402
+import dataclasses       # noqa: E402
+import json              # noqa: E402
+import re                # noqa: E402
+import sys               # noqa: E402
+import time              # noqa: E402
+from typing import Any, Dict, Optional  # noqa: E402
+
+import jax               # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import ARCHS, get_config               # noqa: E402
+from repro.distributed import context as dctx             # noqa: E402
+from repro.distributed import sharding as shd             # noqa: E402
+from repro.launch import specs as SP                      # noqa: E402
+from repro.launch.hlo_parse import analyze_collectives    # noqa: E402
+from repro.launch.mesh import make_production_mesh        # noqa: E402
+from repro.launch.roofline import analyze_cell            # noqa: E402
+from repro.models import model as M                       # noqa: E402
+from repro.train import optimizer as opt                  # noqa: E402
+from repro.train.step import lm_loss                      # noqa: E402
+
+_COLLECTIVE_RE = re.compile(
+    r"\b(all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start)?\b")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+    "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+
+def collective_bytes_from_hlo(hlo: str) -> Dict[str, int]:
+    """Per-device bytes moved by every collective op in the post-SPMD HLO
+    module, keyed by op kind.
+
+    Post-optimization HLO does not inline operand shapes, so we charge
+    each op its *result* type (the standard per-device wire proxy:
+    all-gather result = the gathered buffer a device receives; all-reduce
+    / all-to-all / collective-permute results equal their inputs).
+    ``-done`` halves of async pairs are skipped.
+    """
+    out: Dict[str, int] = {}
+    for line in hlo.splitlines():
+        line = line.strip()
+        if "=" not in line or "-done" in line.split("(", 1)[0]:
+            continue
+        rhs = line.split("=", 1)[1]
+        head = rhs.split("(", 1)[0]
+        m = _COLLECTIVE_RE.search(head)
+        if not m:
+            # async start form: result is a tuple before the op name
+            m2 = _COLLECTIVE_RE.search(rhs.split("),", 1)[0]) \
+                if rhs.lstrip().startswith("(") else None
+            if not m2:
+                continue
+            m = m2
+            head = rhs.split(m.group(0), 1)[0]
+        kind = m.group(1)
+        nbytes = 0
+        for dt, dims in _SHAPE_RE.findall(head):
+            if dt not in _DTYPE_BYTES:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            nbytes += n * _DTYPE_BYTES[dt]
+        out[kind] = out.get(kind, 0) + nbytes
+    return out
+
+
+@dataclasses.dataclass
+class CellReport:
+    arch: str
+    shape: str
+    mesh: str
+    status: str                       # ok | skipped | failed
+    reason: str = ""
+    flops: float = 0.0
+    hlo_bytes: float = 0.0
+    collective_bytes: Dict[str, int] = dataclasses.field(
+        default_factory=dict)
+    arg_bytes_per_device: int = 0
+    temp_bytes_per_device: int = 0
+    output_bytes_per_device: int = 0
+    compile_seconds: float = 0.0
+    collective_counts: Dict[str, int] = dataclasses.field(
+        default_factory=dict)
+    roofline: Optional[Dict[str, Any]] = None
+
+    def to_json(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+
+def _build_fn_and_args(cfg, shape_name, mesh, multi_pod):
+    """Returns (fn, args, in_shardings, out_shardings)."""
+    ss = SP.SHAPE_SPECS[shape_name]
+    p_specs = SP.params_specs(cfg)
+    p_shard = shd.tree_shardings(p_specs, mesh, multi_pod)
+    inputs = SP.input_specs(cfg, shape_name)
+
+    if ss.kind == "train":
+        hp = opt.AdamWConfig()
+        o_specs = jax.eval_shape(opt.init, p_specs)
+        o_shard = shd.tree_shardings(o_specs, mesh, multi_pod)
+        b_shard = shd.batch_shardings(inputs, mesh, multi_pod)
+
+        def step(params, opt_state, batch):
+            loss, grads = jax.value_and_grad(lm_loss)(params, batch, cfg)
+            new_p, new_o = opt.update(grads, opt_state, params, hp)
+            return loss, new_p, new_o
+
+        args = (p_specs, o_specs, inputs)
+        in_sh = (p_shard, o_shard, b_shard)
+        out_sh = (None, p_shard, o_shard)
+        return step, args, in_sh, out_sh
+
+    if ss.kind == "prefill":
+        b_shard = shd.batch_shardings(inputs, mesh, multi_pod)
+
+        def run_prefill(params, batch):
+            tokens = batch["tokens"]
+            extra = {k: v for k, v in batch.items() if k != "tokens"}
+            return M.prefill(params, tokens, cfg, extra=extra)
+
+        return (run_prefill, (p_specs, inputs), (p_shard, b_shard),
+                None)
+
+    # decode: serving layout — bf16 TP-resident weights, no FSDP gathers
+    p_specs = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(
+            s.shape, jnp.bfloat16 if jnp.issubdtype(s.dtype, jnp.floating)
+            else s.dtype),
+        p_specs)
+    p_shard = shd.tree_shardings(p_specs, mesh, multi_pod, serve=True)
+    cache_specs = inputs["cache"]
+    c_shard = shd.cache_shardings(cache_specs, mesh, multi_pod, cfg)
+    t_shard = shd.batch_shardings({"tokens": inputs["tokens"]},
+                                  mesh, multi_pod)["tokens"]
+
+    def serve_step(params, cache, tokens):
+        return M.decode_step(params, cache, tokens, cfg)
+
+    return (serve_step, (p_specs, cache_specs, inputs["tokens"]),
+            (p_shard, c_shard, t_shard), (None, c_shard))
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             verbose: bool = True) -> CellReport:
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    cfg = get_config(arch)
+    ok, reason = SP.shape_supported(cfg, shape_name)
+    if not ok:
+        return CellReport(arch, shape_name, mesh_name, "skipped", reason)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    ctx = shd.make_ctx(cfg, mesh, multi_pod)
+    t0 = time.time()
+    try:
+        with dctx.use(ctx):
+            fn, args, in_sh, out_sh = _build_fn_and_args(
+                cfg, shape_name, mesh, multi_pod)
+            jitted = (jax.jit(fn, in_shardings=in_sh,
+                              out_shardings=out_sh)
+                      if out_sh is not None else
+                      jax.jit(fn, in_shardings=in_sh))
+            lowered = jitted.lower(*args)
+            compiled = lowered.compile()
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+        coll, coll_counts = analyze_collectives(hlo)
+        rep = CellReport(
+            arch, shape_name, mesh_name, "ok",
+            flops=float((cost or {}).get("flops", 0.0)),
+            hlo_bytes=float((cost or {}).get("bytes accessed", 0.0)),
+            collective_bytes=coll,
+            collective_counts=coll_counts,
+            arg_bytes_per_device=int(
+                getattr(mem, "argument_size_in_bytes", 0) or 0),
+            temp_bytes_per_device=int(
+                getattr(mem, "temp_size_in_bytes", 0) or 0),
+            output_bytes_per_device=int(
+                getattr(mem, "output_size_in_bytes", 0) or 0),
+            compile_seconds=time.time() - t0,
+        )
+        chips = 512 if multi_pod else 256
+        row = analyze_cell(cfg, shape_name, mesh_name, chips,
+                           sum(coll.values()),
+                           pod_collective_frac=0.1 if multi_pod else 0.0)
+        rep.roofline = row.to_json()
+        if verbose:
+            print(f"[ok] {arch} x {shape_name} x {mesh_name}: "
+                  f"flops={rep.flops:.3e} bytes={rep.hlo_bytes:.3e} "
+                  f"coll={sum(coll.values()):.3e} "
+                  f"mem(arg={rep.arg_bytes_per_device/2**30:.2f}GiB, "
+                  f"temp={rep.temp_bytes_per_device/2**30:.2f}GiB) "
+                  f"[{rep.compile_seconds:.0f}s]")
+            print(f"     memory_analysis: {mem}")
+        return rep
+    except Exception as e:  # noqa: BLE001 — cell failure is data
+        if verbose:
+            print(f"[FAIL] {arch} x {shape_name} x {mesh_name}: "
+                  f"{type(e).__name__}: {e}")
+        return CellReport(arch, shape_name, mesh_name, "failed",
+                          reason=f"{type(e).__name__}: {e}",
+                          compile_seconds=time.time() - t0)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=SP.SHAPES)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    archs = ARCHS if (args.all or not args.arch) else [args.arch]
+    shapes = SP.SHAPES if (args.all or not args.shape) else [args.shape]
+    meshes = ([False, True] if args.both_meshes
+              else [bool(args.multi_pod)])
+
+    reports = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                reports.append(run_cell(arch, shape, mp))
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump([r.to_json() for r in reports], f, indent=1)
+    n_fail = sum(r.status == "failed" for r in reports)
+    print(f"\n{len(reports)} cells: "
+          f"{sum(r.status == 'ok' for r in reports)} ok, "
+          f"{sum(r.status == 'skipped' for r in reports)} skipped, "
+          f"{n_fail} failed")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,91 @@
+"""ShapeDtypeStruct input specs for every (architecture x shape) cell.
+
+The four assigned LM shapes:
+
+  train_4k     seq 4,096 x global batch 256   -> lowers train_step
+  prefill_32k  seq 32,768 x global batch 32   -> lowers prefill
+  decode_32k   KV 32,768 x global batch 128   -> lowers decode_step
+  long_500k    KV 524,288 x global batch 1    -> lowers decode_step
+               (sub-quadratic archs only; full-attention archs are
+               skipped per the shape rules — DESIGN.md §4)
+
+Modality stubs per the rules: ``[vlm]``/``[audio]`` get precomputed
+patch/frame embeddings in the input spec; no frontend is lowered.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as M
+from repro.models.config import ModelConfig
+
+SHAPES = ("train_4k", "prefill_32k", "decode_32k", "long_500k")
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str             # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPE_SPECS: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524288, 1),
+}
+
+
+def shape_supported(cfg: ModelConfig, shape: str) -> Tuple[bool, str]:
+    """(supported, reason-if-not)."""
+    if shape == "long_500k" and not cfg.is_subquadratic:
+        return False, ("pure full attention at 524k context is not "
+                       "sub-quadratic; skipped per the shape rules")
+    return True, ""
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: str) -> Dict[str, Any]:
+    """Stand-ins for every model input of the given shape cell."""
+    ss = SHAPE_SPECS[shape]
+    B, S = ss.global_batch, ss.seq_len
+    if ss.kind == "train":
+        specs = {
+            "tokens": _sds((B, S), jnp.int32),
+            "labels": _sds((B, S), jnp.int32),
+        }
+        if cfg.family == "vlm":
+            specs["patches"] = _sds((B, cfg.img_tokens, cfg.d_model),
+                                    jnp.float32)
+        if cfg.family == "audio":
+            specs["frames"] = _sds((B, cfg.enc_frames, cfg.d_model),
+                                   jnp.float32)
+        return specs
+    if ss.kind == "prefill":
+        specs = {"tokens": _sds((B, S), jnp.int32)}
+        if cfg.family == "vlm":
+            specs["patches"] = _sds((B, cfg.img_tokens, cfg.d_model),
+                                    jnp.float32)
+        if cfg.family == "audio":
+            specs["frames"] = _sds((B, cfg.enc_frames, cfg.d_model),
+                                   jnp.float32)
+        return specs
+    # decode: one new token against a pre-allocated cache of seq_len
+    cache = jax.eval_shape(
+        lambda: M.init_decode_cache(cfg, B, S))
+    return {"tokens": _sds((B, 1), jnp.int32), "cache": cache}
+
+
+def params_specs(cfg: ModelConfig):
+    return jax.eval_shape(
+        lambda: M.init_params(jax.random.PRNGKey(0), cfg))

@@ -1,0 +1,107 @@
+"""Training launcher: mesh + sharding + elastic checkpointed loop.
+
+On this CPU container it runs real (small) configs on the host devices;
+on a TPU slice the same entrypoint builds the production mesh and shards
+params/optimizer with the FSDP×TP rules.  The dry-run
+(``launch/dryrun.py``) is the compile-only counterpart for the full
+configs.
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-0.6b --smoke \
+      --steps 50 --ckpt-dir /tmp/ckpt
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.distributed import context as dctx
+from repro.distributed import sharding as shd
+from repro.distributed.fault_tolerance import ElasticTrainer
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.models import model as M
+from repro.train import data as D
+from repro.train import optimizer as opt
+from repro.train.step import make_train_step
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-0.6b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced same-family config (CPU-sized)")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
+    ap.add_argument("--save-every", type=int, default=25)
+    ap.add_argument("--production-mesh", action="store_true",
+                    help="use the (16,16) mesh (needs 256 devices)")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    print(f"arch={cfg.name} (~{cfg.param_count()/1e6:.0f}M params), "
+          f"{len(jax.devices())} devices")
+
+    if args.production_mesh:
+        mesh = make_production_mesh()
+    elif len(jax.devices()) > 1:
+        mesh = make_host_mesh()
+    else:
+        mesh = None
+
+    hp = opt.AdamWConfig(lr=args.lr, warmup_steps=max(args.steps // 10, 1),
+                         total_steps=args.steps)
+    dc = D.DataConfig(seq_len=args.seq_len, global_batch=args.global_batch)
+    ctx = shd.make_ctx(cfg, mesh, False) if mesh is not None else None
+
+    def build_state(_mesh):
+        params = M.init_params(jax.random.PRNGKey(0), cfg)
+        opt_state = opt.init(params)
+        if mesh is not None:
+            p_sh = shd.tree_shardings(
+                jax.tree.map(lambda a: a, params), mesh, False)
+            params = jax.tree.map(jax.device_put, params, p_sh)
+            o_sh = shd.tree_shardings(opt_state, mesh, False)
+            opt_state = jax.tree.map(jax.device_put, opt_state, o_sh)
+        return params, opt_state
+
+    def make_step():
+        step = make_train_step(cfg, hp, grad_accum=args.grad_accum)
+
+        def wrapped(params, opt_state, batch):
+            if ctx is not None:
+                with dctx.use(ctx):
+                    return step(params, opt_state, batch)
+            return step(params, opt_state, batch)
+
+        return wrapped
+
+    trainer = ElasticTrainer(args.ckpt_dir, build_state, make_step,
+                             mesh_builder=lambda: mesh,
+                             save_every=args.save_every)
+    _, params, opt_state, start = trainer.resume_or_init()
+    if start:
+        print(f"resumed at step {start} (elastic restore)")
+
+    def batches():
+        s = start
+        while True:
+            yield {k: jnp.asarray(v)
+                   for k, v in D.make_batch(cfg, dc, s).items()}
+            s += 1
+
+    params, opt_state, losses = trainer.run(
+        params, opt_state, batches(), args.steps, start_step=start)
+    print(f"done: loss {losses[0]:.3f} -> {losses[-1]:.3f}; "
+          f"checkpoints in {args.ckpt_dir}")
+
+
+if __name__ == "__main__":
+    main()

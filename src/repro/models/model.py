@@ -1,0 +1,403 @@
+"""Unified model: init / forward / prefill / decode for all 10 assigned
+architectures, with scan-over-layers (compile-time O(1) in depth) and
+optional per-layer remat.
+
+Families and their block structure (see configs/):
+
+dense | vlm   x += attn(ln1(x)); x += mlp(ln2(x))
+moe           x += attn(ln1(x)); x += moe_ffn(ln2(x))   [+ dense branch]
+hybrid        x += attn(ln1(x)) + mamba(ln1(x));  x += mlp(ln2(x))
+audio         whisper enc (bidir) -> dec (causal + cross-attn)
+ssm           xLSTM groups: (group-1) x mLSTM blocks + 1 sLSTM block
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import context as dctx
+from repro.models import layers as L
+from repro.models import ssm as S
+from repro.models.config import ModelConfig
+
+Params = Dict[str, Any]
+
+
+def _dt(cfg: ModelConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def _cdt(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_block(key, cfg: ModelConfig, kind: str) -> Params:
+    dt = _dt(cfg)
+    ks = jax.random.split(key, 8)
+    p: Params = {"ln1": jnp.ones((cfg.d_model,), dt)}
+    if kind in ("dense", "moe", "hybrid", "enc", "dec"):
+        p["attn"] = L.init_attention(ks[0], cfg, dt)
+    if kind == "hybrid":
+        p["mamba"] = S.init_mamba(ks[1], cfg, dt)
+    if kind == "dec":
+        p["ln_cross"] = jnp.ones((cfg.d_model,), dt)
+        p["cross"] = L.init_attention(ks[2], cfg, dt)
+    if kind == "moe":
+        p["ln2"] = jnp.ones((cfg.d_model,), dt)
+        p["moe"] = L.init_moe(ks[3], cfg, dt)
+    elif kind in ("dense", "hybrid", "enc", "dec"):
+        p["ln2"] = jnp.ones((cfg.d_model,), dt)
+        p["mlp"] = L.init_mlp(ks[4], cfg, dtype=dt)
+    if kind == "mlstm":
+        p["mlstm"] = S.init_mlstm(ks[5], cfg, dt)
+    if kind == "slstm":
+        p["slstm"] = S.init_slstm(ks[6], cfg, dt)
+    return p
+
+
+def _stack_init(key, cfg, kind, n):
+    keys = jax.random.split(key, max(n, 1))
+    return jax.vmap(lambda k: _init_block(k, cfg, kind))(keys)
+
+
+def init_params(key, cfg: ModelConfig) -> Params:
+    dt = _dt(cfg)
+    ks = jax.random.split(key, 8)
+    p: Params = {
+        "embed": (jax.random.normal(ks[0], (cfg.vocab, cfg.d_model))
+                  * 0.02).astype(dt),
+        "final_norm": jnp.ones((cfg.d_model,), dt),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = L._dense_init(
+            ks[1], (cfg.d_model, cfg.vocab), cfg.d_model, dt)
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        p["blocks"] = _stack_init(ks[2], cfg, "dense", cfg.n_layers)
+    elif fam == "moe":
+        p["blocks"] = _stack_init(ks[2], cfg, "moe", cfg.n_layers)
+    elif fam == "hybrid":
+        p["blocks"] = _stack_init(ks[2], cfg, "hybrid", cfg.n_layers)
+    elif fam == "audio":
+        p["blocks"] = _stack_init(ks[2], cfg, "dec", cfg.n_layers)
+        p["enc_blocks"] = _stack_init(ks[3], cfg, "enc", cfg.enc_layers)
+        p["enc_norm"] = jnp.ones((cfg.d_model,), dt)
+    elif fam == "ssm":
+        g = cfg.xlstm_group
+        n_groups = cfg.n_layers // g
+        p["m_blocks"] = jax.vmap(
+            lambda k: _stack_init(k, cfg, "mlstm", g - 1)
+        )(jax.random.split(ks[2], n_groups))
+        p["s_blocks"] = _stack_init(ks[3], cfg, "slstm", n_groups)
+    if fam == "vlm":
+        p["img_adapter"] = L._dense_init(
+            ks[4], (cfg.d_model, cfg.d_model), cfg.d_model, dt)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# blocks (single-layer apply; caches optional)
+# ---------------------------------------------------------------------------
+
+def _cast_tree(p, dtype):
+    return jax.tree.map(
+        lambda a: a.astype(dtype) if jnp.issubdtype(a.dtype, jnp.floating)
+        else a, p)
+
+
+def _block_apply(x, bp, cfg: ModelConfig, *, positions, mode,
+                 cache=None, enc_out=None):
+    """One layer.  Returns (x, new_cache)."""
+    fam = cfg.family
+    cdt = _cdt(cfg)
+    bp = _cast_tree(bp, cdt)           # mixed precision: bf16 compute
+    new_cache: Dict[str, Any] = {}
+    h = L.rms_norm(x, bp["ln1"], cfg.norm_eps)
+
+    if fam == "ssm":
+        raise AssertionError("ssm handled by _ssm_forward")
+
+    attn_mode = mode if mode in ("decode", "prefill") else "causal"
+    attn_out, attn_cache = L.attention(
+        h, bp["attn"], cfg, positions=positions, mode=attn_mode,
+        cache=None,
+        layer_cache=None if cache is None else cache.get("attn"))
+    if attn_cache is not None:
+        new_cache["attn"] = attn_cache
+    if fam == "hybrid":
+        m_state_in = None
+        if cache is not None:
+            m_state_in = cache.get("mamba")
+        elif mode == "prefill":
+            m_state_in = S.init_mamba_state(cfg, h.shape[0], h.dtype)
+        m_out, m_state = S.mamba(h, bp["mamba"], cfg, state=m_state_in)
+        attn_out = attn_out + m_out
+        if m_state is not None:
+            new_cache["mamba"] = m_state
+    x = x + attn_out
+
+    if fam == "audio" and (enc_out is not None or
+                           (cache is not None and "cross_kv" in cache)):
+        hc = L.rms_norm(x, bp["ln_cross"], cfg.norm_eps)
+        if cache is not None and "cross_kv" in cache:
+            ck, cv = cache["cross_kv"]
+        else:
+            B, F, _ = enc_out.shape
+            ck = (enc_out @ bp["cross"]["wk"]).reshape(
+                B, F, cfg.n_kv_heads, cfg.hd)
+            cv = (enc_out @ bp["cross"]["wv"]).reshape(
+                B, F, cfg.n_kv_heads, cfg.hd)
+        c_out, _ = L.attention(hc, bp["cross"], cfg, positions=None,
+                               mode="cross", cross_kv=(ck, cv))
+        x = x + c_out
+        if mode in ("prefill", "decode"):
+            new_cache["cross_kv"] = (ck, cv)
+
+    h2 = L.rms_norm(x, bp["ln2"], cfg.norm_eps)
+    if fam == "moe":
+        x = x + L.moe_ffn(h2, bp["moe"], cfg)
+    else:
+        x = x + L.mlp(h2, bp["mlp"], cfg)
+    x = dctx.constrain(x, "act_btd")
+    return x, (new_cache if new_cache else None)
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill) with scan over layers
+# ---------------------------------------------------------------------------
+
+def _embed(params, tokens, cfg):
+    x = params["embed"][tokens].astype(_cdt(cfg))
+    return x * (cfg.d_model ** 0.5 if cfg.family == "dense"
+                and "gemma" in cfg.name else 1.0)
+
+
+def _ssm_forward(params, x, cfg: ModelConfig, caches=None, mode="train"):
+    """xLSTM stack: python loop over groups (few), inner scan over the
+    group's mLSTM blocks, one sLSTM block per group (7:1 in the 1.3b
+    config).  ``caches`` carries (C, n) / (h, c, n, m) states for
+    prefill/decode; train runs stateless."""
+    g = cfg.xlstm_group
+    n_groups = cfg.n_layers // g
+    stateful = mode in ("prefill", "decode")
+    if stateful and caches is None:
+        B = x.shape[0]
+        m1 = S.init_mlstm_state(cfg, B)
+        s1 = S.init_slstm_state(cfg, B)
+        caches = {
+            "m": jax.tree.map(
+                lambda a: jnp.broadcast_to(
+                    a, (n_groups, g - 1) + a.shape), m1),
+            "s": jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (n_groups,) + a.shape), s1),
+        }
+
+    def m_block(xc, bp, st):
+        bp = _cast_tree(bp, _cdt(cfg))
+        h = L.rms_norm(xc, bp["ln1"], cfg.norm_eps)
+        out, new_st = S.mlstm(h, bp["mlstm"], cfg, state=st)
+        return xc + out, new_st
+
+    def s_block(xc, bp, st):
+        bp = _cast_tree(bp, _cdt(cfg))
+        h = L.rms_norm(xc, bp["ln1"], cfg.norm_eps)
+        out, new_st = S.slstm(h, bp["slstm"], cfg, state=st)
+        return xc + out, new_st
+
+    new_m, new_s = [], []
+    for gi in range(n_groups):
+        gp_m = jax.tree.map(lambda a: a[gi], params["m_blocks"])
+        if stateful:
+            cm = jax.tree.map(lambda a: a[gi], caches["m"])
+            x, m_states = jax.lax.scan(
+                lambda xc, bs: m_block(xc, *bs), x, (gp_m, cm))
+            new_m.append(m_states)
+        else:
+            x, _ = jax.lax.scan(
+                lambda xc, bp: (m_block(xc, bp, None)[0], None), x, gp_m)
+        gp_s = jax.tree.map(lambda a: a[gi], params["s_blocks"])
+        cs = (jax.tree.map(lambda a: a[gi], caches["s"])
+              if stateful else None)
+        x, s_state = s_block(x, gp_s, cs)
+        if stateful:
+            new_s.append(s_state)
+    if not stateful:
+        return x, None
+    stack = lambda xs: jax.tree.map(lambda *a: jnp.stack(a), *xs)
+    return x, {"m": stack(new_m), "s": stack(new_s)}
+
+
+def forward(params, tokens, cfg: ModelConfig,
+            extra: Optional[Dict] = None, mode: str = "train"):
+    """tokens (B, S) -> logits (B, S_out, V).  extra carries the modality
+    stubs: {"frames": (B,F,D)} for audio, {"patches": (B,P,D)} for vlm.
+
+    Returns (logits, caches) — caches is None in train mode.
+    """
+    extra = extra or {}
+    x = _embed(params, tokens, cfg)
+    x = dctx.constrain(x, "act_btd")
+    B, S0 = tokens.shape
+    prefix = 0
+    if cfg.family == "vlm":
+        patches = (extra["patches"].astype(_cdt(cfg))
+                   @ params["img_adapter"].astype(_cdt(cfg)))
+        x = jnp.concatenate([patches, x], axis=1)
+        prefix = patches.shape[1]
+    enc_out = None
+    if cfg.family == "audio":
+        enc_out = _encoder(params, extra["frames"], cfg)
+    S = x.shape[1]
+    positions = jnp.arange(S)
+
+    if cfg.family == "ssm":
+        x, caches = _ssm_forward(params, x, cfg, caches=None, mode=mode)
+    else:
+        block = functools.partial(_block_apply, cfg=cfg, mode=mode,
+                                  positions=positions, enc_out=enc_out)
+        fn = (lambda xx, bp: (block(xx, bp)[0], None))
+        if cfg.remat:
+            fn = jax.checkpoint(fn)
+        if mode == "prefill":
+            # collect per-layer caches (no remat needed at inference)
+            def fn_c(xx, bp):
+                xx, c = block(xx, bp)
+                return xx, c
+            x, caches = jax.lax.scan(fn_c, x, params["blocks"])
+        else:
+            x, _ = jax.lax.scan(fn, x, params["blocks"])
+            caches = None
+
+    x = L.rms_norm(x, params["final_norm"].astype(x.dtype), cfg.norm_eps)
+    head = (params["embed"].T if cfg.tie_embeddings
+            else params["lm_head"])
+    logits = x @ head.astype(x.dtype)
+    logits = dctx.constrain(logits, "logits")
+    if prefix:
+        logits = logits[:, prefix:]
+    return logits, caches
+
+
+def _encoder(params, frames, cfg: ModelConfig):
+    x = frames.astype(_cdt(cfg))
+    positions = jnp.arange(x.shape[1])
+
+    def fn(xx, bp):
+        bp = _cast_tree(bp, _cdt(cfg))
+        h = L.rms_norm(xx, bp["ln1"], cfg.norm_eps)
+        out, _ = L.attention(h, bp["attn"], cfg, positions=positions,
+                             mode="bidir")
+        xx = xx + out
+        h2 = L.rms_norm(xx, bp["ln2"], cfg.norm_eps)
+        return xx + L.mlp(h2, bp["mlp"], cfg), None
+
+    if cfg.remat:
+        fn = jax.checkpoint(fn)
+    x, _ = jax.lax.scan(fn, x, params["enc_blocks"])
+    return L.rms_norm(x, params["enc_norm"].astype(x.dtype), cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# serving: cache init + single-token decode
+# ---------------------------------------------------------------------------
+
+def init_decode_cache(cfg: ModelConfig, batch: int, smax: int):
+    """Pre-allocated decode state for a context of ``smax`` tokens.
+    Sliding-window archs allocate only the window (ring buffer)."""
+    cdt = _cdt(cfg)
+    win = cfg.sliding_window
+    attn_len = min(smax, win) if win else smax
+    if cfg.family == "ssm":
+        g = cfg.xlstm_group
+        n_groups = cfg.n_layers // g
+        m1 = S.init_mlstm_state(cfg, batch)
+        s1 = S.init_slstm_state(cfg, batch)
+        m = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (n_groups, g - 1) + a.shape), m1)
+        s = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (n_groups,) + a.shape), s1)
+        return {"m": m, "s": s, "pos": jnp.zeros((), jnp.int32)}
+    per_layer = {"attn": L.init_attn_cache(cfg, batch, attn_len, cdt)}
+    if cfg.family == "hybrid":
+        per_layer["mamba"] = S.init_mamba_state(cfg, batch, cdt)
+    if cfg.family == "audio":
+        per_layer["cross_kv"] = (
+            jnp.zeros((batch, cfg.enc_frames, cfg.n_kv_heads, cfg.hd),
+                      cdt),
+            jnp.zeros((batch, cfg.enc_frames, cfg.n_kv_heads, cfg.hd),
+                      cdt),
+        )
+    layers = jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (cfg.n_layers,) + a.shape),
+        per_layer)
+    return {"layers": layers, "pos": jnp.zeros((), jnp.int32)}
+
+
+def decode_step(params, cache, tokens, cfg: ModelConfig,
+                extra: Optional[Dict] = None):
+    """tokens (B, 1) -> (logits (B, 1, V), new_cache)."""
+    x = _embed(params, tokens, cfg)
+    pos = cache["pos"]
+
+    if "m" in cache:
+        x, new_states = _ssm_forward(params, x, cfg,
+                                     caches={"m": cache["m"],
+                                             "s": cache["s"]},
+                                     mode="decode")
+        new_cache = {**new_states, "pos": pos + 1}
+    else:
+        def fn(xx, bp_cache):
+            bp, lc = bp_cache
+            xx, c = _block_apply(xx, bp, cfg=cfg, mode="decode",
+                                 positions=pos, cache=lc,
+                                 enc_out=None)
+            return xx, c
+
+        x, new_layers = jax.lax.scan(fn, x,
+                                     (params["blocks"], cache["layers"]))
+        new_cache = {"layers": new_layers, "pos": pos + 1}
+
+    x = L.rms_norm(x, params["final_norm"].astype(x.dtype), cfg.norm_eps)
+    head = (params["embed"].T if cfg.tie_embeddings
+            else params["lm_head"])
+    logits = x @ head.astype(x.dtype)
+    logits = dctx.constrain(logits, "logits")
+    return logits, new_cache
+
+
+def prefill(params, tokens, cfg: ModelConfig,
+            extra: Optional[Dict] = None, max_len: Optional[int] = None):
+    """Prompt processing: returns (last-token logits, populated cache).
+
+    ``max_len`` reserves decode slots in the KV cache (default prompt +
+    128; SSM states are O(1) and need no reservation)."""
+    logits, caches = forward(params, tokens, cfg, extra=extra,
+                             mode="prefill")
+    B, Sp = tokens.shape
+    if cfg.family == "ssm":
+        cache = {**caches, "pos": jnp.asarray(Sp, jnp.int32)}
+        return logits[:, -1:], cache
+    target = max_len if max_len is not None else Sp + 128
+    if cfg.sliding_window:
+        target = max(min(target, cfg.sliding_window), Sp)
+    pad = max(target - Sp, 0)
+    if pad and "attn" in caches:
+        attn = dict(caches["attn"])
+        attn["k"] = jnp.pad(attn["k"],
+                            ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        attn["v"] = jnp.pad(attn["v"],
+                            ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        attn["pos_slots"] = jnp.pad(attn["pos_slots"], ((0, 0), (0, pad)),
+                                    constant_values=-(1 << 30))
+        caches = {**caches, "attn": attn}
+    cache = {"layers": caches, "pos": jnp.asarray(Sp, jnp.int32)}
+    return logits[:, -1:], cache

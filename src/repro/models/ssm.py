@@ -1,0 +1,297 @@
+"""State-space / recurrent blocks: Mamba (Hymba's parallel heads) and
+xLSTM's mLSTM + sLSTM.
+
+All recurrences are chunked: within a chunk the recurrence runs as an
+associative scan (Mamba) or a matmul-form parallel recurrence (mLSTM);
+chunks are chained with ``lax.scan`` carrying O(state) memory — this is
+what makes the 524k-token decode shapes feasible (sub-quadratic archs).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import context as dctx
+from repro.models.config import ModelConfig
+from repro.models.layers import _dense_init, rms_norm
+
+CHUNK = 256
+
+
+# ---------------------------------------------------------------------------
+# Mamba (selective SSM), simplified but structurally faithful
+# ---------------------------------------------------------------------------
+
+def init_mamba(key, cfg: ModelConfig, dtype) -> Dict:
+    d, di, n = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    ks = jax.random.split(key, 7)
+    return {
+        "in_proj": _dense_init(ks[0], (d, 2 * di), d, dtype),
+        "conv": _dense_init(ks[1], (cfg.ssm_conv, di), cfg.ssm_conv, dtype),
+        "x_bc": _dense_init(ks[2], (di, 2 * n), di, dtype),
+        "x_dt": _dense_init(ks[3], (di, 1), di, dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, float(n), n)).astype(dtype)
+        * jnp.ones((di, 1), dtype),
+        "d_skip": jnp.ones((di,), dtype),
+        "out_proj": _dense_init(ks[4], (di, d), di, dtype),
+    }
+
+
+def _selective_scan_chunked(u, dt, B_t, C_t, a_log, h0):
+    """u: (B,S,Di); dt: (B,S,Di); B_t/C_t: (B,S,N); h0: (B,Di,N).
+
+    h_t = exp(-exp(a_log) * dt_t) * h_{t-1} + dt_t * u_t * B_t
+    y_t = (h_t * C_t).sum(N)
+    Chunked associative scan carrying h between chunks.  The (c, Di, N)
+    decay/input tensors are formed *inside* each chunk step so the live
+    working set is O(B*c*Di*N), never O(B*S*Di*N).
+    """
+    Bsz, S, Di = u.shape
+    N = B_t.shape[-1]
+    c = min(CHUNK, S)
+    assert S % c == 0
+    nchunks = S // c
+    A = -jnp.exp(a_log.astype(jnp.float32))              # (Di, N)
+    u_c = u.reshape(Bsz, nchunks, c, Di).swapaxes(0, 1)
+    dt_c = dt.reshape(Bsz, nchunks, c, Di).swapaxes(0, 1)
+    B_c = B_t.reshape(Bsz, nchunks, c, N).swapaxes(0, 1)
+    C_c = C_t.reshape(Bsz, nchunks, c, N).swapaxes(0, 1)
+
+    def chunk_step(h, xs):
+        uc, dtc, bc, cc = xs                             # (B,c,Di)/(B,c,N)
+        dec = jnp.exp(dtc[..., None].astype(jnp.float32) * A)
+        xin = ((dtc * uc)[..., None].astype(jnp.float32)
+               * bc[:, :, None, :].astype(jnp.float32))
+
+        def combine(e1, e2):
+            a1, b1 = e1
+            a2, b2 = e2
+            return a1 * a2, a2 * b1 + b2
+
+        a_scan, b_scan = jax.lax.associative_scan(
+            combine, (dec, xin), axis=1)
+        hs = a_scan * h[:, None] + b_scan                # (B,c,Di,N)
+        y = jnp.einsum("bcdn,bcn->bcd", hs, cc.astype(jnp.float32))
+        return hs[:, -1], y.astype(u.dtype)
+
+    # remat the chunk body: its (B,c,Di,N) decay/scan intermediates are
+    # recomputed in backward instead of being saved per chunk
+    h_last, ys = jax.lax.scan(jax.checkpoint(chunk_step),
+                              h0.astype(jnp.float32),
+                              (u_c, dt_c, B_c, C_c))
+    y = ys.swapaxes(0, 1).reshape(Bsz, S, Di)
+    return y.astype(u.dtype), h_last
+
+
+def mamba(x, p, cfg: ModelConfig, state: Optional[Dict] = None):
+    """x: (B,S,D).  state: {"conv": (B,K-1,Di), "h": (B,Di,N)} for decode.
+    Returns (y, new_state)."""
+    B, S, D = x.shape
+    di, n, k = cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+    xz = x @ p["in_proj"]
+    u, z = jnp.split(xz, 2, axis=-1)
+    u = dctx.constrain(u, "act_btf")
+    # depthwise causal conv
+    if state is not None:
+        conv_in = jnp.concatenate([state["conv"], u], axis=1)
+    else:
+        conv_in = jnp.pad(u, ((0, 0), (k - 1, 0), (0, 0)))
+    windows = jnp.stack(
+        [conv_in[:, i:i + S, :] for i in range(k)], axis=2)  # (B,S,k,Di)
+    u = jax.nn.silu(jnp.einsum("bskd,kd->bsd", windows, p["conv"]))
+    bc = u @ p["x_bc"]
+    B_t, C_t = jnp.split(bc, 2, axis=-1)                  # (B,S,N)
+    dt = jax.nn.softplus(u @ p["x_dt"])                   # (B,S,1)
+    dt = jnp.broadcast_to(dt, (B, S, di))
+    h0 = (state["h"] if state is not None
+          else jnp.zeros((B, di, n), jnp.float32))
+    y, h_last = _selective_scan_chunked(u, dt, B_t, C_t, p["a_log"], h0)
+    y = y + u * p["d_skip"]
+    y = y * jax.nn.silu(z)
+    out = y @ p["out_proj"]
+    new_state = None
+    if state is not None:
+        new_state = {"conv": conv_in[:, -(k - 1):, :], "h": h_last}
+    return out, new_state
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int, dtype) -> Dict:
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, cfg.d_inner), dtype),
+        "h": jnp.zeros((batch, cfg.d_inner, cfg.ssm_state), jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# xLSTM: mLSTM (matrix memory, chunk-parallel) and sLSTM (sequential)
+# ---------------------------------------------------------------------------
+
+def init_mlstm(key, cfg: ModelConfig, dtype) -> Dict:
+    d = cfg.d_model
+    di = d * max(cfg.ssm_expand, 1)
+    ks = jax.random.split(key, 7)
+    return {
+        "in_proj": _dense_init(ks[0], (d, 2 * di), d, dtype),
+        "wq": _dense_init(ks[1], (di, di), di, dtype),
+        "wk": _dense_init(ks[2], (di, di), di, dtype),
+        "wv": _dense_init(ks[3], (di, di), di, dtype),
+        "w_if": _dense_init(ks[4], (di, 2 * cfg.n_heads), di, dtype),
+        "out_proj": _dense_init(ks[5], (di, d), di, dtype),
+    }
+
+
+def mlstm(x, p, cfg: ModelConfig, state: Optional[Dict] = None):
+    """Chunkwise mLSTM with matrix memory C (B,H,dh,dh) and normalizer n.
+
+    Within a chunk the recurrence is evaluated in matmul form (decay-
+    weighted attention-like products); chunks chain through the carried
+    (C, n) state — the standard chunk-recurrent formulation.
+    """
+    B, S, D = x.shape
+    H = cfg.n_heads
+    di = D * max(cfg.ssm_expand, 1)
+    dh = di // H
+    xz = x @ p["in_proj"]
+    u, z = jnp.split(xz, 2, axis=-1)
+    u = dctx.constrain(u, "act_btf")
+    # qkv heads are few (4): shard head_dim over the model axis instead,
+    # keeping every per-chunk einsum local (contraction over sharded dh
+    # -> one small all-reduce per chunk instead of full resharding;
+    # EXPERIMENTS §Perf hillclimb A)
+    q = (u @ p["wq"]).reshape(B, S, H, dh) / math.sqrt(dh)
+    k = (u @ p["wk"]).reshape(B, S, H, dh)
+    v = (u @ p["wv"]).reshape(B, S, H, dh)
+    q = dctx.constrain(q, "act_ssm_heads")
+    k = dctx.constrain(k, "act_ssm_heads")
+    v = dctx.constrain(v, "act_ssm_heads")
+    gates = u @ p["w_if"]                                  # (B,S,2H)
+    i_gate = gates[..., :H]
+    f_gate = jax.nn.log_sigmoid(gates[..., H:].astype(jnp.float32))
+
+    c = min(CHUNK, S)
+    assert S % c == 0
+    nchunks = S // c
+    qc = q.reshape(B, nchunks, c, H, dh).swapaxes(0, 1)
+    kc = k.reshape(B, nchunks, c, H, dh).swapaxes(0, 1)
+    vc = v.reshape(B, nchunks, c, H, dh).swapaxes(0, 1)
+    ic = i_gate.reshape(B, nchunks, c, H).swapaxes(0, 1)
+    fc = f_gate.reshape(B, nchunks, c, H).swapaxes(0, 1)
+
+    if state is None:
+        C0 = jnp.zeros((B, H, dh, dh), jnp.float32)
+        n0 = jnp.zeros((B, H, dh), jnp.float32)
+    else:
+        C0, n0 = state["C"], state["n"]
+
+    def chunk(carry, xs):
+        C_st, n_st = carry
+        qb, kb, vb, ib, fb = xs
+        fcum = jnp.cumsum(fb, axis=1)                      # (B,c,H)
+        # decay of the carried state to each position t: exp(fcum_t)
+        dec_in = jnp.exp(fcum)                             # (B,c,H)
+        # intra-chunk weights: exp(fcum_t - fcum_s + i_s), s <= t
+        logw = (fcum[:, :, None, :] - fcum[:, None, :, :]
+                + ib[:, None, :, :])                       # (B,t,s,H)
+        mask = (jnp.arange(c)[:, None] >= jnp.arange(c)[None, :]
+                )[None, :, :, None]
+        w = jnp.exp(jnp.where(mask, logw, -jnp.inf))
+        qf = qb.astype(jnp.float32)
+        kf = kb.astype(jnp.float32)
+        vf = vb.astype(jnp.float32)
+        # intra contribution: sum_s w[t,s] (q_t . k_s) v_s
+        scores = jnp.einsum("bthd,bshd->bths", qf, kf) * w.transpose(
+            0, 1, 3, 2)
+        intra = jnp.einsum("bths,bshd->bthd", scores, vf)
+        norm_intra = jnp.einsum(
+            "bths,bshd->bthd", scores, jnp.ones_like(vf[..., :1])
+        )[..., 0]
+        # inter: q_t . C_carry, decayed
+        inter = jnp.einsum("bthd,bhde->bthe", qf, C_st) \
+            * dec_in[..., None]
+        norm_inter = jnp.einsum("bthd,bhd->bth", qf, n_st) * dec_in
+        denom = jnp.maximum(jnp.abs(norm_intra + norm_inter), 1.0)
+        h = (intra + inter) / denom[..., None]
+        # state update to end of chunk
+        dec_all = jnp.exp(fcum[:, -1, None, :] - fcum)     # (B,c,H)
+        kv = jnp.einsum("bshd,bshe,bsh->bhde", kf, vf,
+                        dec_all * jnp.exp(ib))
+        C_new = C_st * jnp.exp(fcum[:, -1])[:, :, None, None] + kv
+        n_new = n_st * jnp.exp(fcum[:, -1])[:, :, None] + jnp.einsum(
+            "bshd,bsh->bhd", kf, dec_all * jnp.exp(ib))
+        return (C_new, n_new), h.astype(x.dtype)
+
+    (C_last, n_last), hs = jax.lax.scan(jax.checkpoint(chunk), (C0, n0),
+                                        (qc, kc, vc, ic, fc))
+    h = hs.swapaxes(0, 1).reshape(B, S, di)
+    out = (h * jax.nn.silu(z)) @ p["out_proj"]
+    new_state = {"C": C_last, "n": n_last} if state is not None else None
+    return out, new_state
+
+
+def init_mlstm_state(cfg: ModelConfig, batch: int) -> Dict:
+    di = cfg.d_model * max(cfg.ssm_expand, 1)
+    dh = di // cfg.n_heads
+    return {"C": jnp.zeros((batch, cfg.n_heads, dh, dh), jnp.float32),
+            "n": jnp.zeros((batch, cfg.n_heads, dh), jnp.float32)}
+
+
+def init_slstm(key, cfg: ModelConfig, dtype) -> Dict:
+    d = cfg.d_model
+    ks = jax.random.split(key, 3)
+    return {
+        "w_in": _dense_init(ks[0], (d, 4 * d), d, dtype),
+        "r_rec": _dense_init(ks[1], (d, 4 * d), d, dtype),
+        "out_proj": _dense_init(ks[2], (d, d), d, dtype),
+    }
+
+
+def slstm(x, p, cfg: ModelConfig, state: Optional[Dict] = None):
+    """sLSTM with exponential gating (sequential scan over time)."""
+    B, S, D = x.shape
+    pre = x @ p["w_in"]                                    # (B,S,4D)
+    if state is None:
+        h0 = jnp.zeros((B, D), jnp.float32)
+        c0 = jnp.zeros((B, D), jnp.float32)
+        n0 = jnp.ones((B, D), jnp.float32)
+        m0 = jnp.zeros((B, D), jnp.float32)
+    else:
+        h0, c0, n0, m0 = (state["h"], state["c"], state["n"], state["m"])
+
+    # the recurrent matrix is used at every time step inside the scan:
+    # force replication ONCE here, otherwise GSPMD reshards it per step
+    # (measured: 2.77 TB/step of collective-permute per sLSTM block —
+    # EXPERIMENTS §Perf hillclimb A)
+    r_rec = dctx.constrain(p["r_rec"].astype(jnp.float32), "replicated2d")
+
+    def step(carry, pre_t):
+        h, c, n, m = carry
+        g = pre_t.astype(jnp.float32) + h @ r_rec
+        zi, ii, fi, oi = jnp.split(g, 4, axis=-1)
+        z = jnp.tanh(zi)
+        o = jax.nn.sigmoid(oi)
+        log_f = jax.nn.log_sigmoid(fi)
+        m_new = jnp.maximum(log_f + m, ii)
+        i_e = jnp.exp(ii - m_new)
+        f_e = jnp.exp(log_f + m - m_new)
+        c_new = f_e * c + i_e * z
+        n_new = f_e * n + i_e
+        h_new = o * c_new / jnp.maximum(n_new, 1.0)
+        return (h_new, c_new, n_new, m_new), h_new.astype(x.dtype)
+
+    (h, c, n, m), hs = jax.lax.scan(step, (h0, c0, n0, m0),
+                                    pre.swapaxes(0, 1))
+    out = hs.swapaxes(0, 1) @ p["out_proj"]
+    new_state = ({"h": h, "c": c, "n": n, "m": m}
+                 if state is not None else None)
+    return out, new_state
+
+
+def init_slstm_state(cfg: ModelConfig, batch: int) -> Dict:
+    D = cfg.d_model
+    z = jnp.zeros((batch, D), jnp.float32)
+    return {"h": z, "c": z, "n": jnp.ones((batch, D), jnp.float32),
+            "m": z}

@@ -1,0 +1,73 @@
+"""Training step: vocab-shard-safe cross entropy, grad accumulation,
+jitted step builder.
+
+The CE avoids gathers on the vocab-sharded logits: ``sum(one_hot(labels)
+* logits)`` keeps every term local to its vocab shard (partial sums +
+one small all-reduce), so the (B, S, V) logits never replicate.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as M
+from repro.models.config import ModelConfig
+from repro.train import optimizer as opt
+
+
+def lm_loss(params, batch: Dict, cfg: ModelConfig) -> jnp.ndarray:
+    logits, _ = M.forward(params, batch["tokens"], cfg,
+                          extra={k: v for k, v in batch.items()
+                                 if k in ("patches", "frames")})
+    logits = logits.astype(jnp.float32)
+    labels = batch["labels"]
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    onehot = jax.nn.one_hot(labels, cfg.vocab, dtype=jnp.float32)
+    gold = jnp.sum(onehot * logits, axis=-1)
+    mask = (labels >= 0).astype(jnp.float32)
+    return jnp.sum((lse - gold) * mask) / jnp.maximum(mask.sum(), 1.0)
+
+
+def make_train_step(cfg: ModelConfig, hp: opt.AdamWConfig,
+                    grad_accum: int = 1, jit: bool = True):
+    """Returns step(params, opt_state, batch) -> (loss, params, opt_state).
+
+    ``grad_accum`` > 1 splits the batch on dim 0 into microbatches and
+    accumulates grads with a lax.scan — bounding activation memory at
+    1/grad_accum of the global batch.
+    """
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(lm_loss)(params, batch, cfg)
+
+    def step(params, opt_state, batch):
+        if grad_accum > 1:
+            def split(x):
+                b = x.shape[0]
+                return x.reshape(grad_accum, b // grad_accum, *x.shape[1:])
+            micro = jax.tree.map(split, batch)
+
+            def body(carry, mb):
+                loss_acc, g_acc = carry
+                loss, g = grads_of(params, mb)
+                return (loss_acc + loss,
+                        jax.tree.map(jnp.add, g_acc, g)), None
+
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss_sum, g_sum), _ = jax.lax.scan(
+                body, (jnp.zeros((), jnp.float32), zero), micro)
+            loss = loss_sum / grad_accum
+            grads = jax.tree.map(lambda g: g / grad_accum, g_sum)
+        else:
+            loss, grads = grads_of(params, batch)
+        new_params, new_opt = opt.update(grads, opt_state, params, hp)
+        return loss, new_params, new_opt
+
+    if jit:
+        return jax.jit(step, donate_argnums=(0, 1))
+    return step

@@ -1,0 +1,173 @@
+"""HitGraph / AccuGraph trace models: the paper's qualitative claims."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.algorithms.common import Problem
+from repro.core import accugraph, hitgraph, optimizations
+from repro.core.dram import ddr4_2400r
+from repro.core.hitgraph import CONTIGUOUS_ORDER
+from repro.graphs.datasets import instantiate
+from repro.graphs.generators import grid_road, rmat
+
+
+@pytest.fixture(scope="module")
+def g():
+    return rmat(11, 8, seed=5).undirected_view()
+
+
+HG = hitgraph.HitGraphConfig(partition_elements=1024)
+AG = accugraph.AccuGraphConfig(partition_elements=1024)
+
+
+class TestHitGraph:
+    def test_wcc_runs(self, g):
+        r = hitgraph.simulate(g, Problem.WCC, HG)
+        assert r.runtime_ns > 0 and r.iterations >= 2
+        assert r.total_requests > 0
+        assert 0 < r.row_hit_rate <= 1
+
+    def test_stationary_single_iteration(self, g):
+        r = hitgraph.simulate(g, Problem.PR, HG, fixed_iters=1)
+        assert r.iterations == 1
+        r2 = hitgraph.simulate(g, Problem.PR, HG, fixed_iters=2)
+        assert 1.5 * r.runtime_ns < r2.runtime_ns < 3 * r.runtime_ns
+
+    def test_spmv_pr_same_traffic(self, g):
+        """Paper Sect. 4.1: SpMV and PR 'result in the same simulation
+        performance'."""
+        a = hitgraph.simulate(g, Problem.SPMV, HG, fixed_iters=1)
+        b = hitgraph.simulate(g, Problem.PR, HG, fixed_iters=1)
+        assert abs(a.runtime_ns - b.runtime_ns) / b.runtime_ns < 0.05
+
+    def test_channels_speedup(self, g):
+        q = 256                                   # p=8 >> n_pes
+        one = hitgraph.HitGraphConfig(
+            n_pes=1, partition_elements=q, dram=dataclasses.replace(
+                hitgraph.ddr3_1600k(channels=1), order=CONTIGUOUS_ORDER))
+        four = hitgraph.HitGraphConfig(n_pes=4, partition_elements=q)
+        r1 = hitgraph.simulate(g, Problem.PR, one, fixed_iters=1)
+        r4 = hitgraph.simulate(g, Problem.PR, four, fixed_iters=1)
+        assert r1.runtime_ns > 2.0 * r4.runtime_ns
+
+    def test_partition_skipping_helps_road(self):
+        g = grid_road(64)                        # n=4096, p=16 at q=256
+        cfg = dataclasses.replace(HG, partition_elements=256)
+        on = hitgraph.simulate(g, Problem.WCC, cfg)
+        off = hitgraph.simulate(
+            g, Problem.WCC,
+            dataclasses.replace(cfg, partition_skipping=False))
+        assert on.runtime_ns < off.runtime_ns
+
+    def test_update_filtering_reduces_requests(self, g):
+        on = hitgraph.simulate(g, Problem.WCC, HG)
+        off = hitgraph.simulate(
+            g, Problem.WCC, dataclasses.replace(HG, update_filtering=False,
+                                                update_merging=False))
+        assert on.total_requests < off.total_requests
+
+
+class TestAccuGraph:
+    def test_wcc_runs(self, g):
+        r = accugraph.simulate(g, Problem.WCC, AG)
+        assert r.runtime_ns > 0 and r.iterations >= 2
+
+    def test_fewer_iterations_than_hitgraph(self, g):
+        ra = accugraph.simulate(g, Problem.WCC, AG)
+        rh = hitgraph.simulate(g, Problem.WCC, HG)
+        assert ra.iterations <= rh.iterations     # paper Fig. 12b
+
+    def test_bfs_8bit_fewer_value_lines(self, g):
+        r32 = accugraph.simulate(g, Problem.BFS,
+                                 dataclasses.replace(AG, value_bytes=4))
+        r8 = accugraph.simulate(g, Problem.BFS,
+                                dataclasses.replace(AG, value_bytes=1))
+        assert r8.total_requests < r32.total_requests
+
+    def test_stall_model_degrades_hot_banks(self):
+        """A graph whose neighbor ids all share one id-residue stalls the
+        vertex cache (paper Sect. 3.3)."""
+        n, m = 4096, 32768
+        rng = np.random.default_rng(0)
+        from repro.graphs.formats import Graph
+        hot = Graph(n, rng.integers(0, n // 16, m) * 16,
+                    rng.integers(0, n, m), name="hot")
+        cold = Graph(n, rng.integers(0, n, m), rng.integers(0, n, m),
+                     name="cold")
+        mh = accugraph.AccuGraphModel(hot, accugraph.AccuGraphConfig())
+        mc = accugraph.AccuGraphModel(cold, accugraph.AccuGraphConfig())
+        assert sum(mh._stall_cycles) > 2 * sum(mc._stall_cycles)
+
+    def test_degree_dependence(self):
+        """GREPS grows with average degree (paper Fig. 11)."""
+        lo = accugraph.simulate(rmat(11, 2, seed=1), Problem.WCC,
+                                accugraph.AccuGraphConfig())
+        hi = accugraph.simulate(rmat(11, 32, seed=1), Problem.WCC,
+                                accugraph.AccuGraphConfig())
+        assert hi.reps > 1.2 * lo.reps
+
+
+class TestOptimizations:
+    def test_never_regress(self, g):
+        """Paper Sect. 5: 'Overall we see no decrease in performance'."""
+        for problem in (Problem.WCC, Problem.BFS):
+            res = optimizations.run_study(
+                g, problem, accugraph.AccuGraphConfig(partition_elements=512),
+                variants=["prefetch_skip", "partition_skip", "both"])
+            base = res[0].report.runtime_ns
+            for r in res[1:]:
+                assert r.report.runtime_ns <= base * 1.01, r.variant
+
+    def test_prefetch_skip_single_partition(self):
+        """Single-partition graphs benefit from prefetch skipping
+        (paper Fig. 13, small graphs)."""
+        g1 = rmat(10, 4, seed=2).undirected_view()
+        res = optimizations.run_study(
+            g1, Problem.WCC, accugraph.AccuGraphConfig(),  # q = n -> p = 1
+            variants=["prefetch_skip", "partition_skip"])
+        by = {r.variant: r for r in res}
+        assert by["prefetch_skip"].speedup > 1.0
+        # partition skipping inapplicable at p=1 (nothing to skip while
+        # values still change)
+        assert by["partition_skip"].speedup == pytest.approx(1.0, rel=0.05)
+
+    def test_results_unchanged_by_optimizations(self, g):
+        from repro.algorithms import vertex_centric as vc
+        base = vc.run(g, Problem.WCC, q=512)
+        skip = vc.run(g, Problem.WCC, q=512, block_skipping=True)
+        np.testing.assert_array_equal(base.values, skip.values)
+
+
+class TestComparability:
+    def test_accugraph_wins_equal_config(self):
+        """Paper Fig. 12a: on equal DRAM/pipeline configs AccuGraph beats
+        HitGraph on all graphs (32- vs 64-bit edges + direct updates)."""
+        dram = dataclasses.replace(ddr4_2400r(channels=1, density="8Gb"),
+                                   order=CONTIGUOUS_ORDER)
+        q = 2048
+        hg = hitgraph.HitGraphConfig(n_pes=1, pipelines=16,
+                                     partition_elements=q, dram=dram)
+        ag = accugraph.AccuGraphConfig(partition_elements=q, dram=dram)
+        for abbr in ("sd", "db"):
+            gg = instantiate(abbr, scale=0.02, seed=0).undirected_view()
+            rh = hitgraph.simulate(gg, Problem.WCC, hg)
+            ra = accugraph.simulate(gg, Problem.WCC, ag)
+            assert ra.runtime_ns < rh.runtime_ns, abbr
+
+    def test_reps_hides_runtime(self):
+        """Paper Sect. 4.2 observation 1: REPS can rank systems opposite
+        to runtime (it multiplies by iterations)."""
+        g = rmat(11, 8, seed=9).undirected_view()
+        dram = dataclasses.replace(ddr4_2400r(channels=1, density="8Gb"),
+                                   order=CONTIGUOUS_ORDER)
+        rh = hitgraph.simulate(g, Problem.WCC, hitgraph.HitGraphConfig(
+            n_pes=1, pipelines=16, partition_elements=1024, dram=dram))
+        ra = accugraph.simulate(g, Problem.WCC, accugraph.AccuGraphConfig(
+            partition_elements=1024, dram=dram))
+        # runtime favors AccuGraph ...
+        assert ra.runtime_ns < rh.runtime_ns
+        # ... by more than the REPS ratio suggests (iterations inflate
+        # HitGraph's REPS)
+        assert (rh.runtime_ns / ra.runtime_ns) > 0.8 * (ra.reps / rh.reps)

@@ -1,0 +1,168 @@
+"""Graph algorithms: JAX engines vs numpy oracles (+ properties)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.algorithms import edge_centric as ec
+from repro.algorithms import reference as ref
+from repro.algorithms import vertex_centric as vc
+from repro.algorithms.common import INF32, Problem
+from repro.graphs.formats import CSR, CSRPartitions, EdgeListPartitions, Graph
+from repro.graphs.generators import chain, grid_road, rmat, uniform_random
+
+REFINF = np.iinfo(np.int64).max // 4
+
+
+def _norm(values32, ref64):
+    """Compare int32-sentinel results against int64-sentinel oracles."""
+    unreach_a = values32 >= INF32 // 2
+    unreach_b = ref64 >= REFINF // 2
+    return (np.array_equal(unreach_a, unreach_b)
+            and np.array_equal(values32[~unreach_a].astype(np.int64),
+                               ref64[~unreach_b]))
+
+
+@pytest.fixture(scope="module")
+def g_small():
+    return rmat(9, 6, seed=7)
+
+
+class TestEdgeCentric:
+    def test_wcc(self, g_small):
+        g = g_small.undirected_view()
+        out = ec.run(g, Problem.WCC)
+        np.testing.assert_array_equal(out.values, ref.wcc(g_small))
+
+    def test_sssp(self, g_small):
+        g = g_small.with_unit_weights()
+        out = ec.run(g, Problem.SSSP, root=0)
+        assert _norm(out.values, ref.sssp(g, 0))
+
+    def test_sssp_weighted(self):
+        rng = np.random.default_rng(3)
+        g = rmat(8, 4, seed=3)
+        g.weights = rng.integers(1, 10, g.m).astype(np.int32)
+        out = ec.run(g, Problem.SSSP, root=0)
+        assert _norm(out.values, ref.sssp(g, 0))
+
+    def test_pr_spmv(self, g_small):
+        out = ec.run(g_small, Problem.PR, fixed_iters=3)
+        np.testing.assert_allclose(out.values,
+                                   ref.pagerank(g_small, 3), rtol=1e-5)
+        gw = g_small.with_unit_weights()
+        out2 = ec.run(gw, Problem.SPMV, fixed_iters=2)
+        np.testing.assert_allclose(
+            out2.values, ref.spmv(gw, np.ones(gw.n), 2), rtol=1e-5)
+
+    def test_stats_shapes(self, g_small):
+        g = g_small.undirected_view()
+        out = ec.run(g, Problem.WCC)
+        assert len(out.per_iter) == out.iterations
+        assert all(s.changed.shape == (g.n,) for s in out.per_iter)
+        # last iteration has no changes only if loop ended by convergence
+        assert not out.per_iter[-1].changed.any() or out.iterations > 0
+
+
+class TestVertexCentric:
+    def test_wcc(self, g_small):
+        g = g_small.undirected_view()
+        out = vc.run(g, Problem.WCC, q=200)
+        np.testing.assert_array_equal(out.values, ref.wcc(g_small))
+
+    def test_bfs(self, g_small):
+        out = vc.run(g_small, Problem.BFS, root=0)
+        assert _norm(out.values, ref.bfs(g_small, 0))
+
+    def test_async_fewer_iterations(self):
+        """AccuGraph's direct value application converges in <= iterations
+        of the synchronous edge-centric engine (paper Fig. 12b)."""
+        for seed in range(3):
+            g = rmat(9, 4, seed=seed).undirected_view()
+            a = vc.run(g, Problem.WCC, q=g.n // 3)
+            b = ec.run(g, Problem.WCC)
+            assert a.iterations <= b.iterations
+
+    def test_chain_single_iteration(self):
+        """Ascending chain: the asynchronous sweep solves BFS in one
+        iteration (plus the convergence check) — the extreme case of
+        within-block propagation."""
+        g = chain(500)
+        out = vc.run(g, Problem.BFS, root=0)
+        assert out.iterations <= 2
+        assert int(out.values[-1]) == 499
+
+    def test_block_skipping_exact(self, g_small):
+        g = g_small.undirected_view()
+        base = vc.run(g, Problem.WCC, q=150)
+        skip = vc.run(g, Problem.WCC, q=150, block_skipping=True)
+        np.testing.assert_array_equal(base.values, skip.values)
+        skipped = sum(
+            1 for s in skip.per_iter
+            for b in (s.changed_per_block or []) if b is None)
+        assert skipped > 0                       # it actually skipped
+
+    def test_pr(self, g_small):
+        out = vc.run(g_small, Problem.PR, fixed_iters=2)
+        np.testing.assert_allclose(out.values,
+                                   ref.pagerank(g_small, 2), rtol=1e-5)
+
+
+class TestProperties:
+    @settings(max_examples=15, deadline=None)
+    @given(seed=st.integers(0, 10_000), scale=st.integers(5, 8),
+           deg=st.integers(1, 8))
+    def test_engines_agree_wcc(self, seed, scale, deg):
+        g = rmat(scale, deg, seed=seed).undirected_view()
+        a = ec.run(g, Problem.WCC).values
+        b = vc.run(g, Problem.WCC, q=max(g.n // 3, 1)).values
+        np.testing.assert_array_equal(a, b)
+
+    @settings(max_examples=15, deadline=None)
+    @given(seed=st.integers(0, 10_000), q_frac=st.sampled_from([1, 2, 5]))
+    def test_partitioning_invariant(self, seed, q_frac):
+        """Vertex-centric result is independent of the partition size."""
+        g = uniform_random(200, 800, seed=seed)
+        full = vc.run(g, Problem.BFS, root=0, q=g.n).values
+        parted = vc.run(g, Problem.BFS, root=0, q=g.n // q_frac).values
+        np.testing.assert_array_equal(full, parted)
+
+    def test_grid_road_high_diameter(self):
+        g = grid_road(24)
+        out = ec.run(g, Problem.WCC)
+        # grid is connected: single component
+        assert (out.values == 0).all()
+        assert out.iterations > 10               # high-diameter regime
+
+
+class TestFormats:
+    def test_csr_roundtrip(self, g_small):
+        csr = CSR.from_graph(g_small)
+        assert csr.m == g_small.m
+        deg = csr.degrees()
+        np.testing.assert_array_equal(deg, g_small.out_degrees())
+        # neighbors of vertex with max degree match
+        v = int(np.argmax(deg))
+        nbrs = np.sort(csr.neighbors[csr.pointers[v]:csr.pointers[v + 1]])
+        np.testing.assert_array_equal(
+            nbrs, np.sort(g_small.dst[g_small.src == v]))
+
+    def test_edge_partitions_cover(self, g_small):
+        parts = EdgeListPartitions.build(g_small, 100)
+        total = sum(len(ix) for ix in parts.edge_index)
+        assert total == g_small.m
+        for k in range(parts.p):
+            s, e = parts.intervals[k]
+            src, dst = parts.edges_in(k)
+            assert ((src >= s) & (src < e)).all()
+            # dst-sorted within partition (HitGraph's update merging)
+            assert (np.diff(dst) >= 0).all()
+
+    def test_csr_partitions_cover(self, g_small):
+        parts = CSRPartitions.build(g_small, 97)
+        total = sum(b.m for b in parts.blocks)
+        assert total == g_small.m
+        for k, blk in enumerate(parts.blocks):
+            s, e = parts.intervals[k]
+            if blk.m:
+                assert ((blk.neighbors >= s) & (blk.neighbors < e)).all()

@@ -1,0 +1,128 @@
+"""Per-architecture smoke tests: reduced same-family configs, one
+forward + one train step + prefill/decode on CPU; shapes + finiteness."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config
+from repro.models import model as M
+from repro.train import data as D
+from repro.train import optimizer as opt
+from repro.train.step import lm_loss, make_train_step
+
+
+def _extra(cfg, B, rng):
+    extra = {}
+    if cfg.family == "vlm":
+        extra["patches"] = jnp.asarray(
+            rng.normal(size=(B, cfg.img_tokens, cfg.d_model)),
+            jnp.float32)
+    if cfg.family == "audio":
+        extra["frames"] = jnp.asarray(
+            rng.normal(size=(B, cfg.enc_frames, cfg.d_model)),
+            jnp.float32)
+    return extra
+
+
+@pytest.fixture(scope="module")
+def key():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+class TestArchSmoke:
+    def test_forward_shapes_and_finite(self, arch, key):
+        cfg = get_config(arch, smoke=True)
+        params = M.init_params(key, cfg)
+        B, S = 2, 16
+        rng = np.random.default_rng(0)
+        tokens = jax.random.randint(key, (B, S), 0, cfg.vocab)
+        logits, _ = M.forward(params, tokens, cfg, extra=_extra(cfg, B, rng))
+        assert logits.shape == (B, S, cfg.vocab)
+        assert bool(jnp.isfinite(logits.astype(jnp.float32)).all())
+
+    def test_train_step(self, arch, key):
+        cfg = get_config(arch, smoke=True)
+        params = M.init_params(key, cfg)
+        hp = opt.AdamWConfig(lr=1e-3, warmup_steps=1, total_steps=10)
+        step = make_train_step(cfg, hp, jit=True)
+        dc = D.DataConfig(seq_len=16, global_batch=2, seed=0)
+        batch = {k: jnp.asarray(v)
+                 for k, v in D.make_batch(cfg, dc, 0).items()}
+        opt_state = opt.init(params)
+        loss1, params, opt_state = step(params, opt_state, batch)
+        batch2 = {k: jnp.asarray(v)
+                  for k, v in D.make_batch(cfg, dc, 1).items()}
+        loss2, params, opt_state = step(params, opt_state, batch2)
+        assert np.isfinite(float(loss1)) and np.isfinite(float(loss2))
+        assert float(loss1) > 0
+
+    def test_prefill_decode(self, arch, key):
+        cfg = get_config(arch, smoke=True)
+        params = M.init_params(key, cfg)
+        B, S = 2, 8
+        rng = np.random.default_rng(1)
+        tokens = jax.random.randint(key, (B, S), 0, cfg.vocab)
+        extra = _extra(cfg, B, rng)
+        logits, cache = M.prefill(params, tokens, cfg, extra=extra)
+        assert logits.shape == (B, 1, cfg.vocab)
+        tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+        for _ in range(3):
+            logits, cache = M.decode_step(params, cache, tok, cfg)
+            assert logits.shape == (B, 1, cfg.vocab)
+            assert bool(jnp.isfinite(logits.astype(jnp.float32)).all())
+            tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+
+
+def test_decode_matches_forward_dense(key):
+    """Greedy decode logits == forward logits at the same positions
+    (cache correctness; dense family)."""
+    cfg = get_config("qwen3_0_6b", smoke=True)
+    params = M.init_params(key, cfg)
+    B, S = 1, 12
+    tokens = jax.random.randint(key, (B, S), 0, cfg.vocab)
+    full_logits, _ = M.forward(params, tokens, cfg)
+    pre_logits, cache = M.prefill(params, tokens[:, :S - 1], cfg)
+    np.testing.assert_allclose(
+        np.asarray(pre_logits[:, -1], np.float32),
+        np.asarray(full_logits[:, S - 2], np.float32), rtol=2e-2,
+        atol=2e-2)
+    step_logits, _ = M.decode_step(params, cache, tokens[:, S - 1:S], cfg)
+    np.testing.assert_allclose(
+        np.asarray(step_logits[:, 0], np.float32),
+        np.asarray(full_logits[:, S - 1], np.float32), rtol=2e-2,
+        atol=2e-2)
+
+
+def test_loss_decreases_tiny_model(key):
+    cfg = get_config("qwen3_0_6b", smoke=True)
+    params = M.init_params(key, cfg)
+    hp = opt.AdamWConfig(lr=3e-3, warmup_steps=2, total_steps=60)
+    step = make_train_step(cfg, hp, jit=True)
+    dc = D.DataConfig(seq_len=32, global_batch=4, seed=0)
+    opt_state = opt.init(params)
+    losses = []
+    for i in range(30):
+        batch = {k: jnp.asarray(v)
+                 for k, v in D.make_batch(cfg, dc, i).items()}
+        loss, params, opt_state = step(params, opt_state, batch)
+        losses.append(float(loss))
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.2, losses
+
+
+def test_grad_accum_equivalence(key):
+    cfg = get_config("gemma_2b", smoke=True)
+    params = M.init_params(key, cfg)
+    hp = opt.AdamWConfig(lr=1e-3, warmup_steps=1, total_steps=10)
+    dc = D.DataConfig(seq_len=16, global_batch=4, seed=3)
+    batch = {k: jnp.asarray(v) for k, v in D.make_batch(cfg, dc, 0).items()}
+    s1 = make_train_step(cfg, hp, grad_accum=1, jit=True)
+    s2 = make_train_step(cfg, hp, grad_accum=2, jit=True)
+    copy = lambda t: jax.tree.map(jnp.copy, t)
+    l1, p1, _ = s1(copy(params), opt.init(params), batch)
+    l2, p2, _ = s2(copy(params), opt.init(params), batch)
+    assert abs(float(l1) - float(l2)) < 5e-2
+    d = jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(a - b))), p1, p2)
+    assert max(jax.tree.leaves(d)) < 5e-2

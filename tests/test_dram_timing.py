@@ -1,0 +1,129 @@
+"""DRAM timing semantics: oracle properties + vectorized equivalence."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.dram import (CACHE_LINE_BYTES, ddr3_1600k, ddr4_2400r, hbm2,
+                             hbm2e, PRESETS)
+from repro.core.timing import ROW_CONFLICT, ROW_HIT, simulate_trace
+from repro.core.trace import Trace, bulk_issue
+from repro.core.vectorized import simulate_trace_jax
+
+
+def _mk(lines, issue=None):
+    lines = np.asarray(lines, dtype=np.int64)
+    if issue is None:
+        issue = bulk_issue(len(lines), 0)
+    return Trace(lines, np.zeros(len(lines), bool), issue)
+
+
+class TestOracle:
+    def test_sequential_near_peak(self):
+        cfg = ddr3_1600k()
+        tr = _mk(np.arange(20000))
+        r = simulate_trace(tr.line_addr, tr.issue, cfg)
+        assert r.bandwidth_fraction > 0.95
+        assert r.hit_rate > 0.95
+
+    def test_random_degrades(self):
+        cfg = ddr4_2400r()
+        rng = np.random.default_rng(0)
+        tr = _mk(rng.integers(0, 1 << 22, 20000))
+        r = simulate_trace(tr.line_addr, tr.issue, cfg)
+        assert r.bandwidth_fraction < 0.5          # the paper's phenomenon
+        assert r.row_conflicts > 0.9 * r.total_requests
+
+    def test_same_row_pingpong_worst_case(self):
+        """Alternating rows in ONE bank: every access is a conflict."""
+        cfg = ddr4_2400r()
+        lanes = cfg.org.lines_per_row * cfg.banks_per_channel
+        a, b = 0, lanes                      # same bank, different row
+        tr = _mk(np.array([a, b] * 1000))
+        r = simulate_trace(tr.line_addr, tr.issue, cfg)
+        assert r.row_conflicts >= 2 * 1000 - 2
+        t = cfg.timing
+        per_req_min = t.tRAS + t.tRP         # ACT spacing dominates
+        assert r.cycles >= (2000 - 2) * min(per_req_min,
+                                            t.tRP + t.tRCD + t.tBL)
+
+    def test_channel_parallelism(self):
+        """4 channels serve an interleaved stream ~4x faster than 1."""
+        tr = _mk(np.arange(16000))
+        r4 = simulate_trace(tr.line_addr, tr.issue, ddr3_1600k(channels=4))
+        r1 = simulate_trace(tr.line_addr, tr.issue, ddr3_1600k(channels=1))
+        assert r1.cycles > 3.5 * r4.cycles
+
+    def test_issue_lower_bound_respected(self):
+        cfg = ddr4_2400r()
+        issue = np.full(10, 5000, dtype=np.int64)
+        tr = _mk(np.arange(10), issue)
+        r = simulate_trace(tr.line_addr, tr.issue, cfg, keep_finish=True)
+        assert (r.finish > 5000).all()
+
+    def test_capacity_and_peak(self):
+        cfg = ddr4_2400r(density="8Gb")
+        assert cfg.capacity_bytes == 16 * 65536 * 8192   # 8 GiB
+        assert abs(cfg.peak_gbps - 19.2) < 0.01
+        assert abs(ddr3_1600k().peak_gbps - 51.2) < 0.01
+        assert abs(hbm2e(16).peak_gbps - 819.2) < 0.1
+
+    def test_decode_roundtrip(self):
+        cfg = ddr3_1600k()
+        lines = np.arange(100000, dtype=np.int64)
+        comps = cfg.decode_lines(lines)
+        sizes = cfg.component_sizes()
+        # reconstruct per the LSB-first order
+        rebuilt = np.zeros_like(lines)
+        mult = 1
+        for comp in cfg.order:
+            rebuilt += comps[comp] * mult
+            mult *= sizes[comp]
+        np.testing.assert_array_equal(rebuilt, lines)
+
+
+class TestVectorizedEquivalence:
+    @pytest.mark.parametrize("preset", list(PRESETS))
+    def test_bit_exact_random(self, preset):
+        cfg = PRESETS[preset]()
+        rng = np.random.default_rng(42)
+        n = 3000
+        lines = rng.integers(0, 1 << 20, n)
+        issue = np.sort(rng.integers(0, 4 * n, n))
+        tr = Trace(lines, np.zeros(n, bool), issue)
+        a = simulate_trace(tr.line_addr, tr.issue, cfg, keep_finish=True)
+        b = simulate_trace_jax(tr, cfg, keep_finish=True)
+        np.testing.assert_array_equal(a.finish, b.finish)
+        assert a.row_hits == b.row_hits
+        assert a.row_conflicts == b.row_conflicts
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        n=st.integers(1, 400),
+        span=st.sampled_from([1 << 8, 1 << 14, 1 << 20]),
+    )
+    def test_property_equivalence(self, seed, n, span):
+        cfg = ddr4_2400r()
+        rng = np.random.default_rng(seed)
+        lines = rng.integers(0, span, n)
+        issue = np.sort(rng.integers(0, 8 * n, n))
+        tr = Trace(lines, np.zeros(n, bool), issue)
+        a = simulate_trace(tr.line_addr, tr.issue, cfg, keep_finish=True)
+        b = simulate_trace_jax(tr, cfg, keep_finish=True)
+        np.testing.assert_array_equal(a.finish, b.finish)
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_monotone_in_issue(self, seed):
+        """Delaying issues can never reduce the makespan."""
+        cfg = ddr3_1600k(channels=2)
+        rng = np.random.default_rng(seed)
+        n = 200
+        lines = rng.integers(0, 1 << 16, n)
+        tr1 = Trace(lines, np.zeros(n, bool), bulk_issue(n, 0))
+        tr2 = Trace(lines, np.zeros(n, bool),
+                    np.sort(rng.integers(0, 1000, n)))
+        r1 = simulate_trace_jax(tr1, cfg)
+        r2 = simulate_trace_jax(tr2, cfg)
+        assert r2.cycles >= r1.cycles

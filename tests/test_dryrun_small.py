@@ -1,0 +1,100 @@
+"""Dry-run machinery test on a small virtual-device mesh (subprocess, so
+the 1-device default for all other tests is preserved)."""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json, dataclasses
+    import jax
+    from repro.configs import get_config
+    from repro.distributed import context as dctx, sharding as shd
+    from repro.launch.dryrun import _build_fn_and_args
+    from repro.launch.hlo_parse import analyze_collectives
+
+    mesh = jax.make_mesh((4, 2), ("data", "model"))
+    cfg = dataclasses.replace(
+        get_config("qwen3_0_6b", smoke=True),
+        n_layers=2, vocab=512)
+    ctx = shd.make_ctx(cfg, mesh, False)
+    out = {}
+    with dctx.use(ctx):
+        import repro.launch.specs as SP
+        SP.SHAPE_SPECS = dict(SP.SHAPE_SPECS)
+        SP.SHAPE_SPECS["train_4k"] = SP.ShapeSpec("train_4k", "train",
+                                                  128, 8)
+        SP.SHAPE_SPECS["decode_32k"] = SP.ShapeSpec("decode_32k",
+                                                    "decode", 256, 8)
+        for shape in ("train_4k", "decode_32k"):
+            fn, args, in_sh, out_sh = _build_fn_and_args(
+                cfg, shape, mesh, False)
+            jt = (jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh)
+                  if out_sh is not None else
+                  jax.jit(fn, in_shardings=in_sh))
+            compiled = jt.lower(*args).compile()
+            mem = compiled.memory_analysis()
+            coll, _ = analyze_collectives(compiled.as_text())
+            out[shape] = {
+                "temp": int(mem.temp_size_in_bytes),
+                "coll": int(sum(coll.values())),
+            }
+    print(json.dumps(out))
+""")
+
+
+@pytest.mark.slow
+def test_dryrun_lowers_on_8_devices():
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+    res = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert res.returncode == 0, res.stderr[-2000:]
+    out = json.loads(res.stdout.strip().splitlines()[-1])
+    assert out["train_4k"]["temp"] > 0
+    assert out["train_4k"]["coll"] > 0       # FSDP/TP collectives present
+    assert out["decode_32k"]["temp"] >= 0
+
+
+def test_hlo_parser_units():
+    from repro.launch.hlo_parse import (_result_bytes,
+                                        split_computations)
+    line = ("%all-gather.1 = bf16[16,1024]{1,0} all-gather(%p), "
+            "dimensions={0}")
+    assert _result_bytes(line) == 16 * 1024 * 2
+    hlo = ("comp_a (x: f32[2]) -> f32[2] {\n"
+           "  %y = f32[2]{0} all-reduce(%x), to_apply=%add\n"
+           "}\n")
+    comps = split_computations(hlo)
+    assert "comp_a" in comps
+
+
+def test_costmodel_sanity():
+    from repro.configs import get_config
+    from repro.launch.costmodel import cell_cost
+    cfg = get_config("qwen3_0_6b")
+    train = cell_cost(cfg, "train_4k", 256)
+    # 6ND for 0.6B params x 1.05M tokens ~ 3.75e15
+    assert 1e15 < train.model_flops < 1e16
+    assert train.total_flops >= train.model_flops
+    dec = cell_cost(cfg, "decode_32k", 256)
+    assert dec.total_flops < train.total_flops
+    assert dec.hbm_bytes_per_chip > 0
+
+
+def test_roofline_rows():
+    from repro.configs import get_config
+    from repro.launch.roofline import analyze_cell, render_table
+    cfg = get_config("command_r_35b")
+    row = analyze_cell(cfg, "train_4k", "16x16", 256, 5e9)
+    assert row.dominant in ("compute", "memory", "collective")
+    assert 0 < row.roofline_fraction <= 1.0
+    table = render_table([row])
+    assert "command-r-35b" in table
