@@ -1,39 +1,36 @@
 """E7 (paper §7 future work): DRAM-type exploration — the same AccuGraph
-logic on DDR4-2400R vs HBM2 vs HBM2E, and HitGraph on DDR3 vs HBM2."""
+logic on DDR4-2400R vs HBM2 vs HBM2E, via the ``repro.sim`` memory axis
+(contiguous placement on all three, matching the accelerators' layout)."""
 
 from __future__ import annotations
 
-import dataclasses
-import time
 from typing import Dict, List
 
 from benchmarks import common
 from repro.algorithms.common import Problem
-from repro.core import accugraph, hitgraph
-from repro.core.dram import ddr4_2400r, hbm2, hbm2e
-from repro.core.hitgraph import CONTIGUOUS_ORDER
+from repro.sim import MemoryConfig, sweep
 
 
 def run(scale: float = common.SCALE) -> List[Dict]:
-    rows = []
     g = common.graph("lj", scale, undirected=True)
-    drams = {
-        "ddr4_2400r": ddr4_2400r(channels=1),
-        "hbm2": hbm2(channels=8),
-        "hbm2e": hbm2e(channels=16),
+    cfg = common.accugraph_cfg(scale=scale, abbr="lj", q_full=1_700_000)
+    memories = {
+        "ddr4_2400r": MemoryConfig(kind="ddr4"),
+        "hbm2": MemoryConfig(kind="hbm2", interleaving="contiguous"),
+        "hbm2e": MemoryConfig(kind="hbm2e", interleaving="contiguous"),
     }
-    for name, dram in drams.items():
-        dram = dataclasses.replace(dram, order=CONTIGUOUS_ORDER)
-        cfg = accugraph.AccuGraphConfig(
-            partition_elements=common.scaled_q(1_700_000, "lj", scale),
-            dram=dram)
-        t0 = time.perf_counter()
-        rep = accugraph.simulate(g, Problem.WCC, cfg)
+    results = sweep(graphs=[g], problems=[Problem.WCC],
+                    accelerators=["accugraph"],
+                    memories=list(memories.values()),
+                    configs={"accugraph": cfg})
+    rows = []
+    for name, res in zip(memories, results):
         rows.append({
             "bench": "dram_types", "system": "accugraph", "dram": name,
-            "runtime_ms": rep.runtime_ms, "greps": rep.reps / 1e9,
-            "peak_gbps": dram.peak_gbps,
-            "wall_s": time.perf_counter() - t0,
+            "runtime_ms": res.report.runtime_ms,
+            "greps": res.report.reps / 1e9,
+            "peak_gbps": memories[name].resolve().peak_gbps,
+            "wall_s": res.wall_s,
         })
     return rows
 

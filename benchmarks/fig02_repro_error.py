@@ -1,7 +1,10 @@
 """E6 (paper Fig. 2b): percentage-error summary across accelerators and
 problems — our simulated numbers vs the (approximate, see
 ground_truth.py) paper anchors, grouped the way Fig. 2b groups them.
-SSSP is reported separately, as the paper does (root-dependence)."""
+SSSP is reported separately, as the paper does (root-dependence).
+
+Rides on the fig09/fig10 sweeps, which run through the unified
+``repro.sim`` API."""
 
 from __future__ import annotations
 

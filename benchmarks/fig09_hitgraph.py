@@ -1,21 +1,22 @@
 """E1 (paper Fig. 9): HitGraph runtimes for SpMV / PR / SSSP / WCC.
 
-Scaled stand-ins; runtimes are compared to the (approximate) Fig. 9
-anchors linearly scaled by the edge-count ratio — see
-benchmarks/ground_truth.py for the provenance caveat.
+Driven through the unified ``repro.sim`` API: one ``sweep()`` call over
+the (dataset x problem) case list.  Scaled stand-ins; runtimes are
+compared to the (approximate) Fig. 9 anchors linearly scaled by the
+edge-count ratio — see benchmarks/ground_truth.py for the provenance
+caveat.
 """
 
 from __future__ import annotations
 
-import time
 from typing import Dict, List
 
 import numpy as np
 
 from benchmarks import common, ground_truth as GT
 from repro.algorithms.common import Problem
-from repro.core import hitgraph
 from repro.graphs.datasets import HITGRAPH_SETS, TABLE1
+from repro.sim import SweepCase, sweep
 
 PROBLEMS = {
     "spmv": (Problem.SPMV, 1),
@@ -29,32 +30,35 @@ ROOT_SEED = 3483584297      # the paper's seed footnote
 
 def run(scale: float = common.SCALE, datasets=None) -> List[Dict]:
     datasets = datasets or HITGRAPH_SETS
-    rows = []
+    cases = []
     for abbr in datasets:
-        undirected = PROBLEMS  # wcc uses undirected view
         cfg = common.hitgraph_cfg(abbr, scale)
         for pname, (prob, iters) in PROBLEMS.items():
             g = common.graph(abbr, scale,
                              undirected=(prob == Problem.WCC))
             rng = np.random.default_rng(ROOT_SEED)
             root = int(rng.integers(0, g.n))
-            t0 = time.perf_counter()
-            rep = hitgraph.simulate(g, prob, cfg, root=root,
-                                    fixed_iters=iters)
-            wall = time.perf_counter() - t0
-            gt_full = GT.HITGRAPH_RUNTIME_MS[pname].get(abbr)
-            scale_ratio = g.m / TABLE1[abbr].edges
-            gt_scaled = gt_full * scale_ratio if gt_full else None
-            rows.append({
-                "bench": "fig09", "dataset": abbr, "problem": pname,
-                "runtime_ms": rep.runtime_ms,
-                "iterations": rep.iterations,
-                "gt_scaled_ms": gt_scaled,
-                "pct_error": (common.pct_error(rep.runtime_ms, gt_scaled)
-                              if gt_scaled else None),
-                "row_hit_rate": rep.row_hit_rate,
-                "wall_s": wall,
-            })
+            cases.append((abbr, pname, SweepCase(
+                graph=g, problem=prob, accelerator="hitgraph",
+                config=cfg, root=root, fixed_iters=iters)))
+
+    results = sweep(cases=[c for _, _, c in cases])
+    rows = []
+    for (abbr, pname, _), res in zip(cases, results):
+        rep = res.report
+        gt_full = GT.HITGRAPH_RUNTIME_MS[pname].get(abbr)
+        scale_ratio = res.case.graph.m / TABLE1[abbr].edges
+        gt_scaled = gt_full * scale_ratio if gt_full else None
+        rows.append({
+            "bench": "fig09", "dataset": abbr, "problem": pname,
+            "runtime_ms": rep.runtime_ms,
+            "iterations": rep.iterations,
+            "gt_scaled_ms": gt_scaled,
+            "pct_error": (common.pct_error(rep.runtime_ms, gt_scaled)
+                          if gt_scaled else None),
+            "row_hit_rate": rep.row_hit_rate,
+            "wall_s": res.wall_s,
+        })
     return rows
 
 

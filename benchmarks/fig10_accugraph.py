@@ -1,5 +1,6 @@
 """E2 (paper Fig. 10): AccuGraph GREPS for BFS / PR / WCC.
 
+Driven through the unified ``repro.sim`` API (one ``sweep()`` call).
 GREPS is size-normalized, so scaled stand-ins compare directly against
 the Fig. 10 anchors (provenance caveat in ground_truth.py).
 Configuration per the paper: BFS uses 8-bit values with everything in
@@ -8,18 +9,17 @@ BRAM; PR/WCC on lj/or use partition size 1.7M (scaled).
 
 from __future__ import annotations
 
-import time
 from typing import Dict, List
 
 from benchmarks import common, ground_truth as GT
 from repro.algorithms.common import Problem
-from repro.core import accugraph
 from repro.graphs.datasets import ACCUGRAPH_SETS
+from repro.sim import SweepCase, sweep
 
 
 def run(scale: float = common.SCALE, datasets=None) -> List[Dict]:
     datasets = datasets or ACCUGRAPH_SETS
-    rows = []
+    cases = []
     for abbr in datasets:
         for pname, prob, vb in (("bfs", Problem.BFS, 1),
                                 ("pr", Problem.PR, 4),
@@ -30,21 +30,25 @@ def run(scale: float = common.SCALE, datasets=None) -> List[Dict]:
                                        q_full=q_full)
             g = common.graph(abbr, scale,
                              undirected=(prob == Problem.WCC))
-            t0 = time.perf_counter()
-            rep = accugraph.simulate(
-                g, prob, cfg,
-                fixed_iters=1 if prob == Problem.PR else None)
-            wall = time.perf_counter() - t0
-            gt = GT.ACCUGRAPH_GREPS[pname].get(abbr)
-            rows.append({
-                "bench": "fig10", "dataset": abbr, "problem": pname,
-                "greps": rep.reps / 1e9,
-                "gt_greps": gt,
-                "pct_error": (common.pct_error(rep.reps / 1e9, gt)
-                              if gt else None),
-                "iterations": rep.iterations,
-                "wall_s": wall,
-            })
+            cases.append((abbr, pname, SweepCase(
+                graph=g, problem=prob, accelerator="accugraph",
+                config=cfg,
+                fixed_iters=1 if prob == Problem.PR else None)))
+
+    results = sweep(cases=[c for _, _, c in cases])
+    rows = []
+    for (abbr, pname, _), res in zip(cases, results):
+        rep = res.report
+        gt = GT.ACCUGRAPH_GREPS[pname].get(abbr)
+        rows.append({
+            "bench": "fig10", "dataset": abbr, "problem": pname,
+            "greps": rep.reps / 1e9,
+            "gt_greps": gt,
+            "pct_error": (common.pct_error(rep.reps / 1e9, gt)
+                          if gt else None),
+            "iterations": rep.iterations,
+            "wall_s": res.wall_s,
+        })
     return rows
 
 

@@ -1,28 +1,31 @@
-"""E3 (paper Fig. 11): AccuGraph GREPS vs average degree (log shape)."""
+"""E3 (paper Fig. 11): AccuGraph GREPS vs average degree (log shape).
+
+One ``repro.sim.sweep()`` over RMAT instances of increasing density.
+"""
 
 from __future__ import annotations
 
-import math
-import time
 from typing import Dict, List
 
 from repro.algorithms.common import Problem
-from repro.core import accugraph
 from repro.graphs.generators import rmat
+from repro.sim import SweepCase, sweep
 
 
 def run(scale_log2: int = 12) -> List[Dict]:
+    degrees = (2, 4, 8, 16, 32, 64)
+    results = sweep(cases=[
+        SweepCase(graph=rmat(scale_log2, deg, seed=2), problem=Problem.WCC,
+                  accelerator="accugraph")
+        for deg in degrees
+    ])
     rows = []
-    for deg in (2, 4, 8, 16, 32, 64):
-        g = rmat(scale_log2, deg, seed=2)
-        t0 = time.perf_counter()
-        rep = accugraph.simulate(g, Problem.WCC,
-                                 accugraph.AccuGraphConfig())
+    for deg, res in zip(degrees, results):
         rows.append({
             "bench": "fig11", "avg_degree": deg,
-            "greps": rep.reps / 1e9,
-            "iterations": rep.iterations,
-            "wall_s": time.perf_counter() - t0,
+            "greps": res.report.reps / 1e9,
+            "iterations": res.report.iterations,
+            "wall_s": res.wall_s,
         })
     # log-shape check: greps increase, concave in log(deg)
     return rows

@@ -2,40 +2,48 @@
 
 WCC on unweighted, undirected stand-ins; DDR4-2400R 1ch 8Gb for both;
 16 edges/cycle; partition size 1,024,000 (count-preserving scaled).
-Reports runtime ratio (Fig. 12a) and iteration counts (Fig. 12b), plus
-the REPS-vs-runtime inversion the paper calls out.
+ONE ``repro.sim.sweep()`` call drives the whole study — both
+accelerators across all datasets — with the WCC executions shared where
+the algorithm engine coincides.  Reports runtime ratio (Fig. 12a) and
+iteration counts (Fig. 12b), plus the REPS-vs-runtime inversion the
+paper calls out.
 """
 
 from __future__ import annotations
 
-import time
 from typing import Dict, List
 
 from benchmarks import common
 from repro.algorithms.common import Problem
-from repro.core import accugraph, hitgraph
 from repro.graphs.datasets import COMPARABILITY_SETS
+from repro.sim import SweepCase, sweep
 
 
 def run(scale: float = common.SCALE, datasets=None) -> List[Dict]:
     datasets = datasets or COMPARABILITY_SETS
-    rows = []
+    cases: List[SweepCase] = []
     for abbr in datasets:
         hg_cfg, ag_cfg = common.comparability_cfgs(abbr, scale)
         g = common.graph(abbr, scale, undirected=True)
-        t0 = time.perf_counter()
-        rh = hitgraph.simulate(g, Problem.WCC, hg_cfg)
-        ra = accugraph.simulate(g, Problem.WCC, ag_cfg)
+        cases.append(SweepCase(graph=g, problem=Problem.WCC,
+                               accelerator="hitgraph", config=hg_cfg))
+        cases.append(SweepCase(graph=g, problem=Problem.WCC,
+                               accelerator="accugraph", config=ag_cfg))
+
+    results = sweep(cases=cases)             # the whole figure, one call
+    rows = []
+    for abbr, (rh, ra) in zip(datasets,
+                              zip(results[0::2], results[1::2])):
         rows.append({
             "bench": "fig12", "dataset": abbr,
-            "hitgraph_ms": rh.runtime_ms,
-            "accugraph_ms": ra.runtime_ms,
-            "runtime_ratio": rh.runtime_ns / ra.runtime_ns,
-            "hitgraph_iters": rh.iterations,
-            "accugraph_iters": ra.iterations,
-            "hitgraph_reps": rh.reps,
-            "accugraph_reps": ra.reps,
-            "wall_s": time.perf_counter() - t0,
+            "hitgraph_ms": rh.report.runtime_ms,
+            "accugraph_ms": ra.report.runtime_ms,
+            "runtime_ratio": rh.report.runtime_ns / ra.report.runtime_ns,
+            "hitgraph_iters": rh.report.iterations,
+            "accugraph_iters": ra.report.iterations,
+            "hitgraph_reps": rh.report.reps,
+            "accugraph_reps": ra.report.reps,
+            "wall_s": rh.wall_s + ra.wall_s,
         })
     return rows
 

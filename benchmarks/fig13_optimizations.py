@@ -1,40 +1,54 @@
 """E5 (paper Fig. 13): prefetch / partition skipping speedups over the
 AccuGraph baseline (BFS and WCC; PR noted as partition-skip-inapplicable).
-Includes the beyond-paper HBM variant (paper §7 future work)."""
+Includes the beyond-paper HBM variant (paper §7 future work).
+
+One ``repro.sim.sweep()`` over the (dataset x problem x variant) grid;
+the variant axis comes from the accelerator spec's registered variants,
+and baseline algorithm runs are shared with the non-run-changing variants
+(prefetch_skip, hbm) automatically.
+"""
 
 from __future__ import annotations
 
-import time
 from typing import Dict, List
 
 from benchmarks import common
 from repro.algorithms.common import Problem
-from repro.core import optimizations
-from repro.graphs.datasets import ACCUGRAPH_SETS
+from repro.sim import SweepCase, sweep
+
+VARIANTS = ("baseline", "prefetch_skip", "partition_skip", "both", "hbm")
 
 
 def run(scale: float = common.SCALE, datasets=None) -> List[Dict]:
     datasets = datasets or ["sd", "db", "yt", "wt"]
-    rows = []
+    cases = []
     for abbr in datasets:
+        base_cfg = common.accugraph_cfg(abbr, scale, q_full=1_024_000)
         for pname, prob in (("bfs", Problem.BFS), ("wcc", Problem.WCC)):
-            base_cfg = common.accugraph_cfg(
-                abbr, scale, q_full=1_024_000)
             g = common.graph(abbr, scale,
                              undirected=(prob == Problem.WCC))
-            t0 = time.perf_counter()
-            res = optimizations.run_study(
-                g, prob, base_cfg,
-                variants=["prefetch_skip", "partition_skip", "both",
-                          "hbm"])
-            for r in res:
-                rows.append({
-                    "bench": "fig13", "dataset": abbr, "problem": pname,
-                    "variant": r.variant,
-                    "runtime_ms": r.report.runtime_ms,
-                    "speedup": r.speedup,
-                    "wall_s": time.perf_counter() - t0,
-                })
+            for variant in VARIANTS:
+                cases.append((abbr, pname, SweepCase(
+                    graph=g, problem=prob, accelerator="accugraph",
+                    config=base_cfg, variant=variant)))
+
+    results = sweep(cases=[c for _, _, c in cases])
+    rows = []
+    baseline_ns = {}
+    for (abbr, pname, _), res in zip(cases, results):
+        if res.variant == "baseline":
+            baseline_ns[(abbr, pname)] = res.report.runtime_ns
+    for (abbr, pname, _), res in zip(cases, results):
+        if res.variant == "baseline":
+            continue
+        base = baseline_ns[(abbr, pname)]
+        rows.append({
+            "bench": "fig13", "dataset": abbr, "problem": pname,
+            "variant": res.variant,
+            "runtime_ms": res.report.runtime_ms,
+            "speedup": base / max(res.report.runtime_ns, 1e-9),
+            "wall_s": res.wall_s,
+        })
     return rows
 
 

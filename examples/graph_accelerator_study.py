@@ -3,39 +3,53 @@ sweep partition sizes, pipeline counts, and DRAM types for AccuGraph in
 simulation — minutes instead of an FPGA synthesis cycle — and sanity-
 check the shortlist against the O(1) analytical model (§7 future work).
 
+Everything runs through ``repro.sim``: design axes are plain config
+overrides, DRAM types are ``memory=`` selectors, and ``sweep()``
+deduplicates the shared WCC executions across all design points.
+
 Run:  PYTHONPATH=src python examples/graph_accelerator_study.py
 """
 
-import dataclasses
-
-from repro.algorithms.common import Problem
-from repro.core import accugraph, analytical
-from repro.core.dram import hbm2
+from repro.core import analytical
 from repro.graphs.generators import rmat
+from repro.sim import (SimSession, SweepCase, Sweeper, get_accelerator,
+                       sweep)
 
 g = rmat(13, 16, seed=1).undirected_view()
 print(f"graph: n={g.n} m={g.m}\n")
 
+spec = get_accelerator("accugraph")
+sweeper = Sweeper()     # shared: one WCC run reused where q coincides
+
 print("== partition size sweep (WCC) ==")
-for q in (1024, 2048, 4096, g.n):
-    cfg = accugraph.AccuGraphConfig(partition_elements=q)
-    r = accugraph.simulate(g, Problem.WCC, cfg)
-    est = analytical.estimate_accugraph(g, Problem.WCC, cfg,
-                                        iterations=r.iterations)
-    print(f"  q={q:6d}: sim {r.runtime_ms:7.3f} ms  "
+qs = (1024, 2048, 4096, g.n)
+rows = sweep(cases=[
+    SweepCase(graph=g, problem="wcc", accelerator="accugraph",
+              config=spec.make_config(partition_elements=q))
+    for q in qs
+], sweeper=sweeper)
+for q, row in zip(qs, rows):
+    est = analytical.estimate_accugraph(g, row.case.problem,
+                                        row.case.config,
+                                        iterations=row.report.iterations)
+    print(f"  q={q:6d}: sim {row.report.runtime_ms:7.3f} ms  "
           f"analytical {est.runtime_ns/1e6:7.3f} ms ({est.bound})")
 
 print("\n== edge pipelines sweep ==")
-for ep in (8, 16, 32):
-    cfg = accugraph.AccuGraphConfig(edge_pipelines=ep)
-    r = accugraph.simulate(g, Problem.WCC, cfg)
-    print(f"  pipelines={ep:2d}: {r.runtime_ms:7.3f} ms "
-          f"greps={r.reps/1e9:.2f}")
+eps = (8, 16, 32)
+rows = sweep(cases=[
+    SweepCase(graph=g, problem="wcc", accelerator="accugraph",
+              config=spec.make_config(edge_pipelines=ep))
+    for ep in eps
+], sweeper=sweeper)
+for ep, row in zip(eps, rows):
+    print(f"  pipelines={ep:2d}: {row.report.runtime_ms:7.3f} ms "
+          f"greps={row.report.reps/1e9:.2f}")
 
 print("\n== DRAM type (paper §7 future work) ==")
-for name, dram in (("ddr4", None), ("hbm2-interleaved", hbm2())):
-    cfg = accugraph.AccuGraphConfig(edge_pipelines=64, dram=dram)
-    r = accugraph.simulate(g, Problem.WCC, cfg)
+session = SimSession(g)
+for name, memory in (("ddr4", None), ("hbm2-interleaved", "hbm2")):
+    r = session.run("wcc", "accugraph", edge_pipelines=64, memory=memory)
     print(f"  {name:18s}: {r.runtime_ms:7.3f} ms greps={r.reps/1e9:.2f}")
 print("\n(64 pipelines + HBM shows the bandwidth headroom the 16-pipe")
 print(" design cannot use — the [Gh19]-style DRAM/workload interaction)")

@@ -1,24 +1,43 @@
-"""Quickstart: the paper's pipeline end to end in ~30 seconds.
+"""Quickstart: the paper's pipeline end to end in ~30 seconds, through
+the unified ``repro.sim`` API.
 
-1. build a graph, 2. run WCC on both accelerator models, 3. compare
-runtime/REPS (the paper's comparability study in miniature), 4. try the
-paper's §5 optimizations, 5. peek at the DRAM statistics the simulation
+The paper's claim is that simulating *memory access patterns* (instead of
+cycle-accurate RTL) makes graph-accelerator benchmarking standardized and
+comparable.  ``repro.sim`` is that claim as an API surface — one entry
+point for every accelerator, memory type, and backend:
+
+    from repro.sim import simulate, sweep, list_accelerators
+
+    simulate(g, "wcc", accelerator="hitgraph")          # one run
+    simulate(g, "wcc", accelerator="accugraph",
+             memory="hbm2")                             # any memory
+    simulate(g, "wcc", accelerator="accugraph",
+             backend="event")                           # fidelity check
+    sweep(graphs=[g], problems=["wcc"],
+          accelerators=["hitgraph", "accugraph"])       # grids, deduped
+
+(The third registered accelerator, ``reference``, is the event-driven
+element-granularity fidelity machine — orders of magnitude slower, for
+small cross-check graphs only.)
+
+This script walks that surface: 1. build a graph, 2. run WCC on both
+vectorized trace models, 3. compare runtime/REPS (the paper's
+comparability study in miniature), 4. sweep the paper's §5 optimization
+variants, 5. peek at the per-phase DRAM statistics every simulation
 exposes.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
 
-from repro.algorithms.common import Problem
-from repro.core import accugraph, hitgraph, optimizations
 from repro.graphs.generators import rmat
+from repro.sim import get_accelerator, list_accelerators, simulate, sweep
 
 g = rmat(13, 8, seed=0).undirected_view()
-print(f"graph: n={g.n}, m={g.m}, avg degree {g.avg_degree:.1f}\n")
+print(f"graph: n={g.n}, m={g.m}, avg degree {g.avg_degree:.1f}")
+print(f"registered accelerators: {list_accelerators()}\n")
 
-hg = hitgraph.simulate(g, Problem.WCC,
-                       hitgraph.HitGraphConfig(partition_elements=2048))
-ag = accugraph.simulate(g, Problem.WCC,
-                        accugraph.AccuGraphConfig(partition_elements=2048))
+hg = simulate(g, "wcc", accelerator="hitgraph", partition_elements=2048)
+ag = simulate(g, "wcc", accelerator="accugraph", partition_elements=2048)
 
 print("   system    runtime     iters   GREPS   row-hit-rate")
 for r in (hg, ag):
@@ -28,15 +47,25 @@ print("\nNote: HitGraph has 4 DDR3 channels vs AccuGraph's single DDR4"
       "\nchannel here (the papers' own configs) — see"
       " benchmarks/fig12_comparability.py for the equal-config study.\n")
 
-print("paper §5 optimizations (AccuGraph, WCC):")
-for res in optimizations.run_study(
-        g, Problem.WCC, accugraph.AccuGraphConfig(partition_elements=2048),
-        variants=["prefetch_skip", "partition_skip", "both"]):
-    print(f"  {res.variant:15s} {res.report.runtime_ms:8.3f} ms "
-          f"({res.speedup:.2f}x)")
+print("paper §5 optimizations (AccuGraph, WCC), one sweep() call:")
+ag_cfg = get_accelerator("accugraph").make_config(partition_elements=2048)
+rows = sweep(graphs=[g], problems=["wcc"], accelerators=["accugraph"],
+             variants=["baseline", "prefetch_skip", "partition_skip",
+                       "both"],
+             configs={"accugraph": ag_cfg})
+base = rows[0].report.runtime_ns
+for row in rows:
+    print(f"  {row.variant:15s} {row.report.runtime_ms:8.3f} ms "
+          f"({base / max(row.report.runtime_ns, 1e-9):.2f}x)")
 
 print("\nper-phase DRAM statistics (AccuGraph, first 4 phases):")
 for ph in ag.phases[:4]:
     print(f"  {ph.name:18s} reqs={ph.requests:6d} "
           f"hits={ph.row_hits:6d} conflicts={ph.row_conflicts:4d} "
           f"cycles=[{ph.start_cycle}, {ph.end_cycle}]")
+
+print("\nevent-driven cross-check (small graph, element granularity):")
+gs = rmat(9, 4, seed=0).undirected_view()
+for backend in ("vectorized", "event"):
+    r = simulate(gs, "wcc", accelerator="accugraph", backend=backend)
+    print(f"  {backend:11s} {r.runtime_ms:8.4f} ms")

@@ -1,5 +1,10 @@
 """Assigned-architecture registry: ``get_config(arch, smoke=False)``.
 
+The architecture modules live under ``legacy/`` — they belong to the
+host framework's LM side (dry-run / roofline tooling), not to the graph
+accelerator simulation API (``repro.sim``), and are quarantined so the
+public surface only advertises graph-simulation entry points.
+
 Each module exports ``CONFIG`` (the exact published configuration) and
 ``SMOKE`` (a reduced same-family config for CPU tests).  Full configs are
 exercised only via the dry-run (ShapeDtypeStruct, no allocation).
@@ -31,5 +36,5 @@ ALIASES = {a.replace("_", "-"): a for a in ARCHS}
 
 def get_config(arch: str, smoke: bool = False) -> ModelConfig:
     arch = arch.replace("-", "_").replace(".", "_")
-    mod = importlib.import_module(f"repro.configs.{arch}")
+    mod = importlib.import_module(f"repro.configs.legacy.{arch}")
     return mod.SMOKE if smoke else mod.CONFIG

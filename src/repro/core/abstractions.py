@@ -312,8 +312,11 @@ class Engine:
             for m in self.mergers:
                 m.emit(self.t_mem)
             if not any(p.active for p in self.producers) and self._events:
-                # fast-forward to the next event
-                self.t_mem = max(self.t_mem + 1, self._events[0][0])
+                # fast-forward to the next event, clamped to its time: an
+                # event scheduled *during this cycle* (same-cycle callback
+                # chain, e.g. a barrier firing at t_mem) must run at its
+                # scheduled time, not one cycle later.
+                self.t_mem = max(self.t_mem, self._events[0][0])
             else:
                 self.t_mem = int(self.t_mem + max(self.ratio, 1))
         return max(self.dram.last_finish, self.t_mem)

@@ -131,7 +131,11 @@ class AccuGraphModel:
     # ------------------------------------------------------------------
     def simulate(self, problem: Problem, root: int = 0,
                  fixed_iters: Optional[int] = None,
-                 run: Optional[RunResult] = None) -> SimReport:
+                 run: Optional[RunResult] = None,
+                 memory_system=None) -> SimReport:
+        """Simulate; ``memory_system`` injects a DRAM backend (any object
+        with the :class:`VectorizedDRAM` phase interface, e.g. the
+        event-driven ``repro.sim.backends.EventDRAM``)."""
         cfg = self.cfg
         if run is None:
             run = vertex_centric.run(
@@ -139,7 +143,8 @@ class AccuGraphModel:
                 fixed_iters=fixed_iters,
                 block_skipping=cfg.partition_skipping,
             )
-        dram = VectorizedDRAM(self.dram)
+        dram = (memory_system if memory_system is not None
+                else VectorizedDRAM(self.dram))
         ratio = self.dram.clock_ghz / cfg.acc_ghz
         vb, pb, nb = cfg.value_bytes, cfg.pointer_bytes, cfg.neighbor_bytes
         n = self.g.n
@@ -210,5 +215,9 @@ class AccuGraphModel:
 def simulate(g: Graph, problem: Problem,
              cfg: AccuGraphConfig = AccuGraphConfig(), root: int = 0,
              fixed_iters: Optional[int] = None) -> SimReport:
-    return AccuGraphModel(g, cfg).simulate(problem, root=root,
-                                           fixed_iters=fixed_iters)
+    """Deprecated shim — use :func:`repro.sim.simulate` with
+    ``accelerator="accugraph"`` (single entry point for all accelerators,
+    memory types, and backends)."""
+    from repro import sim
+    return sim.simulate(g, problem, accelerator="accugraph", config=cfg,
+                        root=root, fixed_iters=fixed_iters)

@@ -31,6 +31,11 @@ AddressOrder = Tuple[str, ...]
 
 DEFAULT_ORDER: AddressOrder = ("channel", "column", "rank", "bank", "row")
 
+# Channel-as-MSB placement: each accelerator data structure lives whole in
+# one channel (the paper's per-PE channel assignment).  Historically
+# defined in ``core/hitgraph.py``; kept re-exported there.
+CONTIGUOUS_ORDER: AddressOrder = ("column", "rank", "bank", "row", "channel")
+
 
 @dataclasses.dataclass(frozen=True)
 class DRAMTiming:

@@ -31,12 +31,10 @@ import numpy as np
 from repro.algorithms import edge_centric
 from repro.algorithms.common import Problem, RunResult
 from repro.core.accel import SimReport, VectorizedDRAM
-from repro.core.dram import (CACHE_LINE_BYTES, DRAMConfig, MemoryLayout,
-                             ddr3_1600k)
+from repro.core.dram import (CACHE_LINE_BYTES, CONTIGUOUS_ORDER, DRAMConfig,
+                             MemoryLayout, ddr3_1600k)
 from repro.core.trace import Trace, bulk_issue, interleave_issue_ordered
 from repro.graphs.formats import Graph, partition_intervals
-
-CONTIGUOUS_ORDER = ("column", "rank", "bank", "row", "channel")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -156,12 +154,17 @@ class HitGraphModel:
 
     def simulate(self, problem: Problem, root: int = 0,
                  fixed_iters: Optional[int] = None,
-                 run: Optional[RunResult] = None) -> SimReport:
+                 run: Optional[RunResult] = None,
+                 memory_system=None) -> SimReport:
+        """Simulate; ``memory_system`` injects a DRAM backend (any object
+        with the :class:`VectorizedDRAM` phase interface, e.g. the
+        event-driven ``repro.sim.backends.EventDRAM``)."""
         cfg = self.cfg
         if run is None:
             run = edge_centric.run(self.g, problem, root=root,
                                    fixed_iters=fixed_iters)
-        dram = VectorizedDRAM(self.dram)
+        dram = (memory_system if memory_system is not None
+                else VectorizedDRAM(self.dram))
         ratio = self.dram.clock_ghz / cfg.acc_ghz
         vb, eb, ub = cfg.value_bytes, cfg.edge_bytes, cfg.update_bytes
 
@@ -258,5 +261,9 @@ class HitGraphModel:
 def simulate(g: Graph, problem: Problem,
              cfg: HitGraphConfig = HitGraphConfig(), root: int = 0,
              fixed_iters: Optional[int] = None) -> SimReport:
-    return HitGraphModel(g, cfg).simulate(problem, root=root,
-                                          fixed_iters=fixed_iters)
+    """Deprecated shim — use :func:`repro.sim.simulate` with
+    ``accelerator="hitgraph"`` (single entry point for all accelerators,
+    memory types, and backends)."""
+    from repro import sim
+    return sim.simulate(g, problem, accelerator="hitgraph", config=cfg,
+                        root=root, fixed_iters=fixed_iters)

@@ -1,0 +1,42 @@
+"""``repro.sim`` — the public simulation API.
+
+One facade over every accelerator model, memory type, and DRAM backend in
+the reproduction (the paper's standardized-benchmarking claim as code):
+
+>>> from repro.sim import simulate, sweep, list_accelerators
+>>> list_accelerators()
+['accugraph', 'hitgraph', 'reference']
+>>> r = simulate(g, "wcc", accelerator="hitgraph")
+>>> rows = sweep(graphs=[g], problems=["wcc"],
+...              accelerators=["hitgraph", "accugraph"],
+...              memories=[None, "hbm2"])
+
+See ``src/repro/sim/README.md`` for the registry, memory options, and the
+add-your-own-accelerator recipe.
+"""
+
+from repro.algorithms.common import Problem
+from repro.core.accel import PhaseStats, SimReport
+from repro.sim.backends import BACKENDS, EventDRAM, make_backend
+from repro.sim.memory import (MEMORY_PRESETS, MemoryConfig, memory_name,
+                              resolve_memory)
+from repro.sim.reference_model import ReferenceConfig, ReferenceModel
+from repro.sim.registry import (AcceleratorSpec, get_accelerator,
+                                list_accelerators, register_accelerator)
+from repro.sim.session import SimSession, simulate
+from repro.sim.sweep import Sweeper, SweepCase, SweepRow, SweepStats, sweep
+
+# importing session already registers the built-in specs
+from repro.sim.specs import AccuGraphSpec, HitGraphSpec, ReferenceSpec
+
+__all__ = [
+    "Problem", "SimReport", "PhaseStats",
+    "simulate", "sweep", "SimSession",
+    "AcceleratorSpec", "register_accelerator", "get_accelerator",
+    "list_accelerators",
+    "MemoryConfig", "MEMORY_PRESETS", "resolve_memory", "memory_name",
+    "BACKENDS", "EventDRAM", "make_backend",
+    "Sweeper", "SweepCase", "SweepRow", "SweepStats",
+    "ReferenceConfig", "ReferenceModel",
+    "HitGraphSpec", "AccuGraphSpec", "ReferenceSpec",
+]

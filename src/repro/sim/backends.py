@@ -1,0 +1,96 @@
+"""DRAM simulation backends behind one phase-level interface.
+
+A backend is any object exposing the :class:`~repro.core.accel.
+VectorizedDRAM` surface the trace models drive:
+
+* ``run_phase(trace, name) -> int`` — simulate one phase starting at the
+  current clock, carrying DRAM state (open rows, bank availability)
+  across phases; returns the phase makespan;
+* ``now`` / ``phases`` / ``total_requests`` / ``total_row_hits`` /
+  ``total_row_conflicts`` — accumulated statistics for the SimReport.
+
+``"vectorized"`` is the JAX ``lax.scan`` fast path; ``"event"`` is the
+element-granularity python replay through :class:`ChannelState` — the
+fidelity reference (the two are bit-equivalent on integer cycle counts;
+property tests on ``simulate_trace`` vs ``simulate_trace_jax`` enforce the
+shared semantics).  Use ``"event"`` to cross-check the vectorized model on
+small instances; it is orders of magnitude slower.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core.accel import PhaseStats, VectorizedDRAM
+from repro.core.dram import CACHE_LINE_BYTES, DRAMConfig
+from repro.core.timing import ChannelState, ROW_CONFLICT, ROW_HIT
+from repro.core.trace import Trace
+
+
+class EventDRAM:
+    """Event-driven multi-phase DRAM backend (python reference path)."""
+
+    def __init__(self, cfg: DRAMConfig):
+        self.cfg = cfg
+        self.channels = [
+            ChannelState(timing=cfg.timing, n_banks=cfg.banks_per_channel,
+                         banks_per_rank=cfg.org.banks)
+            for _ in range(cfg.channels)
+        ]
+        self.now = 0                     # memory-clock cycles
+        self.phases: List[PhaseStats] = []
+        self.total_requests = 0
+        self.total_row_hits = 0
+        self.total_row_conflicts = 0
+
+    def run_phase(self, trace: Trace, name: str = "phase") -> int:
+        """Serve one phase in program order per channel, starting at the
+        current clock; returns its makespan (absolute memory cycle)."""
+        if len(trace) == 0:
+            return self.now
+        start = self.now
+        issue = trace.issue + start
+        comps = self.cfg.decode_lines(trace.line_addr)
+        ch = comps["channel"]
+        bank = comps["bank_in_channel"]
+        row = comps["row"]
+        end = start
+        hits = confl = 0
+        for c in range(self.cfg.channels):
+            st = self.channels[c]
+            for i in np.nonzero(ch == c)[0]:
+                fin, kind = st.serve(int(issue[i]), int(bank[i]),
+                                     int(row[i]))
+                end = max(end, fin)
+                hits += kind == ROW_HIT
+                confl += kind == ROW_CONFLICT
+        self.phases.append(PhaseStats(
+            name=name, requests=len(trace),
+            bytes=len(trace) * CACHE_LINE_BYTES,
+            start_cycle=start, end_cycle=end,
+            row_hits=hits, row_conflicts=confl,
+        ))
+        self.total_requests += len(trace)
+        self.total_row_hits += hits
+        self.total_row_conflicts += confl
+        self.now = max(self.now, end)
+        return end
+
+
+BACKENDS: Dict[str, type] = {
+    "vectorized": VectorizedDRAM,
+    "event": EventDRAM,
+}
+
+
+def make_backend(backend: str, cfg: DRAMConfig):
+    """Instantiate a DRAM backend by name for device ``cfg``."""
+    try:
+        cls = BACKENDS[backend]
+    except KeyError:
+        raise ValueError(
+            f"unknown backend {backend!r}; available: "
+            f"{sorted(BACKENDS)}") from None
+    return cls(cfg)

@@ -1,0 +1,103 @@
+"""Session facade: the single public entry point for running simulations.
+
+``simulate(graph, problem, accelerator=..., memory=..., backend=...)``
+resolves the accelerator spec, the memory device, and the DRAM backend,
+and returns the shared :class:`~repro.core.accel.SimReport`.
+
+:class:`SimSession` binds a graph and caches algorithm runs across
+repeated calls (the expensive JAX part), so interactive exploration —
+same problem, different accelerator/memory/variant — only pays trace
+generation and DRAM simulation per call.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+from repro.algorithms.common import Problem, RunResult
+from repro.core.accel import SimReport
+from repro.graphs.formats import Graph
+from repro.sim.memory import MemoryLike, resolve_memory
+from repro.sim.registry import get_accelerator
+
+# built-in specs register on import
+from repro.sim import specs as _specs  # noqa: F401
+
+
+def _coerce_problem(problem) -> Problem:
+    return problem if isinstance(problem, Problem) else Problem(problem)
+
+
+class SimSession:
+    """A graph bound to a cache of algorithm runs.
+
+    >>> sess = SimSession(g)
+    >>> sess.run(Problem.WCC, accelerator="hitgraph")
+    >>> sess.run(Problem.WCC, accelerator="hitgraph", memory="hbm2")
+    # second call reuses the edge-centric WCC execution
+    """
+
+    def __init__(self, graph: Graph):
+        self.graph = graph
+        self._runs: Dict[object, RunResult] = {}
+        self.algo_runs = 0
+        self.algo_cache_hits = 0
+
+    def algorithm_run(self, spec, problem: Problem, config, root: int,
+                      fixed_iters: Optional[int]) -> RunResult:
+        key = spec.algorithm_key(self.graph, problem, config, root=root,
+                                 fixed_iters=fixed_iters)
+        if key in self._runs:
+            self.algo_cache_hits += 1
+            return self._runs[key]
+        self.algo_runs += 1
+        run = spec.run_algorithm(self.graph, problem, config, root=root,
+                                 fixed_iters=fixed_iters)
+        self._runs[key] = run
+        return run
+
+    def run(self, problem, accelerator: str = "hitgraph", *,
+            config=None, memory: MemoryLike = None,
+            backend: Optional[str] = None, variant: Optional[str] = None,
+            root: int = 0, fixed_iters: Optional[int] = None,
+            **overrides) -> SimReport:
+        problem = _coerce_problem(problem)
+        spec = get_accelerator(accelerator)
+        cfg = spec.make_config(config, memory=resolve_memory(memory),
+                               **overrides)
+        cfg = spec.apply_variant(cfg, variant)
+        run = self.algorithm_run(spec, problem, cfg, root, fixed_iters)
+        return spec.simulate(self.graph, problem, cfg, backend=backend,
+                             root=root, fixed_iters=fixed_iters, run=run)
+
+
+def simulate(graph: Graph, problem, accelerator: str = "hitgraph", *,
+             config=None, memory: MemoryLike = None,
+             backend: Optional[str] = None, variant: Optional[str] = None,
+             root: int = 0, fixed_iters: Optional[int] = None,
+             **overrides) -> SimReport:
+    """Run one simulation through the spec registry.
+
+    Parameters
+    ----------
+    graph:        the :class:`Graph` instance.
+    problem:      a :class:`Problem` or its string value (``"wcc"``...).
+    accelerator:  registered name (see :func:`list_accelerators`) or an
+                  :class:`AcceleratorSpec` instance.
+    config:       accelerator config dataclass (defaults per paper Tab. 4);
+                  extra keyword arguments override individual fields, e.g.
+                  ``simulate(g, "wcc", partition_elements=2048)``.
+    memory:       ``None`` (the accelerator's paper default) or any
+                  selector accepted by :func:`resolve_memory` — a preset
+                  name (``"ddr3"``, ``"ddr4-8gb"``, ``"hbm2"``...), a
+                  :class:`MemoryConfig`, or a raw :class:`DRAMConfig`.
+    backend:      ``"vectorized"`` (JAX scan fast path), ``"event"``
+                  (element-granularity reference; slow), or ``None`` for
+                  the accelerator's preferred backend.
+    variant:      named optimization variant of the accelerator
+                  (``spec.variants()``), e.g. ``"prefetch_skip"``.
+    """
+    return SimSession(graph).run(
+        problem, accelerator, config=config, memory=memory,
+        backend=backend, variant=variant, root=root,
+        fixed_iters=fixed_iters, **overrides)

@@ -1,0 +1,166 @@
+"""Batched sweep engine: one call, a grid of simulations, shared work
+deduplicated.
+
+``sweep()`` expands a (graph x problem x accelerator x memory x variant)
+grid — or takes an explicit case list — and returns one
+:class:`SweepRow` per grid point, in grid order.
+
+What is shared and what is not:
+
+* **Algorithm runs** (the JAX engine executions that produce per-iteration
+  statistics) are deduplicated across all grid points whose
+  ``algorithm_key`` matches — every memory type and every variant that
+  does not change the execution (e.g. ``prefetch_skip``, ``hbm``) reuses
+  one run per (graph, problem) instead of recomputing it.
+* **Trace bucketing / scan compilation**: traces are padded to
+  power-of-two buckets inside the vectorized backend, so the jitted DRAM
+  scan compiles O(log) distinct shapes; cases are *dispatched grouped by
+  (accelerator, graph)* so consecutive cases hit the same compiled
+  buckets instead of ping-ponging shapes.
+* Trace generation itself depends on the memory layout, so it is
+  per-case by construction.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+from typing import Any, Dict, Iterable, List, Optional, Sequence
+
+from repro.algorithms.common import Problem
+from repro.core.accel import SimReport
+from repro.graphs.formats import Graph
+from repro.sim.memory import MemoryLike, memory_name, resolve_memory
+from repro.sim.registry import get_accelerator
+from repro.sim.session import SimSession, _coerce_problem
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepCase:
+    """One grid point of a sweep."""
+
+    graph: Graph
+    problem: Problem
+    accelerator: str = "hitgraph"
+    memory: MemoryLike = None
+    variant: Optional[str] = None
+    config: Any = None
+    root: int = 0
+    fixed_iters: Optional[int] = None
+
+    def __post_init__(self):
+        object.__setattr__(self, "problem",
+                           _coerce_problem(self.problem))
+
+
+@dataclasses.dataclass
+class SweepRow:
+    """One simulated grid point."""
+
+    case: SweepCase
+    report: SimReport
+    wall_s: float
+
+    @property
+    def graph_name(self) -> str:
+        return self.case.graph.name
+
+    @property
+    def memory(self) -> str:
+        return memory_name(self.case.memory)
+
+    @property
+    def variant(self) -> str:
+        return self.case.variant or "baseline"
+
+    def as_dict(self) -> Dict[str, Any]:
+        r = self.report
+        return {
+            "graph": self.graph_name, "problem": self.case.problem.value,
+            "accelerator": r.system, "memory": self.memory,
+            "variant": self.variant, "runtime_ms": r.runtime_ms,
+            "iterations": r.iterations, "reps": r.reps,
+            "row_hit_rate": r.row_hit_rate,
+            "total_requests": r.total_requests, "wall_s": self.wall_s,
+        }
+
+
+@dataclasses.dataclass
+class SweepStats:
+    cases: int = 0
+    algo_runs: int = 0
+    algo_cache_hits: int = 0
+
+
+class Sweeper:
+    """Executes sweep cases with per-graph algorithm-run caching."""
+
+    def __init__(self, backend: Optional[str] = None):
+        self.backend = backend
+        self._sessions: Dict[int, SimSession] = {}
+        self.stats = SweepStats()
+
+    def _session(self, g: Graph) -> SimSession:
+        sess = self._sessions.get(id(g))
+        if sess is None:
+            sess = self._sessions[id(g)] = SimSession(g)
+        return sess
+
+    def run_case(self, case: SweepCase) -> SweepRow:
+        sess = self._session(case.graph)
+        hits0, runs0 = sess.algo_cache_hits, sess.algo_runs
+        t0 = time.perf_counter()
+        report = sess.run(
+            case.problem, case.accelerator, config=case.config,
+            memory=case.memory, backend=self.backend,
+            variant=case.variant, root=case.root,
+            fixed_iters=case.fixed_iters)
+        wall = time.perf_counter() - t0
+        self.stats.cases += 1
+        self.stats.algo_cache_hits += sess.algo_cache_hits - hits0
+        self.stats.algo_runs += sess.algo_runs - runs0
+        return SweepRow(case=case, report=report, wall_s=wall)
+
+    def run(self, cases: Sequence[SweepCase]) -> List[SweepRow]:
+        """Run all cases; rows come back in input order, but execution is
+        grouped by (accelerator, graph) for scan-bucket reuse."""
+        cases = list(cases)
+        order = sorted(
+            range(len(cases)),
+            key=lambda i: (cases[i].accelerator, id(cases[i].graph)))
+        rows: List[Optional[SweepRow]] = [None] * len(cases)
+        for i in order:
+            rows[i] = self.run_case(cases[i])
+        return rows
+
+
+def sweep(graphs: Iterable[Graph] = (), problems: Iterable = (),
+          accelerators: Iterable[str] = ("hitgraph", "accugraph"),
+          memories: Iterable[MemoryLike] = (None,),
+          variants: Iterable[Optional[str]] = (None,),
+          configs: Optional[Dict[str, Any]] = None,
+          root: int = 0, fixed_iters: Optional[int] = None,
+          backend: Optional[str] = None,
+          cases: Optional[Sequence[SweepCase]] = None,
+          sweeper: Optional[Sweeper] = None) -> List[SweepRow]:
+    """Run a simulation grid; returns one row per grid point.
+
+    Either pass the axes (``graphs x problems x accelerators x memories x
+    variants``, expanded as an outer product in that order) or an explicit
+    ``cases`` list for irregular grids (e.g. a per-dataset config).
+    ``configs`` maps accelerator name -> config dataclass for the grid
+    form.  Pass a :class:`Sweeper` to share its cache/stats across calls
+    or to inspect ``sweeper.stats`` afterwards.
+    """
+    if cases is None:
+        configs = configs or {}
+        cases = [
+            SweepCase(graph=g, problem=p, accelerator=a, memory=m,
+                      variant=v, config=configs.get(a), root=root,
+                      fixed_iters=fixed_iters)
+            for g, p, a, m, v in itertools.product(
+                graphs, problems, accelerators, memories, variants)
+        ]
+    sweeper = sweeper if sweeper is not None else Sweeper(backend=backend)
+    return sweeper.run(cases)

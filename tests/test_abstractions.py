@@ -126,6 +126,42 @@ class TestEngine:
         assert a.produced == 8 and b.produced == 8
         assert seen["b_start"] > 0
 
+    def test_fast_forward_keeps_same_cycle_callback_chain(self):
+        """Regression: when only events remain, the engine must clamp the
+        fast-forward to the pending event's time.  A same-cycle chain
+        (producer completion -> barrier -> chained schedule at the same
+        t_mem) used to drift one cycle per link."""
+        eng = _engine()
+        buf = CacheLineBuffer(eng.dram)
+        prod = eng.producer("p", buf, rate=1.0)
+        done_at = []
+        fired = []
+
+        def on_done(t):
+            done_at.append(t)
+            # chain of same-cycle events: each schedules the next at the
+            # SAME memory cycle it fires on
+            def link3(t3):
+                fired.append(t3)
+
+            def link2(t2):
+                fired.append(t2)
+                eng.schedule(t2, link3)
+
+            def link1(t1):
+                fired.append(t1)
+                eng.schedule(t1, link2)
+
+            eng.schedule(t, link1)
+
+        prod.on_produced.append(on_done)
+        prod.trigger(((i, False, None) for i in range(4)), 0)
+        eng.run()
+        assert len(fired) == 3
+        # every link fires at the cycle it was scheduled for — no drift
+        # from the completion cycle through the whole chain
+        assert fired == [done_at[0]] * 3
+
     def test_engine_matches_trace_oracle_for_bulk_stream(self):
         """Event-driven end-to-end == the trace-level oracle when the
         issue pattern is identical (bulk sequential stream)."""

@@ -1,0 +1,246 @@
+"""The unified ``repro.sim`` API: registry, facade parity, memory
+selection, backends, and the sweep engine."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.algorithms.common import Problem
+from repro.core import accugraph, hitgraph
+from repro.core.dram import CONTIGUOUS_ORDER, DRAMConfig, ddr4_2400r
+from repro.graphs.generators import rmat
+from repro.sim import (AcceleratorSpec, MemoryConfig, SimSession,
+                       SweepCase, Sweeper, get_accelerator,
+                       list_accelerators, register_accelerator,
+                       resolve_memory, simulate, sweep)
+from repro.sim.registry import _REGISTRY
+
+
+@pytest.fixture(scope="module")
+def g():
+    return rmat(10, 6, seed=3).undirected_view()
+
+
+@pytest.fixture(scope="module")
+def g_small():
+    return rmat(8, 4, seed=4).undirected_view()
+
+
+class TestRegistry:
+    def test_builtins_registered(self):
+        names = list_accelerators()
+        assert {"hitgraph", "accugraph", "reference"} <= set(names)
+        assert names == sorted(names)
+
+    def test_verbose_listing(self):
+        pairs = dict(list_accelerators(verbose=True))
+        assert "HitGraph" in pairs["hitgraph"]
+
+    def test_unknown_name_error(self):
+        with pytest.raises(KeyError, match="unknown accelerator"):
+            get_accelerator("graphicionado")
+
+    def test_spec_passthrough(self):
+        spec = get_accelerator("hitgraph")
+        assert get_accelerator(spec) is spec
+
+    def test_register_roundtrip(self, g_small):
+        """The README recipe: a new accelerator is a registered spec."""
+
+        @register_accelerator
+        class ToySpec(AcceleratorSpec):
+            name = "toy"
+            description = "hitgraph with one PE"
+            config_cls = hitgraph.HitGraphConfig
+
+            def build_model(self, graph, config):
+                cfg = dataclasses.replace(
+                    config, n_pes=1,
+                    dram=config.dram or dataclasses.replace(
+                        ddr4_2400r(), order=CONTIGUOUS_ORDER))
+                return hitgraph.HitGraphModel(graph, cfg)
+
+            def run_algorithm(self, graph, problem, config, root=0,
+                              fixed_iters=None):
+                from repro.algorithms import edge_centric
+                graph = (graph.with_unit_weights()
+                         if graph.weights is None else graph)
+                return edge_centric.run(graph, problem, root=root,
+                                        fixed_iters=fixed_iters)
+
+            def algorithm_key(self, graph, problem, config, root=0,
+                              fixed_iters=None):
+                return ("edge", id(graph), problem, root, fixed_iters)
+
+        try:
+            assert "toy" in list_accelerators()
+            r = simulate(g_small, "wcc", accelerator="toy")
+            assert r.runtime_ns > 0 and r.iterations >= 2
+        finally:
+            _REGISTRY.pop("toy", None)
+
+    def test_unknown_variant_error(self, g_small):
+        with pytest.raises(KeyError, match="unknown variant"):
+            simulate(g_small, "wcc", accelerator="accugraph",
+                     variant="warp_drive")
+
+
+class TestSimulateParity:
+    """The facade must reproduce the pre-refactor model results exactly."""
+
+    def test_hitgraph_parity(self, g):
+        cfg = hitgraph.HitGraphConfig(partition_elements=512)
+        new = simulate(g, Problem.WCC, accelerator="hitgraph", config=cfg)
+        old = hitgraph.HitGraphModel(g, cfg).simulate(Problem.WCC)
+        assert new.runtime_ns == pytest.approx(old.runtime_ns, rel=1e-6)
+        assert new.reps == pytest.approx(old.reps, rel=1e-6)
+        assert new.total_requests == old.total_requests
+        assert new.iterations == old.iterations
+
+    def test_accugraph_parity(self, g):
+        cfg = accugraph.AccuGraphConfig(partition_elements=512)
+        new = simulate(g, Problem.WCC, accelerator="accugraph",
+                       config=cfg)
+        old = accugraph.AccuGraphModel(g, cfg).simulate(Problem.WCC)
+        assert new.runtime_ns == pytest.approx(old.runtime_ns, rel=1e-6)
+        assert new.reps == pytest.approx(old.reps, rel=1e-6)
+        assert new.total_requests == old.total_requests
+
+    def test_deprecated_shims_delegate(self, g):
+        cfg = hitgraph.HitGraphConfig(partition_elements=512)
+        shim = hitgraph.simulate(g, Problem.WCC, cfg)
+        new = simulate(g, Problem.WCC, accelerator="hitgraph", config=cfg)
+        assert shim.runtime_ns == new.runtime_ns
+
+    def test_problem_string_coercion(self, g_small):
+        a = simulate(g_small, "wcc", accelerator="hitgraph")
+        b = simulate(g_small, Problem.WCC, accelerator="hitgraph")
+        assert a.runtime_ns == b.runtime_ns
+
+    def test_config_field_overrides(self, g_small):
+        a = simulate(g_small, "wcc", accelerator="accugraph",
+                     partition_elements=256)
+        cfg = accugraph.AccuGraphConfig(partition_elements=256)
+        b = simulate(g_small, "wcc", accelerator="accugraph", config=cfg)
+        assert a.runtime_ns == b.runtime_ns
+
+
+class TestMemory:
+    def test_preset_resolution(self):
+        cfg = resolve_memory("hbm2")
+        assert isinstance(cfg, DRAMConfig)
+        assert cfg.standard == "HBM2"
+        assert resolve_memory(None) is None
+
+    def test_unknown_preset_error(self):
+        with pytest.raises(KeyError, match="unknown memory preset"):
+            resolve_memory("ddr9")
+
+    def test_memory_config_overrides(self):
+        cfg = MemoryConfig(kind="ddr4", channels=2,
+                           density="8Gb").resolve()
+        assert cfg.channels == 2
+        assert cfg.org.rows == 65536
+        assert cfg.order == CONTIGUOUS_ORDER
+        line = MemoryConfig(kind="hbm2", interleaving="line").resolve()
+        assert line.order[0] == "channel"
+
+    def test_any_accelerator_any_memory(self, g_small):
+        """The tentpole claim: accelerator x memory is a free cross."""
+        base = simulate(g_small, "wcc", accelerator="accugraph")
+        hbm = simulate(g_small, "wcc", accelerator="accugraph",
+                       memory="hbm2")
+        assert hbm.runtime_ns != base.runtime_ns
+        hg = simulate(g_small, "wcc", accelerator="hitgraph",
+                      memory="hbm2")
+        assert hg.runtime_ns > 0
+
+
+class TestBackends:
+    def test_event_matches_vectorized(self, g_small):
+        """The element-granularity replay and the JAX scan agree on
+        integer cycle counts (shared timing semantics)."""
+        for accel in ("hitgraph", "accugraph"):
+            vec = simulate(g_small, "wcc", accelerator=accel)
+            ev = simulate(g_small, "wcc", accelerator=accel,
+                          backend="event")
+            assert ev.runtime_ns == vec.runtime_ns, accel
+            assert ev.total_requests == vec.total_requests
+            assert ev.row_hit_rate == pytest.approx(vec.row_hit_rate)
+
+    def test_reference_accelerator(self, g_small):
+        r = simulate(g_small, "wcc", accelerator="reference")
+        assert r.system == "reference"
+        assert r.runtime_ns > 0 and r.total_requests > 0
+        assert 0 < r.row_hit_rate <= 1
+        # async pull semantics: same iteration structure as AccuGraph
+        # with everything in BRAM
+        ag = simulate(g_small, "wcc", accelerator="accugraph")
+        assert r.iterations == ag.iterations
+
+    def test_reference_rejects_vectorized(self, g_small):
+        with pytest.raises(ValueError, match="supports backends"):
+            simulate(g_small, "wcc", accelerator="reference",
+                     backend="vectorized")
+
+    def test_unknown_backend(self, g_small):
+        with pytest.raises(ValueError, match="supports backends"):
+            simulate(g_small, "wcc", accelerator="hitgraph",
+                     backend="quantum")
+
+
+class TestSweep:
+    def test_one_row_per_grid_point(self, g, g_small):
+        rows = sweep(graphs=[g_small, g], problems=["wcc", "bfs"],
+                     accelerators=["hitgraph", "accugraph"])
+        assert len(rows) == 2 * 2 * 2
+        # grid order: graphs x problems x accelerators
+        assert rows[0].case.graph is g_small
+        assert rows[0].report.system == "hitgraph"
+        assert rows[1].report.system == "accugraph"
+        assert rows[-1].case.graph is g
+        for row in rows:
+            assert row.report.runtime_ns > 0
+            d = row.as_dict()
+            assert d["memory"] == "default"
+
+    def test_dedup_of_algorithm_runs(self, g_small):
+        """Memory and non-run-changing variants share algorithm runs."""
+        sw = Sweeper()
+        rows = sweep(graphs=[g_small], problems=["wcc"],
+                     accelerators=["accugraph"],
+                     memories=[None, "hbm2", "ddr4-8gb"],
+                     sweeper=sw)
+        assert len(rows) == 3
+        assert sw.stats.algo_runs == 1
+        assert sw.stats.algo_cache_hits == 2
+
+    def test_sweep_matches_simulate(self, g_small):
+        rows = sweep(graphs=[g_small], problems=["wcc"],
+                     accelerators=["hitgraph"])
+        solo = simulate(g_small, "wcc", accelerator="hitgraph")
+        assert rows[0].report.runtime_ns == solo.runtime_ns
+
+    def test_explicit_cases_and_variants(self, g_small):
+        rows = sweep(cases=[
+            SweepCase(graph=g_small, problem="wcc",
+                      accelerator="accugraph", variant=v)
+            for v in (None, "prefetch_skip", "both")
+        ])
+        assert [r.variant for r in rows] == ["baseline", "prefetch_skip",
+                                            "both"]
+        base = rows[0].report.runtime_ns
+        assert all(r.report.runtime_ns <= base * 1.01 for r in rows)
+
+
+class TestSession:
+    def test_session_caches_runs(self, g_small):
+        sess = SimSession(g_small)
+        sess.run("wcc", "accugraph")
+        sess.run("wcc", "accugraph", memory="hbm2")
+        assert sess.algo_runs == 1
+        assert sess.algo_cache_hits == 1
+        # different problem -> new run
+        sess.run("bfs", "accugraph")
+        assert sess.algo_runs == 2
