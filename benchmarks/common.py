@@ -20,11 +20,17 @@ SCALE = 0.01
 
 
 @functools.lru_cache(maxsize=32)
-def graph(abbr: str, scale: float = SCALE, undirected: bool = False):
+def _base_graph(abbr: str, scale: float):
     cap = scale
     if abbr == "tw":                    # 1.47B edges: scale down further
         cap = min(scale, 0.002)
-    g = instantiate(abbr, scale=cap, seed=0)
+    return instantiate(abbr, scale=cap, seed=0)
+
+
+@functools.lru_cache(maxsize=64)
+def graph(abbr: str, scale: float = SCALE, undirected: bool = False):
+    # directed and undirected views share one instantiated stand-in
+    g = _base_graph(abbr, scale)
     return g.undirected_view() if undirected else g
 
 

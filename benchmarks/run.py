@@ -18,7 +18,7 @@ def main() -> int:
     ap.add_argument("--scale", type=float, default=0.01)
     ap.add_argument("--only", default=None,
                     help="comma list: fig09,fig10,fig11,fig12,fig13,"
-                         "fig02,dram,kernels")
+                         "fig02,dram,kernels,sweep")
     ap.add_argument("--json-out", default=None)
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
@@ -26,7 +26,7 @@ def main() -> int:
     from benchmarks import (dram_types, fig02_repro_error,
                             fig09_hitgraph, fig10_accugraph, fig11_degree,
                             fig12_comparability, fig13_optimizations,
-                            kernel_bench)
+                            kernel_bench, sweep_throughput)
 
     suites = {
         "fig09": lambda: fig09_hitgraph.run(args.scale),
@@ -37,6 +37,7 @@ def main() -> int:
         "fig02": lambda: fig02_repro_error.run(args.scale),
         "dram": lambda: dram_types.run(args.scale),
         "kernels": kernel_bench.run,
+        "sweep": lambda: sweep_throughput.run(args.scale),
     }
 
     all_rows = []

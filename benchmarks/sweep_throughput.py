@@ -1,0 +1,103 @@
+"""Sweep-engine throughput: cases/sec and jitted-dispatch counts.
+
+Drives a fig12-style grid (HitGraph + AccuGraph, comparability
+configuration, WCC) through ``repro.sim.sweep()`` and reports how fast
+the fused whole-run DRAM pipeline turns cases around:
+
+* ``per_case``  — one fused-scan dispatch per simulation run.  The
+  dispatch contract of the fused pipeline (one jitted scan per run
+  instead of two per iteration) is **asserted** here, so a regression
+  back to per-phase dispatching fails the benchmark.
+* ``warm``      — the same grid again with all compiled shapes and
+  algorithm runs cached (the interactive-exploration cost).
+* ``batched``   — a (dataset x memory) grid with ``batch_memories=True``:
+  structurally compatible cases share single vmap-ed dispatches.
+
+Emits BENCH JSON rows (``cases_per_sec`` is the tracked perf figure;
+CI fails if it regresses >2x below the recorded baseline).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+from benchmarks import common
+from repro.algorithms.common import Problem
+from repro.core import vectorized as vec
+from repro.graphs.datasets import COMPARABILITY_SETS
+from repro.sim import SweepCase, Sweeper, sweep
+
+
+def _grid(scale: float, datasets) -> List[SweepCase]:
+    cases = []
+    for abbr in datasets:
+        hg_cfg, ag_cfg = common.comparability_cfgs(abbr, scale)
+        g = common.graph(abbr, scale, undirected=True)
+        cases.append(SweepCase(graph=g, problem=Problem.WCC,
+                               accelerator="hitgraph", config=hg_cfg))
+        cases.append(SweepCase(graph=g, problem=Problem.WCC,
+                               accelerator="accugraph", config=ag_cfg))
+    return cases
+
+
+def run(scale: float = common.SCALE, datasets=None) -> List[Dict]:
+    datasets = datasets or COMPARABILITY_SETS
+    rows = []
+
+    def measure(mode, fn, n_cases, check_contract=False):
+        vec.reset_dispatch_counts()
+        t0 = time.perf_counter()
+        out = fn()
+        wall = time.perf_counter() - t0
+        counts = vec.dispatch_counts()
+        row = {
+            "bench": "sweep", "variant": mode, "cases": n_cases,
+            "wall_s": wall, "cases_per_sec": n_cases / wall,
+            "fused_dispatches": counts["fused"],
+            "batch_dispatches": counts["fused_batch"],
+            "per_phase_dispatches": counts["packed"],
+        }
+        if check_contract:
+            # The fused-pipeline dispatch contract: a run costs one
+            # fixed-shape scan dispatch per chunk of its program (a
+            # handful), NEVER the legacy two per iteration / one per
+            # phase.  A regression to per-phase dispatching trips this.
+            phases = sum(len(r.report.phases) for r in out)
+            iters = sum(r.report.iterations for r in out)
+            assert counts["packed"] == 0, counts
+            assert n_cases <= counts["fused"] < max(phases, n_cases + 1), (
+                f"{counts} vs {phases} phases")
+            row["phases"] = phases
+            row["dispatches_per_iteration"] = counts["fused"] / max(
+                iters, 1)
+        rows.append(row)
+
+    cases = _grid(scale, datasets)
+    sweeper = Sweeper()
+    measure("per_case", lambda: sweeper.run(cases), len(cases),
+            check_contract=True)
+    measure("warm", lambda: sweeper.run(cases), len(cases),
+            check_contract=True)
+
+    # memory axis: one graph point across structurally compatible DDR4
+    # devices, batched into single vmap-ed dispatches
+    g = common.graph(datasets[0], scale, undirected=True)
+    _, ag_cfg = common.comparability_cfgs(datasets[0], scale)
+    mem_cases = [
+        SweepCase(graph=g, problem=Problem.WCC, accelerator="accugraph",
+                  config=ag_cfg, memory=m)
+        for m in (None, "ddr4", "ddr4-8gb")
+    ]
+    # warm the batched compile cache + algo/model caches out-of-measure
+    batch_sweeper = Sweeper(batch_memories=True)
+    batch_sweeper.run(mem_cases)
+    measure("batched", lambda: batch_sweeper.run(mem_cases),
+            len(mem_cases))
+    rows[-1]["batched_cases"] = batch_sweeper.stats.batched_cases
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

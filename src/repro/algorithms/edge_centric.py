@@ -42,6 +42,57 @@ def _step_min(values, src, dst, w, active, n, problem):
     return new, changed
 
 
+#: XLA:CPU's scatter-min is the iteration bottleneck at benchmark scale;
+#: on CPU the min-combine step runs as a dst-sorted ``reduceat`` instead
+#: — bit-identical (integer min is exact and order-independent), ~3x
+#: faster.  Non-CPU backends keep the jitted segment_min (which lowers
+#: to the one-hot-matmul segment reduce on TPU).  Resolved lazily so
+#: importing this module does not initialize the JAX backend.
+_NUMPY_MIN_STEP: Optional[bool] = None
+
+
+def _numpy_min_step() -> bool:
+    global _NUMPY_MIN_STEP
+    if _NUMPY_MIN_STEP is None:
+        _NUMPY_MIN_STEP = jax.default_backend() == "cpu"
+    return _NUMPY_MIN_STEP
+
+
+def _min_run_numpy(g: Graph, problem: Problem, w: np.ndarray,
+                   values: np.ndarray, active: np.ndarray,
+                   max_iters: int):
+    """Host fast path for the min-combine problems: one-time dst sort,
+    then ``np.minimum.reduceat`` per iteration."""
+    order = np.argsort(g.dst, kind="stable")
+    src_s = g.src[order]
+    w_s = w[order].astype(np.int32)
+    dst_s = g.dst[order]
+    starts = np.flatnonzero(np.diff(dst_s, prepend=np.int64(-1)))
+    dgroups = dst_s[starts]
+    add_one = np.int32(1)
+    per_iter = []
+    it = 0
+    while it < max_iters and active.any():
+        vs = values[src_s]
+        if problem == Problem.SSSP:
+            cand = vs + w_s
+        elif problem == Problem.BFS:
+            cand = vs + add_one
+        else:  # wcc
+            cand = vs
+        cand = np.where(active[src_s], cand, INF32)
+        new = values.copy()
+        if len(starts):
+            gathered = np.minimum.reduceat(cand, starts)
+            new[dgroups] = np.minimum(values[dgroups], gathered)
+        changed = new != values
+        per_iter.append(IterStats(active_before=active, changed=changed))
+        values = new
+        active = changed
+        it += 1
+    return RunResult(values, it, per_iter)
+
+
 @functools.partial(jax.jit, static_argnames=("n",))
 def _step_spmv(values, src, dst, w, n):
     return jax.ops.segment_sum(w * values[src], dst, num_segments=n)
@@ -69,17 +120,22 @@ def run(
     per_iter = []
 
     if problem in (Problem.SSSP, Problem.WCC, Problem.BFS):
-        w = jnp.asarray(
+        w_np = np.asarray(
             g.weights if g.weights is not None else np.ones(g.m),
-            dtype=jnp.int32,
-        )
+            dtype=np.int32)
         if problem == Problem.WCC:
-            values = jnp.arange(n, dtype=jnp.int32)
+            values_np = np.arange(n, dtype=np.int32)
             active = np.ones(n, dtype=bool)
         else:
-            values = jnp.full(n, INF32, dtype=jnp.int32).at[root].set(0)
+            values_np = np.full(n, INF32, dtype=np.int32)
+            values_np[root] = 0
             active = np.zeros(n, dtype=bool)
             active[root] = True
+        if _numpy_min_step():
+            return _min_run_numpy(g, problem, w_np, values_np, active,
+                                  max_iters)
+        w = jnp.asarray(w_np)
+        values = jnp.asarray(values_np)
         it = 0
         while it < max_iters and active.any():
             new, changed = _step_min(

@@ -6,21 +6,35 @@ phases — the vectorized equivalent of the paper's controller "waiting on
 all memory requests to finish before switching phases": the next phase's
 traces are issued no earlier than the previous phase's makespan.
 
-Traces are padded to power-of-two buckets so the jitted scan recompiles
-only O(log) times per run.
+Two execution modes share one statistics surface:
+
+* :meth:`VectorizedDRAM.run_program` — the fused whole-run pipeline: a
+  :class:`~repro.core.trace.SegmentedTrace` (every phase of the
+  simulation, emitted up front by the trace models) is packed once and
+  served by a blocked jitted scan that honors the phase barriers
+  internally.  This is the default fast path: a handful of fixed-shape
+  chunk dispatches per run instead of two dispatches per iteration.
+* :meth:`VectorizedDRAM.run_phase` — the legacy incremental path (one
+  dispatch per phase), kept for interactive/streaming use and as the
+  bit-equivalence reference for the fused scan.
+
+Programs are padded to a two-size chunk ladder so the process compiles
+each scan structure exactly twice, whatever the run length; DRAM timing
+parameters are traced inputs, so DDR3/DDR4/HBM2/HBM2E all share one
+compiled scan.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.dram import DRAMConfig, CACHE_LINE_BYTES
-from repro.core.trace import Trace
+from repro.core.trace import SegmentedTrace, Trace
 from repro.core import vectorized as vec
 
 
@@ -39,35 +53,280 @@ class PhaseStats:
     row_conflicts: int
 
 
+#: lanes per block in the fused scan (requests per channel per step);
+#: hit-heavy programs use wide blocks, conflict-heavy ones serialize.
+BLOCK_LANES = 8
+
+
+@dataclasses.dataclass(frozen=True)
+class PackedProgram:
+    """A :class:`SegmentedTrace` packed for the fused scan: blocked
+    lockstep ``[S, C, K]`` per-channel streams with phase boundary
+    markers and host-precomputed row-buffer kinds.
+
+    A block (one step of one channel) is up to K consecutive row hits —
+    whose per-bank chains the scan step resolves internally — or a single
+    row miss; the block decomposition is what shrinks the sequential
+    scan length by ~K on the row-hit-dominated streams the paper's
+    accelerators produce."""
+
+    issue: np.ndarray        # int32[S, C, K] (phase-relative)
+    meta: np.ndarray         # int32[S, C, K] packed bank/kind/rank word
+    boundary: np.ndarray     # bool[S]
+    timing: np.ndarray       # int32[7]
+    n_banks: int
+    banks_per_rank: int
+    names: List[str]
+    requests: np.ndarray     # int64[P] per-phase request counts
+    offsets: np.ndarray      # int64[P+1] per-phase request offsets
+    kind: np.ndarray         # int8[N] per-request row kind, program order
+    step_starts: np.ndarray  # int64[P] first lockstep step of each phase
+    n_steps: int             # S before padding
+    open_row_final: np.ndarray  # int32[C, B] row state after the program
+
+    @property
+    def n_phases(self) -> int:
+        return len(self.names)
+
+    @property
+    def signature(self):
+        """Compiled-shape signature: programs with equal signatures share
+        one compiled fused scan (and can batch, see ``fused_scan_batch``)."""
+        return (self.issue.shape, self.n_banks, self.banks_per_rank)
+
+
+def classify_rows(bank_global: np.ndarray, row: np.ndarray,
+                  open_row: np.ndarray):
+    """Row-buffer kinds (0 hit / 1 empty / 2 conflict) for a program-order
+    stream, given the per-bank open-row state entering the stream.
+
+    The classification depends only on each bank's row *sequence* — never
+    on timing — which is what lets the fused scan skip row tracking.
+    Returns ``(kind int8[N], open_row_after flat int64[C*B])``.
+    """
+    flat = np.asarray(open_row, dtype=np.int64).ravel().copy()
+    if len(flat) < (1 << 15):
+        # small key range: radix argsort (~5x over int64 mergesort)
+        order = np.argsort(bank_global.astype(np.int16), kind="stable")
+    else:
+        order = np.argsort(bank_global, kind="stable")
+    gbo = bank_global[order]
+    rows_o = row[order]
+    prev = np.empty(len(order), dtype=np.int64)
+    first = np.empty(len(order), dtype=bool)
+    first[:1] = True
+    first[1:] = gbo[1:] != gbo[:-1]
+    prev[1:] = rows_o[:-1]
+    prev[first] = flat[gbo[first]]
+    kind_o = np.where(prev == rows_o, 0,
+                      np.where(prev == -1, 1, 2)).astype(np.int8)
+    kind = np.empty(len(order), dtype=np.int8)
+    kind[order] = kind_o
+    last = np.empty(len(order), dtype=bool)
+    last[:-1] = gbo[:-1] != gbo[1:]
+    last[-1:] = True
+    flat[gbo[last]] = rows_o[last]
+    return kind, flat
+
+
+def pack_program(program: SegmentedTrace, cfg: DRAMConfig,
+                 open_row: Optional[np.ndarray] = None
+                 ) -> Optional[PackedProgram]:
+    """Pack a whole-run program for the fused scan (one decode + one
+    stable argsort; no per-phase or per-channel Python loops).
+
+    ``open_row`` is the int[C, B] row state entering the program
+    (default: all banks closed)."""
+    P = program.n_phases
+    if P == 0 or len(program) == 0:
+        return None
+    if np.any(program.issue < 0) or np.any(
+            program.issue >= vec.MAX_PHASE_ISSUE):
+        raise ValueError("issue cycles out of int32 range; chunk the trace")
+    comps = cfg.decode_lines(program.line_addr)
+    ch = comps["channel"]
+    C = cfg.channels
+    B = cfg.banks_per_channel
+    if B > 256:
+        raise ValueError(
+            f"banks_per_channel={B} exceeds the fused scan's 8-bit bank "
+            f"field; use the per-phase backend for this device")
+    if open_row is None:
+        open_row = np.full((C, B), -1, dtype=np.int64)
+    kind, open_flat = classify_rows(comps["bank_global"], comps["row"],
+                                    open_row)
+    requests = np.diff(program.offsets)
+    phase = np.repeat(np.arange(P, dtype=np.int64), requests)
+    key = phase * C + ch
+    # hit-dominated streams get wide blocks; conflict-heavy ones (where
+    # almost every block would be a singleton miss anyway) serialize.
+    miss_frac = float((kind != 0).mean())
+    K = BLOCK_LANES if miss_frac < 0.5 else 1
+    # ---- block decomposition within each (phase, channel) stream ------
+    # grouped order: phase-major, channel, then program order
+    order = np.argsort(key, kind="stable")
+    miss_g = kind[order] != 0
+    group_first = np.empty(len(order), dtype=bool)
+    group_first[:1] = True
+    group_first[1:] = key[order][1:] != key[order][:-1]
+    run_start = group_first | miss_g
+    run_start[1:] |= miss_g[:-1]
+    run_id = np.cumsum(run_start) - 1
+    run_len = np.bincount(run_id)
+    run_off = np.cumsum(run_len) - run_len
+    pos = np.arange(len(order), dtype=np.int64) - run_off[run_id]
+    lane = pos % K
+    blocks_per_run = (run_len + K - 1) // K
+    block_off = np.cumsum(blocks_per_run) - blocks_per_run
+    block_id = block_off[run_id] + pos // K      # global, grouped order
+    # block rank within its (phase, channel) group
+    first_block = block_id[group_first]
+    gid = np.cumsum(group_first) - 1
+    block_rank = block_id - first_block[gid]
+    # bank-rank within (block, bank): K-1 shifted comparisons on the
+    # fused (block, bank) key
+    bank_g = comps["bank_in_channel"][order]
+    rb = np.zeros(len(order), dtype=np.int32)
+    if K > 1:
+        kb = block_id * B + bank_g
+        for j in range(1, K):
+            rb[j:] += kb[j:] == kb[:-j]
+    # steps per phase = max block count over channels (block_rank is
+    # non-decreasing within a group, so each group's last element has it)
+    group_last = np.empty(len(order), dtype=bool)
+    group_last[:-1] = group_first[1:]
+    group_last[-1:] = True
+    n_blocks_g = np.zeros(P * C, dtype=np.int64)
+    n_blocks_g[key[order][group_last]] = block_rank[group_last] + 1
+    L_p = n_blocks_g.reshape(P, C).max(axis=1)
+    step_starts = np.cumsum(L_p) - L_p
+    S = int(L_p.sum())
+    S_pad = sum(vec.plan_chunks(S))
+    r_idx = step_starts[phase[order]] + block_rank
+    c_idx = ch[order]
+    issue = np.zeros((S_pad, C, K), dtype=np.int32)
+    meta = np.zeros((S_pad, C, K), dtype=np.int32)
+    issue[r_idx, c_idx, lane] = program.issue[order]
+    meta[r_idx, c_idx, lane] = vec.pack_meta(
+        bank_g, miss_g, kind[order] == 2,
+        np.ones(len(order), dtype=bool), bank_rank=rb)
+    boundary = np.zeros(S_pad, dtype=bool)
+    boundary[np.cumsum(L_p) - 1] = True
+    return PackedProgram(
+        issue=issue, meta=meta, boundary=boundary,
+        timing=vec.timing_params(cfg.timing),
+        n_banks=B, banks_per_rank=cfg.org.banks,
+        names=list(program.names), requests=requests,
+        offsets=np.asarray(program.offsets), kind=kind,
+        step_starts=step_starts, n_steps=S,
+        open_row_final=open_flat.reshape(C, B))
+
+
+@dataclasses.dataclass
+class ProgramStats:
+    """Accumulated DRAM statistics of one executed program — the shared
+    surface :class:`~repro.core.accel.SimReport` assembly reads (duck-typed
+    with ``VectorizedDRAM`` / ``EventDRAM``)."""
+
+    phases: List[PhaseStats]
+    now: int
+    total_requests: int
+    total_row_hits: int
+    total_row_conflicts: int
+
+
+def finalize_program(packed: PackedProgram, finish,
+                     origin: int = 0) -> ProgramStats:
+    """Turn the fused scan's per-step finishes into phase statistics.
+
+    ``finish[s, c]`` is relative to the owning phase's start (0 on
+    invalid lanes), so each phase's makespan is a segmented max; row
+    hits/conflicts reduce from the host-precomputed kinds.  The absolute
+    clock is the running (int64, overflow-free) sum of makespans."""
+    P = packed.n_phases
+    fin = np.asarray(finish)[:packed.n_steps].max(axis=(1, 2))
+    dur = np.maximum.reduceat(fin, packed.step_starts).astype(np.int64)
+    off = packed.offsets[:-1]
+    hits = np.add.reduceat((packed.kind == 0).astype(np.int64), off)
+    confl = np.add.reduceat((packed.kind == 2).astype(np.int64), off)
+    ends = origin + np.cumsum(dur)
+    starts = ends - dur
+    phases = [
+        PhaseStats(
+            name=packed.names[p], requests=int(packed.requests[p]),
+            bytes=int(packed.requests[p]) * CACHE_LINE_BYTES,
+            start_cycle=int(starts[p]), end_cycle=int(ends[p]),
+            row_hits=int(hits[p]), row_conflicts=int(confl[p]),
+        )
+        for p in range(P)
+    ]
+    return ProgramStats(
+        phases=phases, now=int(ends[-1]) if P else origin,
+        total_requests=int(packed.requests.sum()),
+        total_row_hits=int(hits.sum()),
+        total_row_conflicts=int(confl.sum()),
+    )
+
+
 class VectorizedDRAM:
     """Stateful multi-phase DRAM simulation (JAX fast path)."""
 
     def __init__(self, cfg: DRAMConfig):
         self.cfg = cfg
-        C = cfg.channels
-        single = vec.init_channel_carry(cfg.banks_per_channel, cfg.org.banks)
-        self.carry = jax.tree.map(
-            lambda x: jnp.broadcast_to(x, (C,) + x.shape), single
-        )
-        self.now = 0                     # memory-clock cycles
+        self._timing = vec.timing_params(cfg.timing)
+        self._reset_carry()
+        # Device-side cycle math is int32; ``_origin`` (host int64) anchors
+        # the device-relative clock so runs can exceed the int32 range
+        # without losing accumulated statistics or absolute time.
+        self._origin = 0
+        self._rel_now = 0
         self.phases: List[PhaseStats] = []
         self.total_requests = 0
         self.total_row_hits = 0
         self.total_row_conflicts = 0
+
+    def _reset_carry(self) -> None:
+        C = self.cfg.channels
+        single = vec.init_channel_carry(self.cfg.banks_per_channel,
+                                        self.cfg.org.banks)
+        self.carry = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (C,) + x.shape), single
+        )
+
+    @property
+    def now(self) -> int:
+        """Current absolute memory-clock cycle."""
+        return self._origin + self._rel_now
+
+    def _record(self, name: str, requests: int, start: int, end: int,
+                hits: int, confl: int) -> None:
+        self.phases.append(PhaseStats(
+            name=name, requests=requests,
+            bytes=requests * CACHE_LINE_BYTES,
+            start_cycle=start, end_cycle=end,
+            row_hits=hits, row_conflicts=confl,
+        ))
+        self.total_requests += requests
+        self.total_row_hits += hits
+        self.total_row_conflicts += confl
 
     def run_phase(self, trace: Trace, name: str = "phase") -> int:
         """Simulate one phase starting at the current clock; returns its
         makespan (absolute memory cycle)."""
         if len(trace) == 0:
             return self.now
-        start = self.now
-        issue = trace.issue + start
-        if issue.max() >= 2**31 - 2**26:
-            # Re-base: phases are serialized, so we can subtract the
-            # carried times' common offset.  Simplest safe approach: flush
-            # state (rows stay open is a <1% effect at this magnitude).
-            self.__init__(self.cfg)
-            start = 0
+        start_rel = self._rel_now
+        issue = trace.issue + start_rel
+        if issue.max() >= vec.MAX_PHASE_ISSUE:
+            # Re-base the device clock: phases are serialized, so the
+            # carried times' common offset folds into ``_origin``.
+            # Simplest safe approach: flush the carry (rows stay open is
+            # a <1% effect at this magnitude) — accumulated statistics
+            # and the absolute clock are preserved.
+            self._origin += self._rel_now
+            self._rel_now = 0
+            self._reset_carry()
+            start_rel = 0
             issue = trace.issue
         cfg = self.cfg
         comps = cfg.decode_lines(trace.line_addr)
@@ -75,40 +334,52 @@ class VectorizedDRAM:
         C = cfg.channels
         counts = np.bincount(ch, minlength=C)
         L = _bucket(int(counts.max()))
-        issue_p = np.zeros((C, L), dtype=np.int32)
-        bank_p = np.zeros((C, L), dtype=np.int32)
-        row_p = np.zeros((C, L), dtype=np.int32)
-        valid_p = np.zeros((C, L), dtype=bool)
-        for c in range(C):
-            idx = np.nonzero(ch == c)[0]
-            m = len(idx)
-            issue_p[c, :m] = issue[idx]
-            bank_p[c, :m] = comps["bank_in_channel"][idx]
-            row_p[c, :m] = comps["row"][idx]
-            valid_p[c, :m] = True
-        t = cfg.timing
-        finish, kind, self.carry = vec._simulate_packed(
-            jnp.asarray(issue_p), jnp.asarray(bank_p), jnp.asarray(row_p),
-            jnp.asarray(valid_p), cfg.banks_per_channel, cfg.org.banks,
-            t.tCL, t.tRCD, t.tRP, t.tRAS, t.tBL, t.tRRD, t.tFAW,
-            self.carry,
+        issue_p, bank_p, row_p, valid_p, _ = vec.pack_streams(
+            ch, issue, comps["bank_in_channel"], comps["row"], C, L)
+        finish, kind, self.carry = vec.simulate_packed(
+            issue_p, bank_p, row_p, valid_p, self._timing,
+            cfg.banks_per_channel, cfg.org.banks, self.carry,
         )
         finish = np.asarray(finish)
         kind = np.asarray(kind)
-        end = int(finish[valid_p].max())
-        hits = int((kind == 0).sum())
-        confl = int((kind == 2).sum())
-        self.phases.append(PhaseStats(
-            name=name, requests=len(trace),
-            bytes=len(trace) * CACHE_LINE_BYTES,
-            start_cycle=start, end_cycle=end,
-            row_hits=hits, row_conflicts=confl,
-        ))
-        self.total_requests += len(trace)
-        self.total_row_hits += hits
-        self.total_row_conflicts += confl
-        self.now = max(self.now, end)
-        return end
+        end_rel = int(finish[valid_p].max())
+        self._record(name, len(trace), self._origin + start_rel,
+                     self._origin + end_rel,
+                     int((kind == 0).sum()), int((kind == 2).sum()))
+        self._rel_now = max(self._rel_now, end_rel)
+        return self._origin + end_rel
+
+    def run_program(self, program: SegmentedTrace) -> int:
+        """Serve a whole multi-phase program in ONE jitted scan dispatch
+        (phase barriers honored inside the scan); returns the final
+        absolute makespan.  Bit-equivalent to calling :meth:`run_phase`
+        per phase."""
+        packed = pack_program(program, self.cfg,
+                              open_row=np.asarray(self.carry[0]))
+        if packed is None:
+            return self.now
+        if self._rel_now:
+            # Fold the running clock into the origin (exact shift, no
+            # flush) so the program's phase-relative issues line up.
+            self.carry = vec.rebase_carry(self.carry,
+                                          jnp.int32(self._rel_now))
+            self._origin += self._rel_now
+            self._rel_now = 0
+        finish, lean = vec.fused_scan(
+            packed.issue, packed.meta, packed.boundary, packed.timing,
+            vec.lean_from_full(self.carry),
+        )
+        self.carry = vec.full_from_lean(lean, packed.open_row_final)
+        stats = finalize_program(packed, finish, origin=self._origin)
+        self.phases.extend(stats.phases)
+        self.total_requests += stats.total_requests
+        self.total_row_hits += stats.total_row_hits
+        self.total_row_conflicts += stats.total_row_conflicts
+        # the fused scan re-bases at every barrier: the carry is relative
+        # to the final makespan, which becomes the new origin.
+        self._origin = stats.now
+        self._rel_now = 0
+        return self.now
 
 
 @dataclasses.dataclass

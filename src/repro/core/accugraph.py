@@ -17,6 +17,14 @@ Faithful to paper Sect. 3.3 / Fig. 8:
 Sect. 5 enhancements (both modelled, default off to match the baseline):
 *prefetch skipping* (skip re-prefetch when the previous processed block is
 the same) and *partition skipping* (dirty-bit per interval).
+
+Vectorized realization: a block's destination-value / pointer / neighbor
+streams are *static* across iterations, so they are built (and
+priority-sorted) once at model construction; each iteration only computes
+the changed-value write lines and splices them into the pre-sorted static
+stream with a stable two-pointer merge (``searchsorted``), emitting the
+whole run as one :class:`~repro.core.trace.SegmentedTrace` for the fused
+single-dispatch DRAM scan.
 """
 
 from __future__ import annotations
@@ -32,7 +40,7 @@ from repro.core.accel import SimReport, VectorizedDRAM
 from repro.core.dram import (CACHE_LINE_BYTES, DRAMConfig, MemoryLayout,
                              ddr4_2400r)
 from repro.core.hitgraph import CONTIGUOUS_ORDER, _line_span, _spread
-from repro.core.trace import Trace, bulk_issue, interleave_issue_ordered
+from repro.core.trace import SegmentedTrace, bulk_issue
 from repro.graphs.formats import CSRPartitions, Graph
 
 
@@ -73,6 +81,7 @@ class AccuGraphModel:
         self.p = self.parts.p
         self._layout()
         self._stall_cycles = [self._block_stalls(k) for k in range(self.p)]
+        self._precompute_streams()
 
     def _layout(self) -> None:
         cfg = self.cfg
@@ -128,14 +137,126 @@ class AccuGraphModel:
         queued = int(np.ceil(per_bank.max() / cfg.vertex_cache_ports))
         return max(ideal, queued)
 
+    def _precompute_streams(self) -> None:
+        """Per-block streams that do not change across iterations: the
+        prefetch trace and the priority-sorted (dv + pointer + neighbor)
+        read stream.  Built once; iterations only merge in the
+        changed-value writes."""
+        cfg, n = self.cfg, self.g.n
+        vb, pb, nb = cfg.value_bytes, cfg.pointer_bytes, cfg.neighbor_bytes
+        ratio = self.dram.clock_ghz / cfg.acc_ghz
+        self._ratio = ratio
+        v_window = int(np.ceil(n / cfg.vertex_pipelines) * ratio)
+        self._prefetch: List[np.ndarray] = []
+        self._static_line: List[np.ndarray] = []
+        self._static_issue: List[np.ndarray] = []
+        self._e_window: List[int] = []
+        for k in range(self.p):
+            s, e = self.parts.intervals[k]
+            self._prefetch.append(
+                _line_span(self.values_base + s * vb, (e - s) * vb))
+            # destination value stream (filtered by BRAM residency)
+            # + pointer stream, vertex-pipeline paced
+            dv_lines = np.concatenate([
+                _line_span(self.values_base, s * vb),
+                _line_span(self.values_base + e * vb, (n - e) * vb),
+            ])
+            dv_issue = _spread(len(dv_lines), 0, v_window)
+            ptr_lines = _line_span(self.ptr_base[k], (n + 1) * pb)
+            ptr_issue = _spread(len(ptr_lines), 0, v_window)
+            # neighbor stream, edge-pipeline paced + cache stalls
+            m_k = self.parts.blocks[k].m
+            nl = _line_span(self.nbr_base[k], m_k * nb)
+            e_window = int(self._stall_cycles[k] * ratio)
+            nl_issue = _spread(len(nl), 0, max(e_window, 1))
+            line = np.concatenate([dv_lines, ptr_lines, nl])
+            issue = np.concatenate([dv_issue, ptr_issue, nl_issue])
+            order = np.argsort(issue, kind="stable")  # priority merge
+            self._static_line.append(line[order])
+            self._static_issue.append(issue[order])
+            self._e_window.append(e_window)
+
+    def _block_phase(self, k: int, changed_k: np.ndarray):
+        """One block's phase trace: splice this iteration's changed-value
+        writes (highest priority on ties is *not* reordered — the static
+        streams registered first win equal issue cycles, exactly like the
+        legacy concat + stable sort) into the pre-sorted static stream."""
+        cfg = self.cfg
+        wdst = np.nonzero(changed_k)[0]
+        w_line = (self.values_base
+                  + wdst * cfg.value_bytes) // CACHE_LINE_BYTES
+        if len(w_line):                       # ascending -> adjacent dedup
+            keep = np.empty(len(w_line), dtype=bool)
+            keep[0] = True
+            np.not_equal(w_line[1:], w_line[:-1], out=keep[1:])
+            w_line = w_line[keep]
+        w_issue = _spread(len(w_line), 0, max(self._e_window[k], 1))
+        s_line, s_issue = self._static_line[k], self._static_issue[k]
+        n_s, n_w = len(s_line), len(w_line)
+        # stable merge (static side wins ties, matching concat order)
+        pos_w = np.searchsorted(s_issue, w_issue, side="right") \
+            + np.arange(n_w)
+        pos_s = np.searchsorted(w_issue, s_issue, side="left") \
+            + np.arange(n_s)
+        line = np.empty(n_s + n_w, dtype=np.int64)
+        issue = np.empty(n_s + n_w, dtype=np.int64)
+        wr = np.zeros(n_s + n_w, dtype=bool)
+        line[pos_s] = s_line
+        line[pos_w] = w_line
+        issue[pos_s] = s_issue
+        issue[pos_w] = w_issue
+        wr[pos_w] = True
+        return line, wr, issue
+
     # ------------------------------------------------------------------
+    def build_program(self, problem: Problem,
+                      run: RunResult) -> SegmentedTrace:
+        """Emit every phase of the whole run up front (prefetch + block
+        phases per iteration, phase-relative issues)."""
+        cfg = self.cfg
+        phases = []
+        last_prefetched = -1
+        for it, st in enumerate(run.per_iter):
+            for k in range(self.p):
+                changed_k = (st.changed_per_block[k]
+                             if st.changed_per_block is not None else None)
+                if changed_k is None:
+                    continue        # block skipped (partition skipping)
+                # 1. prefetch interval values into BRAM.  The block body
+                #    *pulls from BRAM*, so it waits for the prefetch to
+                #    complete — this serial latency is exactly what the
+                #    paper's prefetch-skipping enhancement removes.
+                if not (cfg.prefetch_skipping and last_prefetched == k):
+                    pre = self._prefetch[k]
+                    phases.append((f"it{it}_b{k}_prefetch", pre,
+                                   np.zeros(len(pre), dtype=bool),
+                                   bulk_issue(len(pre), 0)))
+                last_prefetched = k
+                phases.append((f"it{it}_b{k}",
+                               *self._block_phase(k, changed_k)))
+        return SegmentedTrace.from_phases(phases)
+
+    def make_report(self, problem: Problem, run: RunResult,
+                    stats) -> SimReport:
+        """Assemble the report from any executed DRAM-stats surface."""
+        total_bytes = sum(ph.bytes for ph in stats.phases)
+        return SimReport(
+            system="accugraph", problem=problem.value, graph=self.g.name,
+            runtime_ns=stats.now / self.dram.clock_ghz,
+            iterations=run.iterations, edges=self.g.m, vertices=self.g.n,
+            total_requests=stats.total_requests, total_bytes=total_bytes,
+            row_hit_rate=(stats.total_row_hits
+                          / max(stats.total_requests, 1)),
+            phases=stats.phases,
+        )
+
     def simulate(self, problem: Problem, root: int = 0,
                  fixed_iters: Optional[int] = None,
                  run: Optional[RunResult] = None,
                  memory_system=None) -> SimReport:
         """Simulate; ``memory_system`` injects a DRAM backend (any object
-        with the :class:`VectorizedDRAM` phase interface, e.g. the
-        event-driven ``repro.sim.backends.EventDRAM``)."""
+        with the :class:`VectorizedDRAM` program/phase interface, e.g.
+        the event-driven ``repro.sim.backends.EventDRAM``)."""
         cfg = self.cfg
         if run is None:
             run = vertex_centric.run(
@@ -145,71 +266,8 @@ class AccuGraphModel:
             )
         dram = (memory_system if memory_system is not None
                 else VectorizedDRAM(self.dram))
-        ratio = self.dram.clock_ghz / cfg.acc_ghz
-        vb, pb, nb = cfg.value_bytes, cfg.pointer_bytes, cfg.neighbor_bytes
-        n = self.g.n
-        last_prefetched = -1
-
-        for it, st in enumerate(run.per_iter):
-            for k in range(self.p):
-                changed_k = (st.changed_per_block[k]
-                             if st.changed_per_block is not None else None)
-                if changed_k is None:
-                    continue        # block skipped (partition skipping)
-                s, e = self.parts.intervals[k]
-                # 1. prefetch interval values into BRAM.  The block body
-                #    *pulls from BRAM*, so it waits for the prefetch to
-                #    complete — this serial latency is exactly what the
-                #    paper's prefetch-skipping enhancement removes.
-                if not (cfg.prefetch_skipping and last_prefetched == k):
-                    pre = _line_span(self.values_base + s * vb,
-                                     (e - s) * vb)
-                    dram.run_phase(
-                        Trace(pre, np.zeros(len(pre), bool),
-                              bulk_issue(len(pre), 0)),
-                        f"it{it}_b{k}_prefetch")
-                last_prefetched = k
-                traces: List[Trace] = []
-                # 2. destination value stream (filtered by BRAM residency)
-                #    + pointer stream, round-robin, vertex-pipeline paced
-                v_window = int(np.ceil(n / cfg.vertex_pipelines) * ratio)
-                dv_lines = np.concatenate([
-                    _line_span(self.values_base, s * vb),
-                    _line_span(self.values_base + e * vb, (n - e) * vb),
-                ])
-                traces.append(Trace(
-                    dv_lines, np.zeros(len(dv_lines), bool),
-                    _spread(len(dv_lines), 0, v_window)))
-                ptr_lines = _line_span(self.ptr_base[k], (n + 1) * pb)
-                traces.append(Trace(
-                    ptr_lines, np.zeros(len(ptr_lines), bool),
-                    _spread(len(ptr_lines), 0, v_window)))
-                # 3. neighbor stream, edge-pipeline paced + cache stalls
-                m_k = self.parts.blocks[k].m
-                nl = _line_span(self.nbr_base[k], m_k * nb)
-                e_window = int(self._stall_cycles[k] * ratio)
-                traces.append(Trace(
-                    nl, np.zeros(len(nl), bool),
-                    _spread(len(nl), 0, max(e_window, 1))))
-                # 4. changed-only value writes (highest priority)
-                wdst = np.nonzero(changed_k)[0]
-                wlines = np.unique(
-                    (self.values_base + wdst * vb) // CACHE_LINE_BYTES)
-                traces.append(Trace(
-                    wlines, np.ones(len(wlines), bool),
-                    _spread(len(wlines), 0, max(e_window, 1))))
-                dram.run_phase(interleave_issue_ordered(traces),
-                               f"it{it}_b{k}")
-
-        total_bytes = sum(ph.bytes for ph in dram.phases)
-        return SimReport(
-            system="accugraph", problem=problem.value, graph=self.g.name,
-            runtime_ns=dram.now / self.dram.clock_ghz,
-            iterations=run.iterations, edges=self.g.m, vertices=self.g.n,
-            total_requests=dram.total_requests, total_bytes=total_bytes,
-            row_hit_rate=(dram.total_row_hits / max(dram.total_requests, 1)),
-            phases=dram.phases,
-        )
+        dram.run_program(self.build_program(problem, run))
+        return self.make_report(problem, run, dram)
 
 
 def simulate(g: Graph, problem: Problem,

@@ -135,10 +135,15 @@ class DRAMConfig:
         rem = np.asarray(line_addrs, dtype=np.int64)
         sizes = self.component_sizes()
         comps: Dict[str, np.ndarray] = {}
+        pow2 = all(s & (s - 1) == 0 for s in sizes.values())
         for comp in self.order:
             size = sizes[comp]
-            comps[comp] = rem % size
-            rem = rem // size
+            if pow2:            # shift/mask fast path (all real devices)
+                comps[comp] = rem & (size - 1)
+                rem = rem >> size.bit_length() - 1
+            else:
+                comps[comp] = rem % size
+                rem = rem // size
         # Addresses beyond capacity wrap into higher rows (documented
         # simplification; traces are expected to fit).
         comps["row"] = comps["row"] + rem * 0

@@ -15,16 +15,20 @@ Faithful to paper Sect. 3.2 / Fig. 7:
   *skipping* (unchanged / no-update partitions).
 
 Vectorized realization: per-iteration statistics come from the JAX
-edge-centric engine; request streams are generated analytically with
-issue-cycle lower bounds (bulk prefetches, rate-limited edge/update reads,
-update/value writes spread over their producing window) and fed through
-the carried-state DRAM scan with an inter-phase barrier.
+edge-centric engine; the whole run's request streams are emitted up front
+by vectorized NumPy builders (segment-offset constructions over all
+partitions at once — no per-partition or per-(k, j) Python loops, and the
+per-iteration update merge is an adjacent-dedup over a once-sorted key
+array instead of an ``np.unique`` sort) into one
+:class:`~repro.core.trace.SegmentedTrace`, which the fused DRAM scan
+serves in a single jitted dispatch with inter-phase barriers carried
+inside the scan.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+from typing import List, Optional
 
 import numpy as np
 
@@ -33,7 +37,8 @@ from repro.algorithms.common import Problem, RunResult
 from repro.core.accel import SimReport, VectorizedDRAM
 from repro.core.dram import (CACHE_LINE_BYTES, CONTIGUOUS_ORDER, DRAMConfig,
                              MemoryLayout, ddr3_1600k)
-from repro.core.trace import Trace, bulk_issue, interleave_issue_ordered
+from repro.core.trace import (SegmentedTrace, ragged_bulk, ragged_spans,
+                              ragged_spread, span_counts)
 from repro.graphs.formats import Graph, partition_intervals
 
 
@@ -80,7 +85,7 @@ def _line_span(byte_start: int, nbytes: int) -> np.ndarray:
 
 
 class HitGraphModel:
-    """Builds per-iteration traces and simulates them."""
+    """Builds the whole-run request program and simulates it."""
 
     def __init__(self, g: Graph, cfg: HitGraphConfig = HitGraphConfig()):
         self.cfg = cfg
@@ -90,20 +95,20 @@ class HitGraphModel:
         self.q = q
         self.intervals = partition_intervals(g.n, q)
         self.p = len(self.intervals)
-        # dst-sorted edge order; per-edge partition ids
-        order = np.argsort(self.g.dst, kind="stable")
+        # partition-major, dst-sorted edge order: ONE stable argsort of
+        # the composite (spart, dst) key — equivalent to the paper's
+        # stable dst sort followed by a stable partition sort, and the
+        # sorted key doubles as the update-merge key
+        key = (self.g.src // q) * np.int64(g.n) + self.g.dst
+        order = np.argsort(key, kind="stable")
         self.e_src = self.g.src[order]
         self.e_dst = self.g.dst[order]
-        self.e_spart = self.e_src // q
+        self.edge_key = key[order]                       # sorted
+        self.e_spart = self.edge_key // g.n
         self.e_dpart = self.e_dst // q
-        part_order = np.argsort(self.e_spart, kind="stable")
-        self.e_src = self.e_src[part_order]
-        self.e_dst = self.e_dst[part_order]
-        self.e_spart = self.e_spart[part_order]
-        self.e_dpart = self.e_dpart[part_order]
         self.m_k = np.bincount(self.e_spart, minlength=self.p)
-        self.edge_key = self.e_spart * g.n + self.e_dst  # merge key
         self._layout()
+        self._precompute_streams()
 
     # ------------------------------------------------------------------
     def _chan(self, k: int) -> int:
@@ -136,126 +141,191 @@ class HitGraphModel:
                     "graph does not fit the per-channel capacity; use a "
                     "scaled dataset instance")
 
+    def _precompute_streams(self) -> None:
+        """Static per-partition stream extents (vectorized builders read
+        these instead of re-deriving them every iteration)."""
+        cfg = self.cfg
+        starts = np.array([s for s, _ in self.intervals], dtype=np.int64)
+        ends = np.array([e for _, e in self.intervals], dtype=np.int64)
+        self._interval_start = starts
+        self._val_base = np.asarray(self.val_base, dtype=np.int64)
+        self._edge_base = np.asarray(self.edge_base, dtype=np.int64)
+        self._queue_base = np.asarray(self.queue_base, dtype=np.int64)
+        self._pre_first, self._pre_cnt = span_counts(
+            self._val_base, (ends - starts) * cfg.value_bytes)
+        self._edge_first, self._edge_cnt = span_counts(
+            self._edge_base, self.m_k * cfg.edge_bytes)
+        self._ratio = self.dram.clock_ghz / cfg.acc_ghz
+        self._win = (np.ceil(self.m_k / cfg.pipelines)
+                     * self._ratio).astype(np.int64)
+
+    def _channel_cursor(self, w: np.ndarray) -> np.ndarray:
+        """Exclusive per-channel cumulative PE cursor over partitions."""
+        t0 = np.zeros(self.p, dtype=np.int64)
+        for c in range(self.cfg.n_pes):
+            sl = slice(c, None, self.cfg.n_pes)
+            t0[sl] = np.cumsum(w[sl]) - w[sl]
+        return t0
+
     # ------------------------------------------------------------------
     def _iteration_pairs(self, active: np.ndarray):
-        """Merged updates per (src partition, dst): unique active pairs."""
-        sel = active[self.e_src]
+        """Merged updates per (src partition, dst): unique active pairs.
+
+        ``O(m)`` per iteration: ``edge_key`` is sorted by construction,
+        so this is a select + adjacent-dedup (replaces the per-iteration
+        ``np.unique`` sort)."""
         if self.cfg.update_filtering:
-            keys = self.edge_key[sel]
+            keys = self.edge_key[active[self.e_src]]
         else:
             keys = self.edge_key
-        if self.cfg.update_merging:
-            keys = np.unique(keys)
-        else:
-            keys = np.sort(keys, kind="stable")
+        if self.cfg.update_merging and len(keys):
+            keep = np.empty(len(keys), dtype=bool)
+            keep[0] = True
+            np.not_equal(keys[1:], keys[:-1], out=keep[1:])
+            keys = keys[keep]
         k_part = keys // self.g.n
         dsts = keys % self.g.n
         return k_part, dsts
 
-    def simulate(self, problem: Problem, root: int = 0,
-                 fixed_iters: Optional[int] = None,
-                 run: Optional[RunResult] = None,
-                 memory_system=None) -> SimReport:
-        """Simulate; ``memory_system`` injects a DRAM backend (any object
-        with the :class:`VectorizedDRAM` phase interface, e.g. the
-        event-driven ``repro.sim.backends.EventDRAM``)."""
-        cfg = self.cfg
-        if run is None:
-            run = edge_centric.run(self.g, problem, root=root,
-                                   fixed_iters=fixed_iters)
-        dram = (memory_system if memory_system is not None
-                else VectorizedDRAM(self.dram))
-        ratio = self.dram.clock_ghz / cfg.acc_ghz
-        vb, eb, ub = cfg.value_bytes, cfg.edge_bytes, cfg.update_bytes
+    def _scatter_phase(self, stationary: bool, active: np.ndarray,
+                       u_count: np.ndarray, q_off: np.ndarray):
+        """One iteration's scatter phase, all partitions vectorized."""
+        cfg, p = self.cfg, self.p
+        ub = cfg.update_bytes
+        if cfg.partition_skipping and not stationary:
+            proc = np.logical_or.reduceat(active, self._interval_start)
+        else:
+            proc = np.ones(p, dtype=bool)
+        w = np.where(proc, np.maximum(self._win, 1), 0)
+        t0 = self._channel_cursor(w)
+        blk = p + 2                       # sub-stream id stride per k
+        pk = np.nonzero(proc)[0]
+        # 1. value prefetch (bulk, cache-line buffered)
+        c0_lines = ragged_spans(self._pre_first[pk], self._pre_cnt[pk])
+        c0_issue = ragged_bulk(t0[pk], self._pre_cnt[pk])
+        c0_block = np.repeat(pk * blk, self._pre_cnt[pk])
+        # 2. edge reads, rate-limited to `pipelines` edges/cycle
+        c1_lines = ragged_spans(self._edge_first[pk], self._edge_cnt[pk])
+        c1_issue = ragged_spread(t0[pk], self._win[pk], self._edge_cnt[pk])
+        c1_block = np.repeat(pk * blk + 1, self._edge_cnt[pk])
+        # 3. update writes through the crossbar to each queue j
+        kk, jj = np.nonzero(u_count)      # row-major: k-major, j ascending
+        sel = proc[kk]
+        kk, jj = kk[sel], jj[sel]
+        cnt = u_count[kk, jj]
+        byte0 = self._queue_base[jj] + q_off[kk, jj] * ub
+        w_first, w_cnt = span_counts(byte0, cnt * ub)
+        c2_lines = ragged_spans(w_first, w_cnt)
+        c2_issue = ragged_spread(t0[kk], self._win[kk], w_cnt)
+        c2_block = np.repeat(kk * blk + 2 + jj, w_cnt)
+        lines = np.concatenate([c0_lines, c1_lines, c2_lines])
+        issue = np.concatenate([c0_issue, c1_issue, c2_issue])
+        wr = np.zeros(len(lines), dtype=bool)
+        wr[len(c0_lines) + len(c1_lines):] = True
+        block = np.concatenate([c0_block, c1_block, c2_block])
+        # PE-order concat, then the priority merge (stable sort by issue)
+        order = np.argsort(block, kind="stable")
+        order = order[np.argsort(issue[order], kind="stable")]
+        return lines[order], wr[order], issue[order]
 
+    def _gather_phase(self, changed: np.ndarray, dsts: np.ndarray,
+                      dpart: np.ndarray, u_count: np.ndarray):
+        """One iteration's gather phase, all partitions vectorized."""
+        cfg, p = self.cfg, self.p
+        ub, vb = cfg.update_bytes, cfg.value_bytes
+        U = u_count.sum(axis=0)
+        proc = (U > 0) if cfg.partition_skipping else np.ones(p, dtype=bool)
+        win = (np.ceil(U / cfg.pipelines) * self._ratio).astype(np.int64)
+        w = np.where(proc, np.maximum(win, 1), 0)
+        t0 = self._channel_cursor(w)
+        jk = np.nonzero(proc)[0]
+        # 1. value prefetch
+        c0_lines = ragged_spans(self._pre_first[jk], self._pre_cnt[jk])
+        c0_issue = ragged_bulk(t0[jk], self._pre_cnt[jk])
+        c0_block = np.repeat(jk * 3, self._pre_cnt[jk])
+        # 2. update-queue reads, pipeline paced
+        q_first, q_cnt = span_counts(self._queue_base, U * ub)
+        c1_lines = ragged_spans(q_first[jk], q_cnt[jk])
+        c1_issue = ragged_spread(t0[jk], win[jk], q_cnt[jk])
+        c1_block = np.repeat(jk * 3 + 1, q_cnt[jk])
+        # 3. semi-random value writes (changed only, line-buffered):
+        #    per-partition unique lines via one lexsort + adjacent dedup
+        sel = changed[dsts]
+        jd, dd = dpart[sel], dsts[sel]
+        line = (self._val_base[jd]
+                + (dd - self._interval_start[jd]) * vb) // CACHE_LINE_BYTES
+        order = np.lexsort((line, jd))
+        jd, line = jd[order], line[order]
+        if len(jd):
+            keep = np.empty(len(jd), dtype=bool)
+            keep[0] = True
+            keep[1:] = (jd[1:] != jd[:-1]) | (line[1:] != line[:-1])
+            jd, line = jd[keep], line[keep]
+        w_cnt = np.bincount(jd, minlength=p)
+        jp = np.nonzero(w_cnt)[0]
+        c2_lines = line
+        c2_issue = ragged_spread(t0[jp], win[jp], w_cnt[jp])
+        c2_block = np.repeat(jp * 3 + 2, w_cnt[jp])
+        lines = np.concatenate([c0_lines, c1_lines, c2_lines])
+        issue = np.concatenate([c0_issue, c1_issue, c2_issue])
+        wr = np.zeros(len(lines), dtype=bool)
+        wr[len(c0_lines) + len(c1_lines):] = True
+        block = np.concatenate([c0_block, c1_block, c2_block])
+        order = np.argsort(block, kind="stable")
+        order = order[np.argsort(issue[order], kind="stable")]
+        return lines[order], wr[order], issue[order]
+
+    # ------------------------------------------------------------------
+    def build_program(self, problem: Problem,
+                      run: RunResult) -> SegmentedTrace:
+        """Emit every phase of the whole run up front as one segmented
+        trace (scatter/gather per iteration, phase-relative issues)."""
+        p = self.p
+        phases = []
         for it, st in enumerate(run.per_iter):
             active = (st.active_before if not problem.stationary
                       else np.ones(self.g.n, dtype=bool))
             kp, dsts = self._iteration_pairs(active)
             dpart = dsts // self.q
             # updates grouped by (src part k, dst part j)
-            u_count = np.zeros((self.p, self.p), dtype=np.int64)
-            np.add.at(u_count, (kp, dpart), 1)
-            q_off = np.zeros((self.p, self.p), dtype=np.int64)
-            q_off[1:] = np.cumsum(u_count, axis=0)[:-1]  # offset into queue j
+            u_count = np.bincount(
+                kp * p + dpart, minlength=p * p).reshape(p, p)
+            q_off = np.zeros((p, p), dtype=np.int64)
+            q_off[1:] = np.cumsum(u_count, axis=0)[:-1]
+            phases.append((f"it{it}_scatter", *self._scatter_phase(
+                problem.stationary, active, u_count, q_off)))
+            phases.append((f"it{it}_gather", *self._gather_phase(
+                st.changed, dsts, dpart, u_count)))
+        return SegmentedTrace.from_phases(phases)
 
-            # ---------------- scatter ---------------------------------
-            scatter_traces: List[Trace] = []
-            pe_cursor = np.zeros(cfg.n_pes, dtype=np.int64)
-            part_active = np.array(
-                [active[s:e].any() for (s, e) in self.intervals], dtype=bool)
-            for k, (s, e) in enumerate(self.intervals):
-                c = self._chan(k)
-                skip = (cfg.partition_skipping and not problem.stationary
-                        and not part_active[k])
-                if skip:
-                    continue
-                t0 = int(pe_cursor[c])
-                # 1. value prefetch (bulk, cache-line buffered)
-                pre = _line_span(self.val_base[k], (e - s) * vb)
-                scatter_traces.append(Trace(
-                    pre, np.zeros(len(pre), bool), bulk_issue(len(pre), t0)))
-                # 2. edge reads, rate-limited to `pipelines` edges/cycle
-                m_k = int(self.m_k[k])
-                elines = _line_span(self.edge_base[k], m_k * eb)
-                window = int(np.ceil(m_k / cfg.pipelines) * ratio)
-                scatter_traces.append(Trace(
-                    elines, np.zeros(len(elines), bool),
-                    _spread(len(elines), t0, t0 + window)))
-                # 3. update writes through the crossbar to each queue j
-                mask_k = kp == k
-                dpart_k = dpart[mask_k]
-                for j in np.unique(dpart_k):
-                    cnt = int(u_count[k, j])
-                    byte0 = (self.queue_base[j] + int(q_off[k, j]) * ub)
-                    qlines = _line_span(byte0, cnt * ub)
-                    scatter_traces.append(Trace(
-                        qlines, np.ones(len(qlines), bool),
-                        _spread(len(qlines), t0, t0 + window)))
-                pe_cursor[c] = t0 + max(window, 1)
-            dram.run_phase(interleave_issue_ordered(scatter_traces),
-                           f"it{it}_scatter")
-
-            # ---------------- gather ----------------------------------
-            gather_traces = []
-            pe_cursor[:] = 0
-            for j, (s, e) in enumerate(self.intervals):
-                c = self._chan(j)
-                U_j = int(u_count[:, j].sum())
-                if cfg.partition_skipping and U_j == 0:
-                    continue
-                t0 = int(pe_cursor[c])
-                pre = _line_span(self.val_base[j], (e - s) * vb)
-                gather_traces.append(Trace(
-                    pre, np.zeros(len(pre), bool), bulk_issue(len(pre), t0)))
-                qlines = _line_span(self.queue_base[j], U_j * ub)
-                window = int(np.ceil(U_j / cfg.pipelines) * ratio)
-                gather_traces.append(Trace(
-                    qlines, np.zeros(len(qlines), bool),
-                    _spread(len(qlines), t0, t0 + window)))
-                # semi-random value writes (changed only, line-buffered
-                # per dst-sorted queue region)
-                mask_j = dpart == j
-                wdst = dsts[mask_j]
-                wdst = wdst[st.changed[wdst]]
-                wlines = np.unique(
-                    (self.val_base[j] + (wdst - s) * vb) // CACHE_LINE_BYTES)
-                gather_traces.append(Trace(
-                    wlines, np.ones(len(wlines), bool),
-                    _spread(len(wlines), t0, t0 + window)))
-                pe_cursor[c] = t0 + max(window, 1)
-            dram.run_phase(interleave_issue_ordered(gather_traces),
-                           f"it{it}_gather")
-
-        total_bytes = sum(ph.bytes for ph in dram.phases)
+    def make_report(self, problem: Problem, run: RunResult,
+                    stats) -> SimReport:
+        """Assemble the report from any executed DRAM-stats surface."""
+        total_bytes = sum(ph.bytes for ph in stats.phases)
         return SimReport(
             system="hitgraph", problem=problem.value, graph=self.g.name,
-            runtime_ns=dram.now / self.dram.clock_ghz,
+            runtime_ns=stats.now / self.dram.clock_ghz,
             iterations=run.iterations, edges=self.g.m, vertices=self.g.n,
-            total_requests=dram.total_requests, total_bytes=total_bytes,
-            row_hit_rate=(dram.total_row_hits / max(dram.total_requests, 1)),
-            phases=dram.phases,
+            total_requests=stats.total_requests, total_bytes=total_bytes,
+            row_hit_rate=(stats.total_row_hits
+                          / max(stats.total_requests, 1)),
+            phases=stats.phases,
         )
+
+    def simulate(self, problem: Problem, root: int = 0,
+                 fixed_iters: Optional[int] = None,
+                 run: Optional[RunResult] = None,
+                 memory_system=None) -> SimReport:
+        """Simulate; ``memory_system`` injects a DRAM backend (any object
+        with the :class:`VectorizedDRAM` program/phase interface, e.g.
+        the event-driven ``repro.sim.backends.EventDRAM``)."""
+        if run is None:
+            run = edge_centric.run(self.g, problem, root=root,
+                                   fixed_iters=fixed_iters)
+        dram = (memory_system if memory_system is not None
+                else VectorizedDRAM(self.dram))
+        dram.run_program(self.build_program(problem, run))
+        return self.make_report(problem, run, dram)
 
 
 def simulate(g: Graph, problem: Problem,

@@ -15,26 +15,66 @@ scan.  The Pallas kernel (``kernels/dram_timing``) fuses the same scan with
 VMEM-resident state; this module is its jnp oracle *and* the fast path on
 CPU.
 
-Cycle math is int32 (TPU-friendly): traces must satisfy
-``max_cycles < 2**31`` (asserted); large workloads are simulated in chunks
-with carried state.
+Two entry points:
+
+* :func:`simulate_packed` — one phase, channels ``vmap``-ed over a
+  ``[C, L]`` batch (the legacy per-phase path);
+* :func:`fused_scan` — a whole multi-phase program in one scan: channels
+  step in lockstep over blocked ``[S, C, K]`` streams (a step retires up
+  to K row hits per channel, or one miss) and phase barriers are honored
+  *inside* the scan (the carry is re-based by the global makespan at
+  each segment boundary), so an entire simulation run costs a handful of
+  fixed-shape chunk dispatches instead of two dispatches per iteration.
+
+DRAM timing parameters (``tCL``, ``tRCD``, ...) are *traced* int32 inputs,
+not static jit arguments: one compiled scan serves DDR3 / DDR4 / HBM2 /
+HBM2E, and the fused scan can be ``vmap``-ed over a batch of memory
+configurations (see ``repro.sim.sweep(batch_memories=True)``).
+
+Cycle math is int32 (TPU-friendly): each *phase* must satisfy
+``max_cycles < 2**31`` (asserted); the fused scan re-bases at every
+barrier, so whole runs of arbitrary length are fine.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Dict, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.dram import DRAMConfig, CACHE_LINE_BYTES
+from repro.core.dram import DRAMConfig, DRAMTiming, CACHE_LINE_BYTES
 from repro.core import timing as timing_mod
-from repro.core.trace import Trace
+from repro.core.trace import Trace, group_ranks
 
 NEG_INF32 = -(1 << 30)
+
+#: per-phase relative issue cycles must stay below this (int32 headroom)
+MAX_PHASE_ISSUE = 2**31 - 2**26
+
+TIMING_FIELDS = ("tCL", "tRCD", "tRP", "tRAS", "tBL", "tRRD", "tFAW")
+
+#: jitted-scan dispatch counters (see :func:`dispatch_counts`); the
+#: throughput benchmark asserts a run costs a few fused chunk dispatches,
+#: never the legacy two per iteration.
+DISPATCHES = {"packed": 0, "fused": 0, "fused_batch": 0}
+
+
+def dispatch_counts() -> Dict[str, int]:
+    return dict(DISPATCHES)
+
+
+def reset_dispatch_counts() -> None:
+    for k in DISPATCHES:
+        DISPATCHES[k] = 0
+
+
+def timing_params(t: DRAMTiming) -> np.ndarray:
+    """Timing parameters as the traced int32[7] the scans consume."""
+    return np.array([getattr(t, f) for f in TIMING_FIELDS], dtype=np.int32)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -48,6 +88,30 @@ class PackedChannels:
     scatter_index: np.ndarray  # int64[C, L] -> position in original trace
 
 
+def pack_streams(ch: np.ndarray, issue: np.ndarray, bank: np.ndarray,
+                 row: np.ndarray, channels: int, length: int):
+    """Scatter program-order request components into padded per-channel
+    streams (single stable argsort — the shared packing helper behind
+    :func:`pack_channels` and the phase/fused backends in
+    :mod:`repro.core.accel`).
+
+    Returns ``(issue[C, L] int32, bank[C, L] int32, row[C, L] int32,
+    valid[C, L] bool, slot[n] int64)`` where ``slot`` is each request's
+    position within its channel stream.
+    """
+    counts = np.bincount(ch, minlength=channels)
+    slot = group_ranks(counts, ch)
+    issue_p = np.zeros((channels, length), dtype=np.int32)
+    bank_p = np.zeros((channels, length), dtype=np.int32)
+    row_p = np.zeros((channels, length), dtype=np.int32)
+    valid_p = np.zeros((channels, length), dtype=bool)
+    issue_p[ch, slot] = issue
+    bank_p[ch, slot] = bank
+    row_p[ch, slot] = row
+    valid_p[ch, slot] = True
+    return issue_p, bank_p, row_p, valid_p, slot
+
+
 def pack_channels(trace: Trace, cfg: DRAMConfig) -> PackedChannels:
     """Split a program-order trace into per-channel padded streams."""
     comps = cfg.decode_lines(trace.line_addr)
@@ -55,21 +119,12 @@ def pack_channels(trace: Trace, cfg: DRAMConfig) -> PackedChannels:
     C = cfg.channels
     counts = np.bincount(ch, minlength=C)
     L = max(int(counts.max()) if len(trace) else 0, 1)
-    issue = np.zeros((C, L), dtype=np.int32)
-    bank = np.zeros((C, L), dtype=np.int32)
-    row = np.zeros((C, L), dtype=np.int32)
-    valid = np.zeros((C, L), dtype=bool)
-    scatter = np.zeros((C, L), dtype=np.int64)
-    if np.any(trace.issue < 0) or np.any(trace.issue >= 2**31 - 2**26):
+    if np.any(trace.issue < 0) or np.any(trace.issue >= MAX_PHASE_ISSUE):
         raise ValueError("issue cycles out of int32 range; chunk the trace")
-    for c in range(C):
-        idx = np.nonzero(ch == c)[0]
-        n = len(idx)
-        issue[c, :n] = trace.issue[idx]
-        bank[c, :n] = comps["bank_in_channel"][idx]
-        row[c, :n] = comps["row"][idx]
-        valid[c, :n] = True
-        scatter[c, :n] = idx
+    issue, bank, row, valid, slot = pack_streams(
+        ch, trace.issue, comps["bank_in_channel"], comps["row"], C, L)
+    scatter = np.zeros((C, L), dtype=np.int64)
+    scatter[ch, slot] = np.arange(len(trace), dtype=np.int64)
     return PackedChannels(issue, bank, row, valid, scatter)
 
 
@@ -87,59 +142,85 @@ def init_channel_carry(n_banks: int, banks_per_rank: int):
     )
 
 
-def _channel_scan(
-    issue: jnp.ndarray, bank: jnp.ndarray, row: jnp.ndarray,
-    valid: jnp.ndarray, n_banks: int, banks_per_rank: int,
-    tCL: int, tRCD: int, tRP: int, tRAS: int, tBL: int,
-    tRRD: int, tFAW: int,
-    carry=None,
-):
+def rebase_carry(carry, shift):
+    """Shift all time-like carry components ``shift`` cycles into the past,
+    clamped at ``NEG_INF32`` (overflow-safe: computed as
+    ``max(t, shift + NEG_INF32) - shift``).
+
+    The service recurrence is shift-equivariant (every operation is a max
+    or an add of a constant), and clamping only touches values that are
+    already below any reachable future time, so a re-based scan is
+    bit-equivalent to an absolute-time one — this is what lets the fused
+    scan cross phase barriers without returning to Python and lets whole
+    runs exceed the int32 cycle range.
+    """
+    (open_row, act_time, bank_avail, bus_free,
+     act_hist, act_ptr, last_act_rank) = carry
+
+    def sh(x):
+        return jnp.maximum(x, shift + NEG_INF32) - shift
+
+    return (open_row, sh(act_time), sh(bank_avail), sh(bus_free),
+            sh(act_hist), act_ptr, sh(last_act_rank))
+
+
+def _request_step(state, x, t):
+    """Serve one request on one channel: the shared scan step.
+
+    ``t`` is the 7-tuple of (traced) timing scalars in
+    :data:`TIMING_FIELDS` order.  Invalid lanes (``v == False``) leave the
+    state untouched and emit ``(0, -1)``.
+    """
+    tCL, tRCD, tRP, tRAS, tBL, tRRD, tFAW = t
+    (open_row, act_time, bank_avail, bus_free,
+     act_hist, act_ptr, last_act_rank) = state
+    iss, b, r, v = x
+    banks_per_rank = open_row.shape[0] // act_ptr.shape[0]
+    rank = b // banks_per_rank
+    o = open_row[b]
+    av = bank_avail[b]
+    at = act_time[b]
+    hit = o == r
+    empty = o == -1
+    base = jnp.maximum(iss, av)
+    # ACT rate limits per rank (tRRD, tFAW over the 4th-last ACT)
+    ptr = act_ptr[rank]
+    act_floor = jnp.maximum(last_act_rank[rank] + tRRD,
+                            act_hist[rank, ptr] + tFAW)
+    act = jnp.where(
+        empty,
+        jnp.maximum(base, act_floor),
+        jnp.maximum(jnp.maximum(base, at + tRAS) + tRP, act_floor),
+    )
+    col = jnp.where(hit, base, act + tRCD)
+    finish = jnp.maximum(col + tCL, bus_free) + tBL
+    kind = jnp.where(hit, 0, jnp.where(empty, 1, 2)).astype(jnp.int8)
+    did_act = jnp.logical_not(hit)
+    new_state = (
+        open_row.at[b].set(jnp.where(hit, o, r)),
+        act_time.at[b].set(jnp.where(hit, at, act)),
+        bank_avail.at[b].set(col + tBL),
+        finish,
+        act_hist.at[rank, ptr].set(
+            jnp.where(did_act, act, act_hist[rank, ptr])),
+        act_ptr.at[rank].set(
+            jnp.where(did_act, (ptr + 1) % 4, ptr)),
+        last_act_rank.at[rank].set(
+            jnp.where(did_act, act, last_act_rank[rank])),
+    )
+    state = jax.tree.map(
+        lambda new, old: jnp.where(v, new, old), new_state, state
+    )
+    out = (jnp.where(v, finish, jnp.int32(0)),
+           jnp.where(v, kind, jnp.int8(-1)))
+    return state, out
+
+
+def _channel_scan(issue, bank, row, valid, t, carry):
     """Scan one channel's stream. Returns (finish[L], kind[L], carry)."""
-    if carry is None:
-        carry = init_channel_carry(n_banks, banks_per_rank)
 
     def step(state, x):
-        (open_row, act_time, bank_avail, bus_free,
-         act_hist, act_ptr, last_act_rank) = state
-        iss, b, r, v = x
-        rank = b // banks_per_rank
-        o = open_row[b]
-        av = bank_avail[b]
-        at = act_time[b]
-        hit = o == r
-        empty = o == -1
-        base = jnp.maximum(iss, av)
-        # ACT rate limits per rank (tRRD, tFAW over the 4th-last ACT)
-        ptr = act_ptr[rank]
-        act_floor = jnp.maximum(last_act_rank[rank] + tRRD,
-                                act_hist[rank, ptr] + tFAW)
-        act = jnp.where(
-            empty,
-            jnp.maximum(base, act_floor),
-            jnp.maximum(jnp.maximum(base, at + tRAS) + tRP, act_floor),
-        )
-        col = jnp.where(hit, base, act + tRCD)
-        finish = jnp.maximum(col + tCL, bus_free) + tBL
-        kind = jnp.where(hit, 0, jnp.where(empty, 1, 2)).astype(jnp.int8)
-        did_act = jnp.logical_not(hit)
-        new_state = (
-            open_row.at[b].set(jnp.where(hit, o, r)),
-            act_time.at[b].set(jnp.where(hit, at, act)),
-            bank_avail.at[b].set(col + tBL),
-            finish,
-            act_hist.at[rank, ptr].set(
-                jnp.where(did_act, act, act_hist[rank, ptr])),
-            act_ptr.at[rank].set(
-                jnp.where(did_act, (ptr + 1) % 4, ptr)),
-            last_act_rank.at[rank].set(
-                jnp.where(did_act, act, last_act_rank[rank])),
-        )
-        state = jax.tree.map(
-            lambda new, old: jnp.where(v, new, old), new_state, state
-        )
-        out = (jnp.where(v, finish, jnp.int32(0)),
-               jnp.where(v, kind, jnp.int8(-1)))
-        return state, out
+        return _request_step(state, x, t)
 
     carry, (finish, kind) = jax.lax.scan(
         step, carry, (issue, bank, row, valid)
@@ -147,24 +228,317 @@ def _channel_scan(
     return finish, kind, carry
 
 
-@functools.partial(jax.jit, static_argnames=(
-    "n_banks", "banks_per_rank", "tCL", "tRCD", "tRP", "tRAS", "tBL",
-    "tRRD", "tFAW"))
-def _simulate_packed(issue, bank, row, valid, n_banks, banks_per_rank,
-                     tCL, tRCD, tRP, tRAS, tBL, tRRD, tFAW, carry=None):
-    fn = functools.partial(
-        _channel_scan, n_banks=n_banks, banks_per_rank=banks_per_rank,
-        tCL=tCL, tRCD=tRCD, tRP=tRP, tRAS=tRAS, tBL=tBL, tRRD=tRRD,
-        tFAW=tFAW,
-    )
+@functools.partial(jax.jit, static_argnames=("n_banks", "banks_per_rank"))
+def _simulate_packed(issue, bank, row, valid, timing, n_banks,
+                     banks_per_rank, carry=None):
+    t = tuple(timing[i] for i in range(len(TIMING_FIELDS)))
     if carry is None:
-        finish, kind, carry = jax.vmap(
-            lambda i, b, r, v: fn(i, b, r, v))(issue, bank, row, valid)
-    else:
-        finish, kind, carry = jax.vmap(
-            lambda i, b, r, v, c: fn(i, b, r, v, carry=c))(
-                issue, bank, row, valid, carry)
+        single = init_channel_carry(n_banks, banks_per_rank)
+        carry = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (issue.shape[0],) + x.shape),
+            single)
+    finish, kind, carry = jax.vmap(
+        lambda i, b, r, v, c: _channel_scan(i, b, r, v, t, c))(
+            issue, bank, row, valid, carry)
     return finish, kind, carry
+
+
+def simulate_packed(issue, bank, row, valid, timing, n_banks,
+                    banks_per_rank, carry=None):
+    """Dispatch-counted wrapper around the jitted per-phase scan."""
+    DISPATCHES["packed"] += 1
+    return _simulate_packed(
+        jnp.asarray(issue), jnp.asarray(bank), jnp.asarray(row),
+        jnp.asarray(valid), jnp.asarray(timing, dtype=jnp.int32),
+        n_banks, banks_per_rank, carry)
+
+
+# ---------------------------------------------------------------------------
+# Fused whole-program scan: all phases of a run in one dispatch.
+#
+# The scan state deliberately avoids gathers/scatters (XLA CPU executes
+# them ~10x slower than dense ops inside a scan): per-bank state is
+# addressed with one-hot masks over the tiny [C, B] arrays, and the
+# row-buffer *classification* (hit / empty / conflict) is precomputed on
+# the host — it depends only on each bank's row sequence, never on timing
+# — so the device scan only chains the max-plus timing recurrences.
+# ---------------------------------------------------------------------------
+
+def init_lean_carry(channels: int, n_banks: int, banks_per_rank: int):
+    """Initial fused-scan carry: ``(avail[C,B], act[C,B], bus[C],
+    act_hist[C,R,4], act_ptr[C,R])``.  ``last_act`` is not carried — it is
+    always ``act_hist[ptr - 1]`` (the most recent push)."""
+    n_ranks = n_banks // banks_per_rank
+    C = channels
+    return (
+        jnp.zeros((C, n_banks), dtype=jnp.int32),             # bank_avail
+        jnp.full((C, n_banks), NEG_INF32, dtype=jnp.int32),   # act_time
+        jnp.zeros((C,), dtype=jnp.int32),                     # bus_free
+        jnp.full((C, n_ranks, 4), NEG_INF32, dtype=jnp.int32),  # act_hist
+        jnp.zeros((C, n_ranks), dtype=jnp.int32),             # act_ptr
+    )
+
+
+def lean_from_full(carry):
+    """Convert a per-channel ``init_channel_carry`` pytree (leading C
+    axis) to the fused-scan carry (drops ``open_row`` — host-tracked —
+    and ``last_act_rank`` — derivable from the history)."""
+    (open_row, act_time, bank_avail, bus_free,
+     act_hist, act_ptr, last_act_rank) = carry
+    return (bank_avail, act_time, bus_free, act_hist,
+            act_ptr.astype(jnp.int32))
+
+
+def full_from_lean(lean, open_row):
+    """Inverse of :func:`lean_from_full`; ``open_row`` is the host-tracked
+    int32[C, B] row state."""
+    avail, act, bus, hist, ptr = lean
+    last = jnp.take_along_axis(hist, ((ptr + 3) % 4)[..., None],
+                               axis=2)[..., 0]
+    return (jnp.asarray(open_row, dtype=jnp.int32), act, avail, bus,
+            hist, ptr, last)
+
+
+def _lean_rebase(avail, act, bus, hist, shift):
+    def sh(x):
+        return jnp.maximum(x, shift + NEG_INF32) - shift
+    return sh(avail), sh(act), sh(bus), sh(hist)
+
+
+#: bit layout of the packed per-request metadata word (``meta`` stream):
+#: bits 0..7 bank-in-channel, 8 miss, 9 conflict, 10 valid,
+#: 11..14 bank-rank within the block (for the in-step hit chain).
+META_MISS, META_CONFL, META_VALID = 1 << 8, 1 << 9, 1 << 10
+META_RB_SHIFT = 11
+
+
+def pack_meta(bank: np.ndarray, miss: np.ndarray, confl: np.ndarray,
+              valid: np.ndarray, bank_rank=None) -> np.ndarray:
+    """Fuse the per-request metadata into one int32 stream (one scan-step
+    slice instead of four)."""
+    meta = np.asarray(bank, dtype=np.int32).copy()
+    meta |= np.asarray(miss, dtype=np.int32) << 8
+    meta |= np.asarray(confl, dtype=np.int32) << 9
+    meta |= np.asarray(valid, dtype=np.int32) << 10
+    if bank_rank is not None:
+        meta |= np.asarray(bank_rank, dtype=np.int32) << META_RB_SHIFT
+    return meta
+
+
+def _fused_scan_core(issue, meta, boundary, timing, carry,
+                     banks_per_rank):
+    """One scan over a whole multi-phase program, K requests per channel
+    per step.
+
+    ``issue/meta`` are ``[S, C, K]`` *blocked* lockstep streams: step
+    ``s`` serves every channel's ``s``-th block of the current phase.  A
+    block is either up to K consecutive row *hits* (their only timing
+    coupling is the per-bank ``bank_avail`` chain — a max-plus recurrence
+    the step resolves with one in-step ``cummax`` over the block's
+    bank-rank-adjusted issues — and the shared bus, another cummax) or a
+    single row miss (which additionally touches the per-rank ACT
+    history).  ``boundary[S]`` marks each phase's last step; at a
+    boundary the global makespan (max over channels) re-bases the carry
+    so the next phase's *phase-relative* issue cycles start from 0 again
+    — the in-scan equivalent of the controller's "wait for all memory
+    requests, then switch phases".
+
+    The kernel is deliberately gather/scatter-free (XLA CPU executes
+    those ~10x slower inside a scan): per-bank state is addressed with
+    one-hot masks over the tiny [C, B] arrays.
+
+    Returns ``(finish[S, C, K], carry)``; finishes are relative to their
+    phase's start (0 on invalid lanes), so per-phase makespans and stats
+    reduce on the host.
+    """
+    tCL, tRCD, tRP, tRAS, tBL, tRRD, tFAW = (
+        timing[i] for i in range(len(TIMING_FIELDS)))
+    C, B = carry[0].shape
+    R = carry[3].shape[1]
+    K = issue.shape[2]
+    bank_ids = jnp.arange(B, dtype=jnp.int32)
+    rank_ids = jnp.arange(R, dtype=jnp.int32)
+    ptr_ids = jnp.arange(4, dtype=jnp.int32)
+    lane_ids = jnp.arange(K, dtype=jnp.int32)
+    tril = lane_ids[:, None] >= lane_ids[None, :]          # [K, K]
+    lane_tbl = lane_ids * tBL                              # loop-invariant
+    lane_tbl1 = (lane_ids + 1) * tBL
+
+    def pick(masked, axis):
+        return jnp.max(masked, axis=axis)
+
+    def step(state, x):
+        avail, act, bus, hist, ptr, pmf = state
+        iss, mt, bnd = x                                   # [C, K]
+        b = mt & 0xFF
+        ms = (mt & META_MISS) != 0
+        cf = (mt & META_CONFL) != 0
+        v = (mt & META_VALID) != 0
+        rb_tbl = ((mt >> META_RB_SHIFT) & 0xF) * tBL       # bank-rank*tBL
+        ohb = b[:, :, None] == bank_ids                    # [C, K, B]
+        avail_b = pick(jnp.where(ohb, avail[:, None, :], NEG_INF32), 2)
+        act_b = pick(jnp.where(ohb, act[:, None, :], NEG_INF32), 2)
+        # --- hit chain: col_r = r*tBL + max(max_{s<=r, same bank}
+        #     (iss_s - s*tBL), avail_entry) over the block's lanes
+        adj = iss - rb_tbl
+        same = (b[:, :, None] == b[:, None, :]) & tril     # [C, K, K]
+        own = pick(jnp.where(same, adj[:, None, :], NEG_INF32), 2)
+        col_hit = rb_tbl + jnp.maximum(own, avail_b)
+        # --- miss machinery at block level (at most one miss per block,
+        #     alone in it), so rank/ptr/hist select tiny [C, ...] slices
+        mv = ms & v
+        m_any = mv.any(axis=1)                             # [C]
+        if R == 1:
+            ptr_m = ptr[:, 0]                              # [C]
+            hist_m = hist[:, 0]                            # [C, 4]
+        else:
+            rank = b // banks_per_rank
+            rank_m = pick(jnp.where(mv, rank, 0), 1)       # [C]
+            ohr_m = rank_m[:, None] == rank_ids            # [C, R]
+            ptr_m = pick(jnp.where(ohr_m, ptr, 0), 1)
+            hist_m = pick(jnp.where(ohr_m[:, :, None], hist, NEG_INF32),
+                          1)                               # [C, 4]
+        ohp_m = ptr_m[:, None] == ptr_ids                  # [C, 4]
+        oh_last = ((ptr_m + 3) % 4)[:, None] == ptr_ids
+        hist_p = pick(jnp.where(ohp_m, hist_m, NEG_INF32), 1)
+        last_r = pick(jnp.where(oh_last, hist_m, NEG_INF32), 1)
+        # ACT rate limits per rank (tRRD, tFAW over the 4th-last ACT)
+        floor = jnp.maximum(last_r + tRRD, hist_p + tFAW)  # [C]
+        base = jnp.maximum(iss, avail_b)
+        pre = jnp.where(cf, jnp.maximum(base, act_b + tRAS) + tRP, base)
+        a = jnp.maximum(pre, floor[:, None])               # miss ACT time
+        col = jnp.where(ms, a + tRCD, col_hit)
+        # --- shared data bus: prefix max over the block's lanes
+        cadj = col + tCL - lane_tbl
+        ccm = pick(jnp.where(tril & v[:, None, :], cadj[:, None, :],
+                             NEG_INF32), 2)
+        fin = lane_tbl1 + jnp.maximum(bus[:, None], ccm)
+        fin_out = jnp.where(v, fin, jnp.int32(0))
+        mx = pick(fin_out, 1)                              # [C]
+        # bank_avail/act/hist/bus only ever increase (chains are
+        # monotone), so updates are plain maxes — no masked selects
+        bus = jnp.maximum(bus, mx)
+        pmf = jnp.maximum(pmf, mx)
+        vohb = ohb & v[:, :, None]
+        avail = jnp.maximum(
+            avail,
+            pick(jnp.where(vohb, (col + tBL)[:, :, None], NEG_INF32), 1))
+        a_m = pick(jnp.where(mv, a, NEG_INF32), 1)         # [C]
+        act = jnp.maximum(
+            act, pick(jnp.where(ohb & mv[:, :, None], a[:, :, None],
+                                NEG_INF32), 1))
+        if R == 1:
+            hist = jnp.maximum(
+                hist, jnp.where(ohp_m & m_any[:, None],
+                                a_m[:, None], NEG_INF32)[:, None, :])
+            ptr = jnp.where(m_any[:, None], (ptr_m + 1)[:, None] % 4,
+                            ptr)
+        else:
+            hist = jnp.maximum(
+                hist, jnp.where(
+                    (ohr_m[:, :, None] & ohp_m[:, None, :])
+                    & m_any[:, None, None],
+                    a_m[:, None, None], NEG_INF32))
+            ptr = jnp.where(ohr_m & m_any[:, None],
+                            ((ptr_m + 1) % 4)[:, None], ptr)
+
+        def rebase(op):
+            avail, act, bus, hist, pmf = op
+            shift = jnp.max(pmf)
+            avail, act, bus, hist = _lean_rebase(avail, act, bus, hist,
+                                                 shift)
+            return avail, act, bus, hist, jnp.zeros_like(pmf)
+
+        avail, act, bus, hist, pmf = jax.lax.cond(
+            bnd, rebase, lambda op: op, (avail, act, bus, hist, pmf))
+        return (avail, act, bus, hist, ptr, pmf), fin_out
+
+    state, fin = jax.lax.scan(step, carry, (issue, meta, boundary))
+    return fin, state
+
+
+#: fixed scan-chunk sizes (steps).  A program runs as a few dispatches of
+#: these two shapes instead of one dispatch of a bespoke shape: the scan
+#: carry chains across chunks bit-exactly, and the jit cache holds TWO
+#: compiled scans per DRAM structure for the life of the process — no
+#: per-program-length recompilation.
+CHUNK_LADDER = (1 << 13, 1 << 17)
+
+
+def plan_chunks(n_steps: int):
+    """Greedy chunk plan covering ``n_steps``: large chunks, then small
+    ones (the tail pads to at most ``CHUNK_LADDER[0]`` wasted steps)."""
+    small, large = CHUNK_LADDER
+    n_large, rem = divmod(n_steps, large)
+    n_small = -(-rem // small) if rem else 0
+    return [large] * n_large + [small] * n_small
+
+
+@jax.jit
+def _fused_scan(issue, meta, boundary, timing, carry):
+    banks_per_rank = carry[0].shape[1] // carry[3].shape[1]
+    return _fused_scan_core(issue, meta, boundary, timing, carry,
+                            banks_per_rank)
+
+
+def fused_scan(issue, meta, boundary, timing, carry):
+    """Serve a whole packed program: a handful of fixed-shape jitted
+    dispatches (see :data:`CHUNK_LADDER`), state chained across chunks.
+
+    ``carry`` is the 5-tuple persistent lean carry; the transient
+    phase-makespan accumulator is managed here (programs end on a phase
+    boundary, where it is zero by construction).
+    """
+    C = issue.shape[1]
+    state = tuple(carry) + (jnp.zeros((C,), dtype=jnp.int32),)
+    timing = jnp.asarray(timing, dtype=jnp.int32)
+    fins = []
+    pos = 0
+    for size in plan_chunks(issue.shape[0]):
+        DISPATCHES["fused"] += 1
+        fin, state = _fused_scan(
+            jnp.asarray(issue[pos:pos + size]),
+            jnp.asarray(meta[pos:pos + size]),
+            jnp.asarray(boundary[pos:pos + size]), timing, state)
+        fins.append(np.asarray(fin))
+        pos += size
+    fin_all = (np.concatenate(fins) if len(fins) != 1 else fins[0])
+    return fin_all, state[:5]
+
+
+@jax.jit
+def _fused_scan_batch(issue, meta, boundary, timing, carry):
+    banks_per_rank = carry[0].shape[2] // carry[3].shape[2]
+    return jax.vmap(
+        lambda i, mt, bd, tm, c: _fused_scan_core(
+            i, mt, bd, tm, c, banks_per_rank)
+    )(issue, meta, boundary, timing, carry)
+
+
+def fused_scan_batch(issue, meta, boundary, timing, n_banks,
+                     banks_per_rank):
+    """Batched fused scan: leading axis = memory/case batch; each chunk
+    dispatch serves every case in the batch
+    (``sweep(batch_memories=True)``)."""
+    M, S, C, K = issue.shape
+    single = init_lean_carry(C, n_banks, banks_per_rank)
+    state = jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (M,) + x.shape),
+        single + (jnp.zeros((C,), dtype=jnp.int32),))
+    timing = jnp.asarray(timing, dtype=jnp.int32)
+    fins = []
+    pos = 0
+    for size in plan_chunks(S):
+        DISPATCHES["fused_batch"] += 1
+        fin, state = _fused_scan_batch(
+            jnp.asarray(issue[:, pos:pos + size]),
+            jnp.asarray(meta[:, pos:pos + size]),
+            jnp.asarray(boundary[:, pos:pos + size]), timing, state)
+        fins.append(np.asarray(fin))
+        pos += size
+    fin_all = (np.concatenate(fins, axis=1) if len(fins) != 1
+               else fins[0])
+    return fin_all, state[:5]
 
 
 def simulate_trace_jax(
@@ -174,12 +548,9 @@ def simulate_trace_jax(
     if len(trace) == 0:
         return timing_mod.simulate_trace(trace.line_addr, trace.issue, cfg)
     packed = pack_channels(trace, cfg)
-    t = cfg.timing
-    finish, kind, _ = _simulate_packed(
-        jnp.asarray(packed.issue), jnp.asarray(packed.bank),
-        jnp.asarray(packed.row), jnp.asarray(packed.valid),
-        cfg.banks_per_channel, cfg.org.banks,
-        t.tCL, t.tRCD, t.tRP, t.tRAS, t.tBL, t.tRRD, t.tFAW,
+    finish, kind, _ = simulate_packed(
+        packed.issue, packed.bank, packed.row, packed.valid,
+        timing_params(cfg.timing), cfg.banks_per_channel, cfg.org.banks,
     )
     finish = np.asarray(finish)
     kind = np.asarray(kind)

@@ -11,9 +11,11 @@ from repro.core import vectorized as vec
 
 def dram_timing_ref(issue, bank, row, valid, *, n_banks, banks_per_rank,
                     tCL, tRCD, tRP, tRAS, tBL, tRRD, tFAW):
+    timing = jnp.array([tCL, tRCD, tRP, tRAS, tBL, tRRD, tFAW],
+                       dtype=jnp.int32)
     finish, kind, _ = vec._simulate_packed(
         jnp.asarray(issue, jnp.int32), jnp.asarray(bank, jnp.int32),
         jnp.asarray(row, jnp.int32), jnp.asarray(valid, bool),
-        n_banks, banks_per_rank, tCL, tRCD, tRP, tRAS, tBL, tRRD, tFAW,
+        timing, n_banks, banks_per_rank,
     )
     return finish.astype(jnp.int32), kind.astype(jnp.int32)

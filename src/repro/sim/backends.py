@@ -1,20 +1,24 @@
-"""DRAM simulation backends behind one phase-level interface.
+"""DRAM simulation backends behind one program-level interface.
 
 A backend is any object exposing the :class:`~repro.core.accel.
 VectorizedDRAM` surface the trace models drive:
 
-* ``run_phase(trace, name) -> int`` — simulate one phase starting at the
-  current clock, carrying DRAM state (open rows, bank availability)
-  across phases; returns the phase makespan;
+* ``run_program(segmented_trace) -> int`` — simulate a whole multi-phase
+  program (every phase the model emitted up front), carrying DRAM state
+  (open rows, bank availability) across the phase barriers; returns the
+  final makespan;
+* ``run_phase(trace, name) -> int`` — incremental single-phase form
+  (``run_program`` is bit-equivalent to calling this per phase);
 * ``now`` / ``phases`` / ``total_requests`` / ``total_row_hits`` /
   ``total_row_conflicts`` — accumulated statistics for the SimReport.
 
-``"vectorized"`` is the JAX ``lax.scan`` fast path; ``"event"`` is the
-element-granularity python replay through :class:`ChannelState` — the
-fidelity reference (the two are bit-equivalent on integer cycle counts;
-property tests on ``simulate_trace`` vs ``simulate_trace_jax`` enforce the
-shared semantics).  Use ``"event"`` to cross-check the vectorized model on
-small instances; it is orders of magnitude slower.
+``"vectorized"`` is the JAX fast path — the whole program in ONE jitted
+``lax.scan`` dispatch with the barriers honored inside the scan;
+``"event"`` is the element-granularity python replay through
+:class:`ChannelState` — the fidelity reference (the two are bit-equivalent
+on integer cycle counts; property tests enforce the shared semantics).
+Use ``"event"`` to cross-check the vectorized model on small instances;
+it is orders of magnitude slower.
 """
 
 from __future__ import annotations
@@ -26,7 +30,7 @@ import numpy as np
 from repro.core.accel import PhaseStats, VectorizedDRAM
 from repro.core.dram import CACHE_LINE_BYTES, DRAMConfig
 from repro.core.timing import ChannelState, ROW_CONFLICT, ROW_HIT
-from repro.core.trace import Trace
+from repro.core.trace import SegmentedTrace, Trace
 
 
 class EventDRAM:
@@ -77,6 +81,12 @@ class EventDRAM:
         self.total_row_conflicts += confl
         self.now = max(self.now, end)
         return end
+
+    def run_program(self, program: SegmentedTrace) -> int:
+        """Serve a whole program phase by phase (element granularity)."""
+        for p in range(program.n_phases):
+            self.run_phase(program.phase(p), program.names[p])
+        return self.now
 
 
 BACKENDS: Dict[str, type] = {

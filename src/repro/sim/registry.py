@@ -100,7 +100,8 @@ class AcceleratorSpec:
     def simulate(self, g: Graph, problem: Problem, config=None,
                  backend: Optional[str] = None, root: int = 0,
                  fixed_iters: Optional[int] = None,
-                 run: Optional[RunResult] = None) -> SimReport:
+                 run: Optional[RunResult] = None,
+                 model=None) -> SimReport:
         from repro.sim.backends import make_backend
         cfg = config if config is not None else self.config_cls()
         if backend is None:
@@ -109,7 +110,8 @@ class AcceleratorSpec:
             raise ValueError(
                 f"accelerator {self.name!r} supports backends "
                 f"{self.backends}, got {backend!r}")
-        model = self.build_model(g, cfg)
+        if model is None:
+            model = self.build_model(g, cfg)
         memory_system = (None if backend == VECTORIZED
                          else make_backend(backend, model.dram))
         return model.simulate(problem, root=root, fixed_iters=fixed_iters,

@@ -40,8 +40,24 @@ class SimSession:
     def __init__(self, graph: Graph):
         self.graph = graph
         self._runs: Dict[object, RunResult] = {}
+        self._models: Dict[object, object] = {}
         self.algo_runs = 0
         self.algo_cache_hits = 0
+
+    def model_for(self, spec, config):
+        """Graph-bound model cache: model construction (edge sorts,
+        layout, static streams) is shared across problems/backends of
+        one (accelerator, config) point."""
+        try:
+            key = (spec.name, config)
+            hash(key)
+        except TypeError:
+            return spec.build_model(self.graph, config)
+        model = self._models.get(key)
+        if model is None:
+            model = self._models[key] = spec.build_model(self.graph,
+                                                         config)
+        return model
 
     def algorithm_run(self, spec, problem: Problem, config, root: int,
                       fixed_iters: Optional[int]) -> RunResult:
@@ -68,7 +84,8 @@ class SimSession:
         cfg = spec.apply_variant(cfg, variant)
         run = self.algorithm_run(spec, problem, cfg, root, fixed_iters)
         return spec.simulate(self.graph, problem, cfg, backend=backend,
-                             root=root, fixed_iters=fixed_iters, run=run)
+                             root=root, fixed_iters=fixed_iters, run=run,
+                             model=self.model_for(spec, cfg))
 
 
 def simulate(graph: Graph, problem, accelerator: str = "hitgraph", *,

@@ -124,7 +124,8 @@ class ReferenceSpec(AcceleratorSpec):
     def simulate(self, g, problem: Problem, config=None,
                  backend: Optional[str] = None, root: int = 0,
                  fixed_iters: Optional[int] = None,
-                 run: Optional[RunResult] = None) -> SimReport:
+                 run: Optional[RunResult] = None,
+                 model=None) -> SimReport:
         # inherently event-driven: the model drives its own Engine, so no
         # backend object is injected.
         if backend is None:
@@ -134,6 +135,7 @@ class ReferenceSpec(AcceleratorSpec):
                 f"accelerator 'reference' supports backends "
                 f"{self.backends}, got {backend!r}")
         cfg = config if config is not None else self.config_cls()
-        model = self.build_model(g, cfg)
+        if model is None:
+            model = self.build_model(g, cfg)
         return model.simulate(problem, root=root, fixed_iters=fixed_iters,
                               run=run)

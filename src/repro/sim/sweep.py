@@ -26,10 +26,15 @@ from __future__ import annotations
 import dataclasses
 import itertools
 import time
+from collections import defaultdict
 from typing import Any, Dict, Iterable, List, Optional, Sequence
 
+import numpy as np
+
 from repro.algorithms.common import Problem
-from repro.core.accel import SimReport
+from repro.core import vectorized as vec
+from repro.core.accel import (ProgramStats, SimReport, finalize_program,
+                              pack_program)
 from repro.graphs.formats import Graph
 from repro.sim.memory import MemoryLike, memory_name, resolve_memory
 from repro.sim.registry import get_accelerator
@@ -91,13 +96,24 @@ class SweepStats:
     cases: int = 0
     algo_runs: int = 0
     algo_cache_hits: int = 0
+    batched_cases: int = 0
+    batch_dispatches: int = 0
 
 
 class Sweeper:
-    """Executes sweep cases with per-graph algorithm-run caching."""
+    """Executes sweep cases with per-graph algorithm-run caching.
 
-    def __init__(self, backend: Optional[str] = None):
+    With ``batch_memories=True``, cases whose packed programs share a
+    compiled shape (same steps x channels x banks x ranks — e.g. one
+    accelerator/graph across DDR4 densities, HBM timings, or timing-only
+    variants) are stacked and served by ONE ``vmap``-ed fused-scan
+    dispatch; remaining cases fall back to the per-case path.
+    """
+
+    def __init__(self, backend: Optional[str] = None,
+                 batch_memories: bool = False):
         self.backend = backend
+        self.batch_memories = batch_memories
         self._sessions: Dict[int, SimSession] = {}
         self.stats = SweepStats()
 
@@ -124,14 +140,136 @@ class Sweeper:
 
     def run(self, cases: Sequence[SweepCase]) -> List[SweepRow]:
         """Run all cases; rows come back in input order, but execution is
-        grouped by (accelerator, graph) for scan-bucket reuse."""
+        grouped by (accelerator, graph) for scan/model reuse."""
         cases = list(cases)
+        if self.backend in (None, "vectorized"):
+            if self.batch_memories:
+                return self._run_batched(cases)
+            return self._run_pipelined(cases)
         order = sorted(
             range(len(cases)),
             key=lambda i: (cases[i].accelerator, id(cases[i].graph)))
         rows: List[Optional[SweepRow]] = [None] * len(cases)
         for i in order:
             rows[i] = self.run_case(cases[i])
+        return rows
+
+    def _run_pipelined(self, cases: Sequence[SweepCase]) -> List[SweepRow]:
+        """Per-case execution with DRAM packing + scans on a worker
+        thread: the host side of case i+1 (algorithm run, model, trace
+        building) overlaps the pack/scan of case i — XLA releases the
+        GIL while the scan executes, NumPy for most of the packing.
+        Bit-identical to the sequential path."""
+        from concurrent.futures import ThreadPoolExecutor
+        order = sorted(
+            range(len(cases)),
+            key=lambda i: (cases[i].accelerator, id(cases[i].graph)))
+        rows: List[Optional[SweepRow]] = [None] * len(cases)
+
+        def pack_and_scan(program, cfg):
+            packed = pack_program(program, cfg)
+            if packed is None:
+                return None, None
+            carry = vec.init_lean_carry(
+                packed.issue.shape[1], packed.n_banks,
+                packed.banks_per_rank)
+            fin, _ = vec.fused_scan(packed.issue, packed.meta,
+                                    packed.boundary, packed.timing,
+                                    carry)
+            return packed, fin
+
+        def finalize(p):
+            i, case, model, run_, fut, prep_s = p
+            t0 = time.perf_counter()
+            packed, fin = fut.result()
+            stats = (ProgramStats([], 0, 0, 0, 0) if packed is None
+                     else finalize_program(packed, fin))
+            rows[i] = SweepRow(
+                case, model.make_report(case.problem, run_, stats),
+                prep_s + time.perf_counter() - t0)
+
+        pending = None
+        with ThreadPoolExecutor(max_workers=1) as pool:
+            for i in order:
+                case = cases[i]
+                t0 = time.perf_counter()
+                prep = self._prepare_case(case, pack=False)
+                if prep is None:
+                    if pending is not None:
+                        finalize(pending)
+                        pending = None
+                    rows[i] = self.run_case(case)
+                    continue
+                self.stats.cases += 1
+                model, run_, program = prep
+                fut = pool.submit(pack_and_scan, program, model.dram)
+                prep_s = time.perf_counter() - t0
+                if pending is not None:
+                    finalize(pending)
+                pending = (i, case, model, run_, fut, prep_s)
+            if pending is not None:
+                finalize(pending)
+        return rows
+
+    def _prepare_case(self, case: SweepCase, pack: bool = True):
+        """Build (model, run, packed-or-raw program) for a batchable
+        case, or ``None`` if the accelerator has no program form (e.g.
+        the event-driven reference machine)."""
+        sess = self._session(case.graph)
+        spec = get_accelerator(case.accelerator)
+        cfg = spec.make_config(case.config,
+                               memory=resolve_memory(case.memory))
+        cfg = spec.apply_variant(cfg, case.variant)
+        model = sess.model_for(spec, cfg)
+        if not hasattr(model, "build_program"):
+            return None
+        hits0, runs0 = sess.algo_cache_hits, sess.algo_runs
+        run = sess.algorithm_run(spec, case.problem, cfg, case.root,
+                                 case.fixed_iters)
+        self.stats.algo_cache_hits += sess.algo_cache_hits - hits0
+        self.stats.algo_runs += sess.algo_runs - runs0
+        program = model.build_program(case.problem, run)
+        if not pack:
+            return model, run, program
+        packed = pack_program(program, model.dram)
+        return model, run, packed
+
+    def _run_batched(self, cases: Sequence[SweepCase]) -> List[SweepRow]:
+        rows: List[Optional[SweepRow]] = [None] * len(cases)
+        groups = defaultdict(list)
+        for i, case in enumerate(cases):
+            t0 = time.perf_counter()
+            prep = self._prepare_case(case)
+            if prep is None:
+                rows[i] = self.run_case(case)
+                continue
+            self.stats.cases += 1
+            groups[prep[2].signature if prep[2] is not None else None]\
+                .append((i, case, *prep, time.perf_counter() - t0))
+        for sig, items in groups.items():
+            if sig is None:                     # empty programs
+                for i, case, model, run, _packed, wall in items:
+                    stats = ProgramStats([], 0, 0, 0, 0)
+                    rows[i] = SweepRow(case, model.make_report(
+                        case.problem, run, stats), wall)
+                continue
+            t0 = time.perf_counter()
+            packs = [it[4] for it in items]
+            fins, _ = vec.fused_scan_batch(
+                np.stack([p.issue for p in packs]),
+                np.stack([p.meta for p in packs]),
+                np.stack([p.boundary for p in packs]),
+                np.stack([p.timing for p in packs]),
+                packs[0].n_banks, packs[0].banks_per_rank)
+            fins = np.asarray(fins)
+            share = (time.perf_counter() - t0) / len(items)
+            self.stats.batch_dispatches += 1
+            self.stats.batched_cases += len(items)
+            for (i, case, model, run, packed, wall), fin in zip(items,
+                                                                fins):
+                stats = finalize_program(packed, fin)
+                rows[i] = SweepRow(case, model.make_report(
+                    case.problem, run, stats), wall + share)
         return rows
 
 
@@ -143,6 +281,7 @@ def sweep(graphs: Iterable[Graph] = (), problems: Iterable = (),
           root: int = 0, fixed_iters: Optional[int] = None,
           backend: Optional[str] = None,
           cases: Optional[Sequence[SweepCase]] = None,
+          batch_memories: bool = False,
           sweeper: Optional[Sweeper] = None) -> List[SweepRow]:
     """Run a simulation grid; returns one row per grid point.
 
@@ -150,8 +289,11 @@ def sweep(graphs: Iterable[Graph] = (), problems: Iterable = (),
     variants``, expanded as an outer product in that order) or an explicit
     ``cases`` list for irregular grids (e.g. a per-dataset config).
     ``configs`` maps accelerator name -> config dataclass for the grid
-    form.  Pass a :class:`Sweeper` to share its cache/stats across calls
-    or to inspect ``sweeper.stats`` afterwards.
+    form.  ``batch_memories=True`` stacks cases whose packed programs
+    share a compiled shape (typically the memory axis of one
+    accelerator/graph point) into single ``vmap``-ed fused-scan
+    dispatches.  Pass a :class:`Sweeper` to share its cache/stats across
+    calls or to inspect ``sweeper.stats`` afterwards.
     """
     if cases is None:
         configs = configs or {}
@@ -162,5 +304,10 @@ def sweep(graphs: Iterable[Graph] = (), problems: Iterable = (),
             for g, p, a, m, v in itertools.product(
                 graphs, problems, accelerators, memories, variants)
         ]
-    sweeper = sweeper if sweeper is not None else Sweeper(backend=backend)
+    if sweeper is None:
+        sweeper = Sweeper(backend=backend, batch_memories=batch_memories)
+    elif batch_memories and not sweeper.batch_memories:
+        raise ValueError(
+            "batch_memories=True conflicts with the provided sweeper "
+            "(construct it with Sweeper(batch_memories=True))")
     return sweeper.run(cases)

@@ -1,0 +1,253 @@
+"""Fused whole-run DRAM pipeline: bit-equivalence of the single-dispatch
+scan against the per-phase path and the element-granularity reference,
+the int32 re-base fix, dispatch accounting, and batched sweeps."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import vectorized as vec
+from repro.core.accel import VectorizedDRAM, pack_program
+from repro.core.dram import (DRAMTiming, PRESETS, ddr3_1600k, ddr4_2400r,
+                             hbm2)
+from repro.core.trace import SegmentedTrace, Trace, bulk_issue
+from repro.graphs.generators import rmat
+from repro.sim import SweepCase, Sweeper, simulate, sweep
+from repro.sim.backends import EventDRAM
+
+
+def _random_program(rng, n_phases=6, span=1 << 18, max_n=400,
+                    sorted_issue=True):
+    phases = []
+    for p in range(n_phases):
+        n = int(rng.integers(1, max_n))
+        lines = rng.integers(0, span, n)
+        issue = rng.integers(0, 4 * n, n)
+        if sorted_issue:
+            issue = np.sort(issue)
+        phases.append((f"p{p}", lines, np.zeros(n, dtype=bool), issue))
+    return SegmentedTrace.from_phases(phases)
+
+
+def _phase_tuples(backend):
+    return [(p.name, p.requests, p.start_cycle, p.end_cycle, p.row_hits,
+             p.row_conflicts) for p in backend.phases]
+
+
+def _assert_same(a, b):
+    assert a.now == b.now
+    assert a.total_requests == b.total_requests
+    assert a.total_row_hits == b.total_row_hits
+    assert a.total_row_conflicts == b.total_row_conflicts
+    assert _phase_tuples(a) == _phase_tuples(b)
+
+
+class TestFusedBitEquivalence:
+    """The satellite contract: fused whole-run == per-phase vectorized ==
+    ``repro.core.timing`` (via EventDRAM) on randomized traces."""
+
+    @pytest.mark.parametrize("preset", list(PRESETS))
+    def test_random_programs_all_presets(self, preset):
+        cfg = PRESETS[preset]()
+        rng = np.random.default_rng(hash(preset) % 2**31)
+        prog = _random_program(rng)
+        fused = VectorizedDRAM(cfg)
+        fused.run_program(prog)
+        per_phase = VectorizedDRAM(cfg)
+        for p in range(prog.n_phases):
+            per_phase.run_phase(prog.phase(p), prog.names[p])
+        event = EventDRAM(cfg)
+        event.run_program(prog)
+        _assert_same(fused, per_phase)
+        _assert_same(fused, event)
+
+    @settings(max_examples=15, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1),
+           span=st.sampled_from([1 << 8, 1 << 14, 1 << 20]),
+           tRRD=st.integers(1, 8), tFAW=st.integers(4, 40))
+    def test_property_traced_timing(self, seed, span, tRRD, tFAW):
+        """One compiled scan serves arbitrary timing parameters (they are
+        traced int32 inputs, not compile-time constants) and still
+        matches the python-loop semantics bit-exactly."""
+        base = ddr4_2400r()
+        cfg = dataclasses.replace(
+            base, timing=dataclasses.replace(base.timing, tRRD=tRRD,
+                                             tFAW=tFAW))
+        rng = np.random.default_rng(seed)
+        prog = _random_program(rng, n_phases=4, span=span, max_n=200)
+        fused = VectorizedDRAM(cfg)
+        fused.run_program(prog)
+        event = EventDRAM(cfg)
+        event.run_program(prog)
+        _assert_same(fused, event)
+
+    def test_unsorted_issue_conflict_heavy(self):
+        """Conflict-dominated programs take the serialized (K=1) packing
+        path; equivalence must hold there too."""
+        cfg = ddr4_2400r()
+        rng = np.random.default_rng(99)
+        # tiny span -> almost every access conflicts
+        prog = _random_program(rng, n_phases=5, span=1 << 22,
+                               sorted_issue=False)
+        packed = pack_program(prog, cfg)
+        assert packed.issue.shape[2] == 1      # serialized blocks
+        fused = VectorizedDRAM(cfg)
+        fused.run_program(prog)
+        event = EventDRAM(cfg)
+        event.run_program(prog)
+        _assert_same(fused, event)
+
+    def test_mixed_phase_and_program_calls(self):
+        """run_phase and run_program interleave on one backend: the carry
+        (open rows, bank/bus state, ACT history) flows across both."""
+        cfg = ddr3_1600k(channels=2)
+        rng = np.random.default_rng(5)
+        prog1 = _random_program(rng, n_phases=3)
+        prog2 = _random_program(rng, n_phases=3)
+        mixed = VectorizedDRAM(cfg)
+        mixed.run_program(prog1)
+        for p in range(prog2.n_phases):
+            mixed.run_phase(prog2.phase(p), prog2.names[p])
+        event = EventDRAM(cfg)
+        event.run_program(prog1)
+        event.run_program(prog2)
+        _assert_same(mixed, event)
+        fused = VectorizedDRAM(cfg)
+        fused.run_program(prog1)
+        fused.run_program(prog2)
+        _assert_same(fused, event)
+
+    def test_models_match_event_backend(self):
+        g = rmat(9, 6, seed=2).undirected_view()
+        for accel in ("hitgraph", "accugraph"):
+            a = simulate(g, "wcc", accelerator=accel,
+                         partition_elements=256)
+            b = simulate(g, "wcc", accelerator=accel,
+                         partition_elements=256, backend="event")
+            assert a.runtime_ns == b.runtime_ns
+            assert a.total_requests == b.total_requests
+            assert [dataclasses.astuple(p) for p in a.phases] == \
+                [dataclasses.astuple(p) for p in b.phases]
+
+
+class TestRebaseRegression:
+    """VectorizedDRAM.run_phase int32 re-base: crossing the
+    ``2**31 - 2**26`` issue-cycle threshold must preserve accumulated
+    phases, totals, and the absolute clock (the old code wiped them)."""
+
+    def test_threshold_crossing_preserves_stats(self):
+        cfg = ddr4_2400r()
+        d = VectorizedDRAM(cfg)
+        n = 64
+        lines = np.arange(n, dtype=np.int64)
+        tr = Trace(lines, np.zeros(n, dtype=bool), bulk_issue(n, 2**30))
+        end1 = d.run_phase(tr, "a")
+        assert end1 > 2**30
+        phases_before = _phase_tuples(d)
+        # second phase starts at now ~2**30: issue + now crosses the
+        # threshold and forces the device-clock re-base
+        end2 = d.run_phase(tr, "b")
+        assert end2 >= vec.MAX_PHASE_ISSUE          # crossed into int64
+        assert len(d.phases) == 2                   # nothing wiped
+        assert _phase_tuples(d)[:1] == phases_before
+        assert d.total_requests == 2 * n
+        assert d.now == end2
+        assert d.phases[1].end_cycle > d.phases[0].end_cycle
+
+    def test_long_run_monotonic_clock(self):
+        cfg = hbm2(channels=2)
+        d = VectorizedDRAM(cfg)
+        n = 32
+        tr = Trace(np.arange(n, dtype=np.int64) * 7,
+                   np.zeros(n, dtype=bool), bulk_issue(n, 2**30))
+        ends = [d.run_phase(tr, f"p{i}") for i in range(6)]
+        assert ends == sorted(ends)
+        assert len(d.phases) == 6
+        assert d.total_requests == 6 * n
+        assert ends[-1] > 2**32                     # far past int32
+
+    def test_program_after_rebase(self):
+        """run_program continues correctly after a re-based run_phase."""
+        cfg = ddr4_2400r()
+        d = VectorizedDRAM(cfg)
+        n = 64
+        tr = Trace(np.arange(n, dtype=np.int64), np.zeros(n, bool),
+                   bulk_issue(n, 2**30))
+        d.run_phase(tr, "a")
+        d.run_phase(tr, "b")                        # triggers re-base
+        rng = np.random.default_rng(0)
+        prog = _random_program(rng, n_phases=2)
+        now0 = d.now
+        d.run_program(prog)
+        assert d.now > now0
+        assert len(d.phases) == 4
+        assert d.total_requests == 2 * n + len(prog)
+
+
+class TestDispatchAccounting:
+    def test_one_fused_dispatch_per_run(self):
+        g = rmat(8, 5, seed=7).undirected_view()
+        vec.reset_dispatch_counts()
+        simulate(g, "wcc", accelerator="hitgraph", partition_elements=256)
+        counts = vec.dispatch_counts()
+        assert counts["fused"] == 1                 # whole run, one scan
+        assert counts["packed"] == 0
+
+    def test_batched_sweep_single_dispatch(self):
+        g = rmat(8, 5, seed=7).undirected_view()
+        cases = [SweepCase(graph=g, problem="wcc", accelerator="accugraph",
+                           memory=m) for m in (None, "ddr4-8gb")]
+        sweep(cases=cases)                          # warm compiles
+        vec.reset_dispatch_counts()
+        sw = Sweeper(batch_memories=True)
+        rows = sweep(cases=cases, sweeper=sw)
+        counts = vec.dispatch_counts()
+        assert sw.stats.batched_cases == 2
+        assert sw.stats.batch_dispatches == counts["fused_batch"] == 1
+        assert counts["fused"] == 0
+
+
+class TestBatchedSweep:
+    def test_matches_sequential(self):
+        g = rmat(9, 5, seed=3).undirected_view()
+        kw = dict(graphs=[g], problems=["wcc"],
+                  accelerators=["hitgraph", "accugraph"],
+                  memories=[None, "hbm2"])
+        batched = sweep(batch_memories=True, **kw)
+        seq = sweep(**kw)
+        for b, s in zip(batched, seq):
+            assert b.report.runtime_ns == s.report.runtime_ns
+            assert b.report.total_requests == s.report.total_requests
+            assert b.report.row_hit_rate == s.report.row_hit_rate
+            assert _phase_tuples(b.report) == _phase_tuples(s.report)
+
+    def test_reference_accelerator_falls_back(self):
+        g = rmat(7, 4, seed=1).undirected_view()
+        rows = sweep(graphs=[g], problems=["wcc"],
+                     accelerators=["reference"], batch_memories=True)
+        assert rows[0].report.system == "reference"
+        assert rows[0].report.runtime_ns > 0
+
+
+class TestSegmentedTrace:
+    def test_from_phases_drops_empty(self):
+        z = np.empty(0, dtype=np.int64)
+        prog = SegmentedTrace.from_phases([
+            ("a", np.array([1, 2]), np.zeros(2, bool), np.zeros(2)),
+            ("empty", z, z.astype(bool), z),
+            ("b", np.array([3]), np.ones(1, bool), np.zeros(1)),
+        ])
+        assert prog.names == ["a", "b"]
+        assert prog.n_phases == 2
+        assert len(prog) == 3
+        ph = prog.phase(1)
+        assert list(ph.line_addr) == [3]
+        assert ph.is_write.all()
+
+    def test_empty_program_is_noop(self):
+        cfg = ddr4_2400r()
+        d = VectorizedDRAM(cfg)
+        assert d.run_program(SegmentedTrace.from_phases([])) == 0
+        assert d.phases == []
