@@ -72,6 +72,29 @@ def run() -> List[Dict]:
     t = _time(lambda: spmv_ell(cols, ev, x))
     rows.append({"bench": "kernel", "name": "spmv_ell",
                  "us_per_call": t, "derived": "ELL k=8"})
+
+    # device-resident program packing vs the NumPy reference packer (the
+    # jitted path wins when there is a real host->device boundary; on the
+    # CPU backend this row mostly guards compilation + parity wiring)
+    from repro.core.accel import pack_program, pack_program_device
+    from repro.core.trace import SegmentedTrace
+    phases = [(f"p{p}", rng.integers(0, 1 << 20, 4096),
+               np.zeros(4096, bool),
+               np.sort(rng.integers(0, 16384, 4096)))
+              for p in range(8)]
+    prog = SegmentedTrace.from_phases(phases)
+    import jax
+    t_host = _time(lambda: pack_program(prog, cfg))
+    # block on the scatter outputs: the device pack dispatches async
+    t_dev = _time(lambda: jax.block_until_ready(
+        pack_program_device(prog, cfg).issue))
+    rows += [
+        {"bench": "kernel", "name": "pack_program_host",
+         "us_per_call": t_host, "derived": f"n={len(prog)}"},
+        {"bench": "kernel", "name": "pack_program_device",
+         "us_per_call": t_dev,
+         "derived": f"vs_host={t_host / t_dev:.2f}x"},
+    ]
     return rows
 
 

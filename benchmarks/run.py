@@ -3,14 +3,52 @@
 Prints ``name,us_per_call,derived`` CSV per the harness contract, and a
 per-suite summary on stderr.  ``--scale`` shrinks/grows the dataset
 stand-ins (default 1% of Tab. 1 sizes).
+
+Running the ``sweep`` suite also appends one trajectory row (date, scale,
+cases/sec per variant) to ``BENCH_sweep.json`` at the repo root, so the
+sweep-throughput perf figure is tracked across PRs; CI uploads the file
+as an artifact and fails on >2x regression vs
+``benchmarks/baselines/sweep_throughput.json``.
 """
 
 from __future__ import annotations
 
 import argparse
+import datetime
 import json
 import sys
 import time
+from pathlib import Path
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+BENCH_SWEEP_PATH = REPO_ROOT / "BENCH_sweep.json"
+
+
+def append_sweep_trajectory(sweep_rows, scale: float,
+                            path: Path = BENCH_SWEEP_PATH) -> dict:
+    """Append one {date, scale, <variant>_cases_per_sec...} row to the
+    append-style trajectory file (a JSON list; one entry per recorded
+    run)."""
+    entry = {
+        "date": datetime.date.today().isoformat(),
+        "scale": scale,
+    }
+    for r in sweep_rows:
+        if r.get("bench") != "sweep":
+            continue
+        entry[f"{r['variant']}_cases_per_sec"] = round(
+            r["cases_per_sec"], 3)
+        if "workers" in r:
+            entry.setdefault("workers", r["workers"])
+    history = []
+    if path.exists():
+        try:
+            history = json.loads(path.read_text())
+        except json.JSONDecodeError:
+            history = []
+    history.append(entry)
+    path.write_text(json.dumps(history, indent=1) + "\n")
+    return entry
 
 
 def main() -> int:
@@ -20,6 +58,8 @@ def main() -> int:
                     help="comma list: fig09,fig10,fig11,fig12,fig13,"
                          "fig02,dram,kernels,sweep")
     ap.add_argument("--json-out", default=None)
+    ap.add_argument("--no-trajectory", action="store_true",
+                    help="skip appending the sweep row to BENCH_sweep.json")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -41,6 +81,7 @@ def main() -> int:
     }
 
     all_rows = []
+    rows_by_suite = {}
     print("name,us_per_call,derived")
     for name, fn in suites.items():
         if only and name not in only:
@@ -49,6 +90,7 @@ def main() -> int:
         rows = fn()
         wall = time.perf_counter() - t0
         all_rows.extend(rows)
+        rows_by_suite[name] = rows
         for r in rows:
             if "us_per_call" in r:
                 print(f"{r['name']},{r['us_per_call']:.1f},"
@@ -66,6 +108,10 @@ def main() -> int:
                 print(f"{r['bench']}:{key},{val_us:.0f},{derived}")
         print(f"# {name}: {len(rows)} rows in {wall:.1f}s",
               file=sys.stderr)
+    if "sweep" in rows_by_suite and not args.no_trajectory:
+        entry = append_sweep_trajectory(rows_by_suite["sweep"],
+                                        args.scale)
+        print(f"# BENCH_sweep.json += {entry}", file=sys.stderr)
     if args.json_out:
         with open(args.json_out, "w") as f:
             json.dump(all_rows, f, indent=1, default=str)

@@ -1,24 +1,35 @@
-"""Sweep-engine throughput: cases/sec and jitted-dispatch counts.
+"""Sweep-engine throughput: cases/sec, dispatch counts, and cache reuse.
 
 Drives a fig12-style grid (HitGraph + AccuGraph, comparability
 configuration, WCC) through ``repro.sim.sweep()`` and reports how fast
-the fused whole-run DRAM pipeline turns cases around:
+the device-packed fused DRAM pipeline turns cases around:
 
-* ``per_case``  — one fused-scan dispatch per simulation run.  The
-  dispatch contract of the fused pipeline (one jitted scan per run
-  instead of two per iteration) is **asserted** here, so a regression
-  back to per-phase dispatching fails the benchmark.
-* ``warm``      — the same grid again with all compiled shapes and
-  algorithm runs cached (the interactive-exploration cost).
+* ``per_case``  — sharded cold pass (``workers`` prep threads + the
+  deterministic serving loop).  The dispatch contract of the fused
+  pipeline (a few fixed-shape scan dispatches per run instead of two per
+  iteration) and the pack-cache accounting are **asserted** here, so a
+  regression back to per-phase dispatching or per-case re-packing fails
+  the benchmark.
+* ``warm``      — the same grid again with all compiled shapes, algorithm
+  runs, models, and packed programs cached (the interactive-exploration
+  cost; every case must be a pack-cache hit).
 * ``batched``   — a (dataset x memory) grid with ``batch_memories=True``:
-  structurally compatible cases share single vmap-ed dispatches.
+  structurally compatible cases share single vmap-ed dispatches.  This is
+  the tracked perf figure for the PR-over-PR trajectory.
+* ``batched_timing`` — a DDR3/DDR4/HBM2/HBM2E *timing* grid
+  (``memory.timing_variants``): one geometry, four traced timing vectors;
+  each (graph, accelerator) point packs once and the whole grid serves as
+  vmap-ed replays of the cached packs.
 
-Emits BENCH JSON rows (``cases_per_sec`` is the tracked perf figure;
-CI fails if it regresses >2x below the recorded baseline).
+Emits BENCH JSON rows (``cases_per_sec`` is the tracked perf figure; CI
+fails if the warm figure regresses >2x below the recorded baseline, and
+``benchmarks/run.py --only sweep`` appends the trajectory row to
+``BENCH_sweep.json`` at the repo root).
 """
 
 from __future__ import annotations
 
+import dataclasses
 import time
 from typing import Dict, List
 
@@ -26,7 +37,11 @@ from benchmarks import common
 from repro.algorithms.common import Problem
 from repro.core import vectorized as vec
 from repro.graphs.datasets import COMPARABILITY_SETS
-from repro.sim import SweepCase, Sweeper, sweep
+from repro.sim import SweepCase, Sweeper, sweep, timing_variants
+
+#: prep threads for the sharded sweeps below (results are identical for
+#: any value; see tests/test_device_pack.py::TestShardedDeterminism)
+WORKERS = 2
 
 
 def _grid(scale: float, datasets) -> List[SweepCase]:
@@ -41,23 +56,39 @@ def _grid(scale: float, datasets) -> List[SweepCase]:
     return cases
 
 
-def run(scale: float = common.SCALE, datasets=None) -> List[Dict]:
+def run(scale: float = common.SCALE, datasets=None,
+        workers: int = WORKERS) -> List[Dict]:
     datasets = datasets or COMPARABILITY_SETS
     rows = []
 
-    def measure(mode, fn, n_cases, check_contract=False):
+    def measure(mode, fn, n_cases, sweeper, check_contract=False,
+                expect_pack=None):
         vec.reset_dispatch_counts()
+        s0 = dataclasses.replace(sweeper.stats)
         t0 = time.perf_counter()
         out = fn()
         wall = time.perf_counter() - t0
         counts = vec.dispatch_counts()
+        st = sweeper.stats
         row = {
             "bench": "sweep", "variant": mode, "cases": n_cases,
             "wall_s": wall, "cases_per_sec": n_cases / wall,
             "fused_dispatches": counts["fused"],
             "batch_dispatches": counts["fused_batch"],
             "per_phase_dispatches": counts["packed"],
+            "device_packs": counts["device_pack"],
+            "workers": st.workers,
+            "pack_cache_hits": st.pack_cache_hits - s0.pack_cache_hits,
+            "pack_cache_misses": (st.pack_cache_misses
+                                  - s0.pack_cache_misses),
         }
+        if expect_pack is not None:
+            # Pack-cache contract: the geometry-keyed cache must pack
+            # each distinct (graph, accelerator, geometry) point exactly
+            # once; warm/batched passes must be all hits.
+            exp_miss, exp_hits = expect_pack
+            assert (row["pack_cache_misses"], row["pack_cache_hits"]) \
+                == (exp_miss, exp_hits), (row, expect_pack)
         if check_contract:
             # The fused-pipeline dispatch contract: a run costs one
             # fixed-shape scan dispatch per chunk of its program (a
@@ -68,20 +99,24 @@ def run(scale: float = common.SCALE, datasets=None) -> List[Dict]:
             assert counts["packed"] == 0, counts
             assert n_cases <= counts["fused"] < max(phases, n_cases + 1), (
                 f"{counts} vs {phases} phases")
+            assert st.workers == workers, st
             row["phases"] = phases
             row["dispatches_per_iteration"] = counts["fused"] / max(
                 iters, 1)
         rows.append(row)
 
     cases = _grid(scale, datasets)
-    sweeper = Sweeper()
+    sweeper = Sweeper(workers=workers)
     measure("per_case", lambda: sweeper.run(cases), len(cases),
-            check_contract=True)
+            sweeper, check_contract=True,
+            expect_pack=(len(cases), 0))
     measure("warm", lambda: sweeper.run(cases), len(cases),
-            check_contract=True)
+            sweeper, check_contract=True,
+            expect_pack=(0, len(cases)))
 
     # memory axis: one graph point across structurally compatible DDR4
-    # devices, batched into single vmap-ed dispatches
+    # devices, batched into single vmap-ed dispatches.  The default and
+    # "ddr4" share a geometry (one pack); "ddr4-8gb" differs (second).
     g = common.graph(datasets[0], scale, undirected=True)
     _, ag_cfg = common.comparability_cfgs(datasets[0], scale)
     mem_cases = [
@@ -89,12 +124,36 @@ def run(scale: float = common.SCALE, datasets=None) -> List[Dict]:
                   config=ag_cfg, memory=m)
         for m in (None, "ddr4", "ddr4-8gb")
     ]
-    # warm the batched compile cache + algo/model caches out-of-measure
-    batch_sweeper = Sweeper(batch_memories=True)
+    # warm the batched compile cache + algo/model/pack caches out-of-measure
+    batch_sweeper = Sweeper(batch_memories=True, workers=workers)
     batch_sweeper.run(mem_cases)
     measure("batched", lambda: batch_sweeper.run(mem_cases),
-            len(mem_cases))
+            len(mem_cases), batch_sweeper,
+            expect_pack=(0, len(mem_cases)))
     rows[-1]["batched_cases"] = batch_sweeper.stats.batched_cases
+
+    # timing axis: one geometry, twelve traced timing vectors (DDR3/DDR4
+    # speed grades + the HBM classes, as in the 2104.07776 comparison) —
+    # each (graph, accelerator) packs ONCE and the grid serves as
+    # shared-program vmap-ed replays of the cached packs.  This is the
+    # acceptance-tracked "batched memory grid" figure.
+    hg_cfg, ag_cfg = common.comparability_cfgs(datasets[0], scale)
+    mems = timing_variants(
+        "ddr4-8gb", kinds=("ddr3-1066", "ddr3-1333", "ddr3", "ddr3-1866",
+                           "ddr4-2133", "ddr4", "ddr4-2666", "ddr4-2933",
+                           "ddr4-3200", "hbm-1gbps", "hbm2", "hbm2e"))
+    t_cases = [
+        SweepCase(graph=g, problem=Problem.WCC, accelerator=a,
+                  config=c, memory=m)
+        for a, c in (("hitgraph", hg_cfg), ("accugraph", ag_cfg))
+        for m in mems
+    ]
+    timing_sweeper = Sweeper(batch_memories=True, workers=workers)
+    timing_sweeper.run(t_cases)   # warm-up: one pack miss per accelerator
+    measure("batched_timing", lambda: timing_sweeper.run(t_cases),
+            len(t_cases), timing_sweeper,
+            expect_pack=(0, len(t_cases)))
+    rows[-1]["batched_cases"] = timing_sweeper.stats.batched_cases
     return rows
 
 

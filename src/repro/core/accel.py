@@ -22,11 +22,22 @@ Programs are padded to a two-size chunk ladder so the process compiles
 each scan structure exactly twice, whatever the run length; DRAM timing
 parameters are traced inputs, so DDR3/DDR4/HBM2/HBM2E all share one
 compiled scan.
+
+Packing itself has two backends: the jitted *device* pack
+(:func:`pack_program_device` — decode, row-kind classification, and the
+block decomposition as fixed-shape bucketed dispatches whose outputs feed
+the fused scan without materializing on the host, transfers narrowed to
+int32) and the NumPy *host* pack (:func:`pack_program`, the
+bit-equivalence reference).  Packing depends only on DRAM *geometry*
+(``DRAMConfig.geometry_key``) and the program, never on timing — which is
+what lets the sweep engine cache packed programs across a
+timing-comparison grid.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import os
 from typing import List, Optional
 
 import jax
@@ -55,7 +66,8 @@ class PhaseStats:
 
 #: lanes per block in the fused scan (requests per channel per step);
 #: hit-heavy programs use wide blocks, conflict-heavy ones serialize.
-BLOCK_LANES = 8
+#: (Defined in ``core.vectorized`` so the device pack kernels share it.)
+BLOCK_LANES = vec.BLOCK_LANES
 
 
 @dataclasses.dataclass(frozen=True)
@@ -160,8 +172,7 @@ def pack_program(program: SegmentedTrace, cfg: DRAMConfig,
     key = phase * C + ch
     # hit-dominated streams get wide blocks; conflict-heavy ones (where
     # almost every block would be a singleton miss anyway) serialize.
-    miss_frac = float((kind != 0).mean())
-    K = BLOCK_LANES if miss_frac < 0.5 else 1
+    K = vec.choose_block_lanes(int((kind != 0).sum()), len(kind))
     # ---- block decomposition within each (phase, channel) stream ------
     # grouped order: phase-major, channel, then program order
     order = np.argsort(key, kind="stable")
@@ -222,6 +233,148 @@ def pack_program(program: SegmentedTrace, cfg: DRAMConfig,
         open_row_final=open_flat.reshape(C, B))
 
 
+@dataclasses.dataclass(frozen=True)
+class DevicePackedProgram:
+    """A program packed *on the device* by the jitted pack path: the
+    blocked ``[S, C, K]`` streams live as device arrays and feed the
+    fused scan without ever materializing on the host.  Bit-identical to
+    :class:`PackedProgram` (``pack_program`` is the NumPy reference; the
+    parity is tested field by field), with the per-request row kinds
+    pre-reduced to per-phase hit/conflict counts so finalization only
+    transfers ``O(P)`` integers."""
+
+    issue: object            # int32[S, C, K] device
+    meta: object             # int32[S, C, K] device
+    boundary: object         # bool[S] device
+    timing: np.ndarray       # int32[7] (host; traced into the scan)
+    n_banks: int
+    banks_per_rank: int
+    names: List[str]
+    requests: np.ndarray     # int64[P]
+    offsets: np.ndarray      # int64[P+1]
+    kind: object             # int8[Npad] device (program order; tests)
+    L_p: object              # int32[P_pad] device steps-per-phase
+    hits_p: object           # int32[P_pad] device per-phase row hits
+    confl_p: object          # int32[P_pad] device per-phase conflicts
+    n_steps: int             # S before padding
+    open_row_final: object   # int32[C, B] device row state after the run
+
+    @property
+    def n_phases(self) -> int:
+        return len(self.names)
+
+    @property
+    def signature(self):
+        return (tuple(self.issue.shape), self.n_banks,
+                self.banks_per_rank)
+
+
+def device_pack_supported(program: SegmentedTrace,
+                          cfg: DRAMConfig) -> bool:
+    """Whether the jitted device pack path can serve this program: pow2
+    address components, <=256 banks/channel, and every index/address in
+    int32 range (the host packer covers the rest)."""
+    if cfg.decode_spec() is None:
+        return False
+    if cfg.banks_per_channel > 256:
+        return False
+    n = len(program)
+    if n == 0:
+        return True
+    # kb = block_id * B + bank must stay in int32 (block_id < n)
+    if n * cfg.banks_per_channel >= 2**31:
+        return False
+    return int(program.line_addr.max()) < 2**31
+
+
+def pack_program_device(program: SegmentedTrace, cfg: DRAMConfig,
+                        open_row=None) -> Optional[DevicePackedProgram]:
+    """Pack a whole-run program on device (see the device-pack section of
+    :mod:`repro.core.vectorized`).  Two fixed-shape jitted dispatches —
+    classify + block-decompose, then the lockstep scatter — with one tiny
+    scalar sync in between (the step count picks the chunk-ladder
+    padding).  ``open_row`` may be a host or device int[C, B] array."""
+    P = program.n_phases
+    N = len(program)
+    if P == 0 or N == 0:
+        return None
+    if np.any(program.issue < 0) or np.any(
+            program.issue >= vec.MAX_PHASE_ISSUE):
+        raise ValueError("issue cycles out of int32 range; chunk the trace")
+    C = cfg.channels
+    B = cfg.banks_per_channel
+    spec = cfg.decode_spec()
+    N_pad = _bucket(N)
+    P_pad = _bucket(P)
+    line32 = np.zeros(N_pad, dtype=np.int32)
+    line32[:N] = program.line_addr
+    issue32 = np.zeros(N_pad, dtype=np.int32)
+    issue32[:N] = program.issue
+    offsets32 = np.full(P_pad + 1, N, dtype=np.int32)
+    offsets32[:P + 1] = program.offsets
+    if open_row is None:
+        open_row = jnp.full((C, B), -1, dtype=jnp.int32)
+    else:
+        open_row = jnp.asarray(open_row, dtype=jnp.int32)
+    vec.count_dispatch("device_pack")
+    (r_idx, c_idx, lane, issue_s, meta_s, valid_s, L_p, hits_p,
+     confl_p, kind, open_out, S, K) = vec._device_pack_core(
+        jnp.asarray(line32), jnp.asarray(issue32),
+        jnp.asarray(offsets32), jnp.int32(N), open_row,
+        spec=spec, C=C, B=B, banks=cfg.org.banks)
+    S = int(S)
+    K = int(K)
+    S_pad = sum(vec.plan_chunks(S))
+    issue_d, meta_d, boundary_d = vec._device_pack_scatter(
+        r_idx, c_idx, lane, issue_s, meta_s, valid_s, L_p,
+        S_pad=S_pad, C=C, K=K)
+    requests = np.diff(program.offsets)
+    return DevicePackedProgram(
+        issue=issue_d, meta=meta_d, boundary=boundary_d,
+        timing=vec.timing_params(cfg.timing),
+        n_banks=B, banks_per_rank=cfg.org.banks,
+        names=list(program.names), requests=requests,
+        offsets=np.asarray(program.offsets), kind=kind,
+        L_p=L_p, hits_p=hits_p, confl_p=confl_p, n_steps=S,
+        open_row_final=open_out)
+
+
+def _auto_pack_prefers_device() -> bool:
+    """The ``"auto"`` policy: pack on device when there is a real
+    host->device boundary to avoid (TPU/GPU — the jitted pack keeps the
+    blocked streams device-resident and halves the transfer to int32).
+    On the CPU backend "device" memory IS host memory and XLA's sorts
+    lose to NumPy's radix paths, so auto stays with the host packer.
+    Override per backend instance (``pack_backend="device"``) or
+    globally with ``REPRO_PACK_BACKEND=device|host``."""
+    env = os.environ.get("REPRO_PACK_BACKEND")
+    if env in ("device", "host"):
+        return env == "device"
+    return jax.default_backend() != "cpu"
+
+
+def pack_program_auto(program: SegmentedTrace, cfg: DRAMConfig,
+                      open_row=None, backend: str = "auto"):
+    """Pack with the requested backend: ``"device"`` (jitted JAX path),
+    ``"host"`` (the NumPy reference), or ``"auto"`` (platform heuristic,
+    see :func:`_auto_pack_prefers_device`; host whenever the device path
+    does not support the program/geometry)."""
+    if backend == "auto":
+        backend = ("device" if _auto_pack_prefers_device() else "host")
+        if backend == "device" and not device_pack_supported(program,
+                                                            cfg):
+            backend = "host"
+    if backend == "host":
+        if open_row is not None:
+            open_row = np.asarray(open_row)
+        return pack_program(program, cfg, open_row=open_row)
+    if not device_pack_supported(program, cfg):
+        raise ValueError(
+            "program/device not eligible for the device pack path "
+            "(non-pow2 geometry, >256 banks, or addresses beyond int32)")
+    return pack_program_device(program, cfg, open_row=open_row)
+
+
 @dataclasses.dataclass
 class ProgramStats:
     """Accumulated DRAM statistics of one executed program — the shared
@@ -268,11 +421,79 @@ def finalize_program(packed: PackedProgram, finish,
     )
 
 
-class VectorizedDRAM:
-    """Stateful multi-phase DRAM simulation (JAX fast path)."""
+def finalize_program_device(packed: DevicePackedProgram, finish,
+                            origin: int = 0) -> ProgramStats:
+    """Device-path counterpart of :func:`finalize_program`: per-phase
+    makespans reduce on device (``finish`` is the device finish array the
+    fused scan produced with ``as_numpy=False``); only ``O(P)`` integers
+    cross to the host."""
+    P = packed.n_phases
+    dur = np.asarray(
+        vec._device_phase_durations(finish, packed.L_p)
+    )[:P].astype(np.int64)
+    hits = np.asarray(packed.hits_p)[:P].astype(np.int64)
+    confl = np.asarray(packed.confl_p)[:P].astype(np.int64)
+    ends = origin + np.cumsum(dur)
+    starts = ends - dur
+    phases = [
+        PhaseStats(
+            name=packed.names[p], requests=int(packed.requests[p]),
+            bytes=int(packed.requests[p]) * CACHE_LINE_BYTES,
+            start_cycle=int(starts[p]), end_cycle=int(ends[p]),
+            row_hits=int(hits[p]), row_conflicts=int(confl[p]),
+        )
+        for p in range(P)
+    ]
+    return ProgramStats(
+        phases=phases, now=int(ends[-1]) if P else origin,
+        total_requests=int(packed.requests.sum()),
+        total_row_hits=int(hits.sum()),
+        total_row_conflicts=int(confl.sum()),
+    )
 
-    def __init__(self, cfg: DRAMConfig):
+
+def serve_packed(packed, timing=None, carry=None,
+                 origin: int = 0):
+    """Run one packed program (host- or device-packed) through the fused
+    scan from the given carry (default: cold DRAM state) and reduce it to
+    :class:`ProgramStats`.  Returns ``(stats, lean_carry)``.
+
+    ``timing`` overrides the timing vector packed with the program — this
+    is what lets a geometry-keyed cached pack replay against any traced
+    timing (the pack itself never depends on timing).
+    """
+    if timing is None:
+        timing = packed.timing
+    C = packed.issue.shape[1]
+    if carry is None:
+        carry = vec.init_lean_carry(C, packed.n_banks,
+                                    packed.banks_per_rank)
+    device = isinstance(packed, DevicePackedProgram)
+    fin, lean = vec.fused_scan(packed.issue, packed.meta,
+                               packed.boundary, timing, carry,
+                               as_numpy=not device)
+    if device:
+        return finalize_program_device(packed, fin, origin=origin), lean
+    return finalize_program(packed, fin, origin=origin), lean
+
+
+class VectorizedDRAM:
+    """Stateful multi-phase DRAM simulation (JAX fast path).
+
+    ``pack_backend`` selects how :meth:`run_program` packs: ``"auto"``
+    (device-resident jitted pack when the device/program is eligible,
+    NumPy otherwise), ``"host"`` (always the NumPy reference packer), or
+    ``"device"`` (force the jitted path; raises when unsupported).  Both
+    produce bit-identical scans and statistics.
+    """
+
+    def __init__(self, cfg: DRAMConfig, pack_backend: str = "auto"):
+        if pack_backend not in ("auto", "host", "device"):
+            raise ValueError(
+                f"pack_backend must be auto|host|device, "
+                f"got {pack_backend!r}")
         self.cfg = cfg
+        self.pack_backend = pack_backend
         self._timing = vec.timing_params(cfg.timing)
         self._reset_carry()
         # Device-side cycle math is int32; ``_origin`` (host int64) anchors
@@ -350,12 +571,13 @@ class VectorizedDRAM:
         return self._origin + end_rel
 
     def run_program(self, program: SegmentedTrace) -> int:
-        """Serve a whole multi-phase program in ONE jitted scan dispatch
-        (phase barriers honored inside the scan); returns the final
-        absolute makespan.  Bit-equivalent to calling :meth:`run_phase`
-        per phase."""
-        packed = pack_program(program, self.cfg,
-                              open_row=np.asarray(self.carry[0]))
+        """Serve a whole multi-phase program in a handful of jitted
+        dispatches (device-resident pack + fused scan with the phase
+        barriers honored inside it); returns the final absolute makespan.
+        Bit-equivalent to calling :meth:`run_phase` per phase."""
+        packed = pack_program_auto(program, self.cfg,
+                                   open_row=self.carry[0],
+                                   backend=self.pack_backend)
         if packed is None:
             return self.now
         if self._rel_now:
@@ -365,12 +587,10 @@ class VectorizedDRAM:
                                           jnp.int32(self._rel_now))
             self._origin += self._rel_now
             self._rel_now = 0
-        finish, lean = vec.fused_scan(
-            packed.issue, packed.meta, packed.boundary, packed.timing,
-            vec.lean_from_full(self.carry),
-        )
+        stats, lean = serve_packed(packed, timing=self._timing,
+                                   carry=vec.lean_from_full(self.carry),
+                                   origin=self._origin)
         self.carry = vec.full_from_lean(lean, packed.open_row_final)
-        stats = finalize_program(packed, finish, origin=self._origin)
         self.phases.extend(stats.phases)
         self.total_requests += stats.total_requests
         self.total_row_hits += stats.total_row_hits

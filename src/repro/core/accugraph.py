@@ -23,8 +23,11 @@ streams are *static* across iterations, so they are built (and
 priority-sorted) once at model construction; each iteration only computes
 the changed-value write lines and splices them into the pre-sorted static
 stream with a stable two-pointer merge (``searchsorted``), emitting the
-whole run as one :class:`~repro.core.trace.SegmentedTrace` for the fused
-single-dispatch DRAM scan.
+whole run as one :class:`~repro.core.trace.SegmentedTrace` that is packed
+on device and served by the fused DRAM scan.  Like HitGraph, the emitted
+program is a function of the DRAM geometry and clock only (timing is a
+traced scan input), which is what the sweep engine's geometry-keyed pack
+cache exploits.
 """
 
 from __future__ import annotations

@@ -124,6 +124,32 @@ class DRAMConfig:
             "row": self.org.rows,
         }
 
+    @property
+    def geometry_key(self):
+        """Everything request *packing* depends on — channel/rank/bank/row
+        structure and the address-mapping order — and nothing it does not
+        (timing parameters are traced scan inputs, the clock only scales
+        the report).  Devices with equal geometry keys share packed
+        programs (see the sweep engine's pack cache)."""
+        return (self.channels, self.org, self.order)
+
+    def decode_spec(self):
+        """Static (shift, mask) per component for the pow2 shift/mask
+        decode, as a hashable tuple ``((comp, shift, mask), ...)`` in
+        address order — the jit-static description the device pack path
+        consumes.  ``None`` when any component size is not a power of two
+        (no real device; those fall back to the host packer)."""
+        sizes = self.component_sizes()
+        if any(s & (s - 1) for s in sizes.values()):
+            return None
+        spec = []
+        shift = 0
+        for comp in self.order:
+            size = sizes[comp]
+            spec.append((comp, shift, size - 1))
+            shift += size.bit_length() - 1
+        return tuple(spec)
+
     # ---- address mapping (Fig. 5) ------------------------------------
     def decode_lines(self, line_addrs: np.ndarray) -> Dict[str, np.ndarray]:
         """Split line addresses into DRAM components per the address order.

@@ -20,9 +20,13 @@ by vectorized NumPy builders (segment-offset constructions over all
 partitions at once — no per-partition or per-(k, j) Python loops, and the
 per-iteration update merge is an adjacent-dedup over a once-sorted key
 array instead of an ``np.unique`` sort) into one
-:class:`~repro.core.trace.SegmentedTrace`, which the fused DRAM scan
-serves in a single jitted dispatch with inter-phase barriers carried
-inside the scan.
+:class:`~repro.core.trace.SegmentedTrace`, which is then *packed on the
+device* (jitted decode/classify/block-decompose, int32-narrowed
+transfers) and served by the fused DRAM scan in a handful of fixed-shape
+dispatches with inter-phase barriers carried inside the scan.  The
+emitted program depends on the DRAM device only through its geometry and
+clock — never its timing — so the sweep engine replays one packed
+program against whole timing-comparison grids.
 """
 
 from __future__ import annotations

@@ -19,7 +19,7 @@ from repro.algorithms.common import Problem
 from repro.core.accel import PhaseStats, SimReport
 from repro.sim.backends import BACKENDS, EventDRAM, make_backend
 from repro.sim.memory import (MEMORY_PRESETS, MemoryConfig, memory_name,
-                              resolve_memory)
+                              resolve_memory, timing_variants)
 from repro.sim.reference_model import ReferenceConfig, ReferenceModel
 from repro.sim.registry import (AcceleratorSpec, get_accelerator,
                                 list_accelerators, register_accelerator)
@@ -35,6 +35,7 @@ __all__ = [
     "AcceleratorSpec", "register_accelerator", "get_accelerator",
     "list_accelerators",
     "MemoryConfig", "MEMORY_PRESETS", "resolve_memory", "memory_name",
+    "timing_variants",
     "BACKENDS", "EventDRAM", "make_backend",
     "Sweeper", "SweepCase", "SweepRow", "SweepStats",
     "ReferenceConfig", "ReferenceModel",

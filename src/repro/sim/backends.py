@@ -12,13 +12,18 @@ VectorizedDRAM` surface the trace models drive:
 * ``now`` / ``phases`` / ``total_requests`` / ``total_row_hits`` /
   ``total_row_conflicts`` — accumulated statistics for the SimReport.
 
-``"vectorized"`` is the JAX fast path — the whole program in ONE jitted
-``lax.scan`` dispatch with the barriers honored inside the scan;
-``"event"`` is the element-granularity python replay through
-:class:`ChannelState` — the fidelity reference (the two are bit-equivalent
-on integer cycle counts; property tests enforce the shared semantics).
-Use ``"event"`` to cross-check the vectorized model on small instances;
-it is orders of magnitude slower.
+``"vectorized"`` is the JAX fast path — the program is packed on device
+(jitted decode/classify/block-decompose; NumPy fallback for exotic
+geometries) and served by the fused ``lax.scan`` with the barriers
+honored inside the scan; ``"event"`` is the element-granularity python
+replay through :class:`ChannelState` — the fidelity reference (the two
+are bit-equivalent on integer cycle counts; property tests enforce the
+shared semantics).  Use ``"event"`` to cross-check the vectorized model
+on small instances; it is orders of magnitude slower.
+
+``make_backend(..., pack_backend=...)`` forwards the pack-path selection
+(``"auto"`` / ``"host"`` / ``"device"``) to :class:`VectorizedDRAM` —
+the host/device A-B hook the parity tests use.
 """
 
 from __future__ import annotations
@@ -95,12 +100,15 @@ BACKENDS: Dict[str, type] = {
 }
 
 
-def make_backend(backend: str, cfg: DRAMConfig):
-    """Instantiate a DRAM backend by name for device ``cfg``."""
+def make_backend(backend: str, cfg: DRAMConfig, **kwargs):
+    """Instantiate a DRAM backend by name for device ``cfg``.
+
+    Extra keyword arguments go to the backend class (e.g.
+    ``pack_backend="host"`` for :class:`VectorizedDRAM`)."""
     try:
         cls = BACKENDS[backend]
     except KeyError:
         raise ValueError(
             f"unknown backend {backend!r}; available: "
             f"{sorted(BACKENDS)}") from None
-    return cls(cfg)
+    return cls(cfg, **kwargs)

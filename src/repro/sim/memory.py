@@ -26,7 +26,8 @@ import dataclasses
 from typing import Optional, Union
 
 from repro.core.dram import (CONTIGUOUS_ORDER, DEFAULT_ORDER, AddressOrder,
-                             DRAMConfig, ddr3_1600k, ddr4_2400r, hbm2, hbm2e)
+                             DRAMConfig, DRAMTiming, ddr3_1600k, ddr4_2400r,
+                             hbm2, hbm2e)
 
 _KINDS = ("ddr3", "ddr4", "hbm2", "hbm2e")
 
@@ -84,6 +85,62 @@ MEMORY_PRESETS = {
 }
 
 MemoryLike = Union[None, str, MemoryConfig, DRAMConfig]
+
+#: standalone timing vectors for :func:`timing_variants` grids — JEDEC
+#: speed grades beyond the full device presets above (cycle counts at the
+#: grade's nominal data rate; used as *traced* scan inputs, so a whole
+#: grid of them shares one compiled scan and one packed program per
+#: geometry).  The follow-up comparison paper (arXiv:2104.07776) sweeps
+#: exactly this kind of speed-grade axis.
+TIMING_PRESETS = {
+    "ddr3-1066": DRAMTiming(tCL=7, tRCD=7, tRP=7, tRAS=20, tBL=4,
+                            tRRD=4, tFAW=27),
+    "ddr3-1333": DRAMTiming(tCL=9, tRCD=9, tRP=9, tRAS=24, tBL=4,
+                            tRRD=5, tFAW=30),
+    "ddr3-1866": DRAMTiming(tCL=13, tRCD=13, tRP=13, tRAS=32, tBL=4,
+                            tRRD=6, tFAW=45),
+    "ddr4-2133": DRAMTiming(tCL=14, tRCD=14, tRP=14, tRAS=28, tBL=4,
+                            tRRD=6, tFAW=32),
+    "ddr4-2666": DRAMTiming(tCL=18, tRCD=18, tRP=18, tRAS=35, tBL=4,
+                            tRRD=8, tFAW=40),
+    "ddr4-2933": DRAMTiming(tCL=21, tRCD=21, tRP=21, tRAS=39, tBL=4,
+                            tRRD=8, tFAW=44),
+    "ddr4-3200": DRAMTiming(tCL=22, tRCD=22, tRP=22, tRAS=42, tBL=4,
+                            tRRD=9, tFAW=48),
+    "hbm-1gbps": DRAMTiming(tCL=7, tRCD=7, tRP=7, tRAS=17, tBL=2,
+                            tRRD=1, tFAW=8),
+}
+
+
+def timing_variants(base: MemoryLike, kinds=("ddr3", "ddr4", "hbm2")):
+    """Timing-only memory grid: the base device's geometry and clock with
+    each named preset's *timing vector* swapped in.
+
+    This is the follow-up-paper-style comparison ("Demystifying Memory
+    Access Patterns...", arXiv:2104.07776) expressed in the form the
+    engine serves fastest: timing parameters are traced scan inputs and
+    packing depends only on geometry, so a sweep over these devices packs
+    each (graph, accelerator) point exactly once and replays it against
+    every timing vector — with ``batch_memories=True``, in single
+    vmap-ed dispatches.
+
+    ``base`` is any :func:`resolve_memory` selector naming the geometry
+    (e.g. ``"ddr4-8gb"`` or an accelerator's default ``DRAMConfig``);
+    ``kinds`` name either :data:`TIMING_PRESETS` entries or full device
+    presets (whose timing is borrowed).  Returns one ``DRAMConfig`` per
+    kind, named ``<base>@<kind>-timing``.
+    """
+    cfg = resolve_memory(base)
+    if cfg is None:
+        raise ValueError("timing_variants needs an explicit base device")
+    out = []
+    for kind in kinds:
+        t = TIMING_PRESETS.get(kind)
+        if t is None:
+            t = resolve_memory(kind).timing
+        out.append(dataclasses.replace(
+            cfg, timing=t, name=f"{cfg.name}@{kind}-timing"))
+    return out
 
 
 def resolve_memory(memory: MemoryLike) -> Optional[DRAMConfig]:

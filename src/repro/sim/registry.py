@@ -112,8 +112,13 @@ class AcceleratorSpec:
                 f"{self.backends}, got {backend!r}")
         if model is None:
             model = self.build_model(g, cfg)
-        memory_system = (None if backend == VECTORIZED
-                         else make_backend(backend, model.dram))
+        # The backend is built from the CASE's resolved DRAM, not the
+        # model's: the session shares one model across every timing
+        # variant of a geometry (model state never depends on timing),
+        # so the model's own device may carry another case's timing.
+        dram = (cfg.dram_config() if hasattr(cfg, "dram_config")
+                else model.dram)
+        memory_system = make_backend(backend, dram)
         return model.simulate(problem, root=root, fixed_iters=fixed_iters,
                               run=run, memory_system=memory_system)
 

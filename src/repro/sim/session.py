@@ -4,18 +4,33 @@
 resolves the accelerator spec, the memory device, and the DRAM backend,
 and returns the shared :class:`~repro.core.accel.SimReport`.
 
-:class:`SimSession` binds a graph and caches algorithm runs across
-repeated calls (the expensive JAX part), so interactive exploration —
-same problem, different accelerator/memory/variant — only pays trace
-generation and DRAM simulation per call.
+:class:`SimSession` binds a graph and caches, across repeated calls:
+
+* **algorithm runs** (the expensive JAX part) by ``spec.algorithm_key``;
+* **models** (edge sorts, layout, static streams) by config — with the
+  DRAM device reduced to its *geometry + clock*, since model state never
+  depends on timing parameters;
+* **packed programs** by the same geometry key: packing (and the trace
+  emission feeding it) depends only on the DRAM geometry and clock,
+  never on timing, so a DDR3-vs-DDR4-vs-HBM *timing* comparison packs
+  each (graph, accelerator) point once and replays it against every
+  traced timing vector (``pack_cache_hits`` / ``pack_cache_misses``
+  count reuse).
+
+All three caches are single-flight and thread-safe: the sharded sweep
+executor's workers share one session per graph, and concurrent lookups
+of the same key block on the first builder instead of duplicating work.
 """
 
 from __future__ import annotations
 
+import dataclasses
+import threading
+from concurrent.futures import Future
 from typing import Dict, Optional
 
 from repro.algorithms.common import Problem, RunResult
-from repro.core.accel import SimReport
+from repro.core.accel import SimReport, pack_program_auto
 from repro.graphs.formats import Graph
 from repro.sim.memory import MemoryLike, resolve_memory
 from repro.sim.registry import get_accelerator
@@ -28,8 +43,25 @@ def _coerce_problem(problem) -> Problem:
     return problem if isinstance(problem, Problem) else Problem(problem)
 
 
+def _geometry_cfg_key(spec_name: str, config):
+    """Cache key for state that depends on the config and the DRAM
+    *geometry + clock* but not its timing: the config with ``dram``
+    nulled, plus the resolved device's geometry key and clock.  ``None``
+    when the config has no pluggable DRAM or is unhashable."""
+    if not hasattr(config, "dram_config"):
+        return None
+    try:
+        dram = config.dram_config()
+        key = (spec_name, dataclasses.replace(config, dram=None),
+               dram.geometry_key, dram.clock_ghz)
+        hash(key)
+        return key
+    except (TypeError, dataclasses.FrozenInstanceError):
+        return None
+
+
 class SimSession:
-    """A graph bound to a cache of algorithm runs.
+    """A graph bound to caches of algorithm runs, models, and packs.
 
     >>> sess = SimSession(g)
     >>> sess.run(Problem.WCC, accelerator="hitgraph")
@@ -37,40 +69,105 @@ class SimSession:
     # second call reuses the edge-centric WCC execution
     """
 
+    #: max packed programs retained per session — packs are the largest
+    #: cached artifact ([S, C, K] streams), so the cache is bounded with
+    #: insertion-order eviction; in-flight references stay alive through
+    #: normal GC, only reuse beyond the window re-packs.
+    PACK_CACHE_CAP = 256
+
     def __init__(self, graph: Graph):
         self.graph = graph
-        self._runs: Dict[object, RunResult] = {}
-        self._models: Dict[object, object] = {}
+        self._lock = threading.Lock()
+        self._runs: Dict[object, Future] = {}
+        self._models: Dict[object, Future] = {}
+        self._packs: Dict[object, Future] = {}
         self.algo_runs = 0
         self.algo_cache_hits = 0
+        self.pack_cache_hits = 0
+        self.pack_cache_misses = 0
+
+    def _singleflight(self, cache: Dict[object, Future], key, build,
+                      count=None):
+        """Get-or-build ``cache[key]`` with single-flight semantics:
+        exactly one thread runs ``build()`` per key; concurrent lookups
+        wait on its Future.  ``count`` is an optional ``(miss_attr,
+        hit_attr)`` counter pair."""
+        with self._lock:
+            fut = cache.get(key)
+            owner = fut is None
+            if owner:
+                fut = cache[key] = Future()
+            if count is not None:
+                attr = count[0] if owner else count[1]
+                setattr(self, attr, getattr(self, attr) + 1)
+        if owner:
+            try:
+                fut.set_result(build())
+            except BaseException as e:
+                with self._lock:
+                    cache.pop(key, None)
+                fut.set_exception(e)
+        return fut.result()
 
     def model_for(self, spec, config):
         """Graph-bound model cache: model construction (edge sorts,
-        layout, static streams) is shared across problems/backends of
-        one (accelerator, config) point."""
-        try:
-            key = (spec.name, config)
-            hash(key)
-        except TypeError:
-            return spec.build_model(self.graph, config)
-        model = self._models.get(key)
-        if model is None:
-            model = self._models[key] = spec.build_model(self.graph,
-                                                         config)
-        return model
+        layout, static streams) is shared across problems/backends — and,
+        since model state depends on the DRAM device only through its
+        geometry and clock, across every timing variant of one memory
+        point."""
+        key = _geometry_cfg_key(spec.name, config)
+        if key is None:
+            try:
+                key = (spec.name, config)
+                hash(key)
+            except TypeError:
+                return spec.build_model(self.graph, config)
+        return self._singleflight(
+            self._models, key,
+            lambda: spec.build_model(self.graph, config))
 
     def algorithm_run(self, spec, problem: Problem, config, root: int,
                       fixed_iters: Optional[int]) -> RunResult:
         key = spec.algorithm_key(self.graph, problem, config, root=root,
                                  fixed_iters=fixed_iters)
-        if key in self._runs:
-            self.algo_cache_hits += 1
-            return self._runs[key]
-        self.algo_runs += 1
-        run = spec.run_algorithm(self.graph, problem, config, root=root,
-                                 fixed_iters=fixed_iters)
-        self._runs[key] = run
-        return run
+        return self._singleflight(
+            self._runs, key,
+            lambda: spec.run_algorithm(self.graph, problem, config,
+                                       root=root,
+                                       fixed_iters=fixed_iters),
+            count=("algo_runs", "algo_cache_hits"))
+
+    def packed_program_for(self, spec, problem: Problem, config, model,
+                           run: RunResult, dram, root: int = 0,
+                           fixed_iters: Optional[int] = None):
+        """Geometry-keyed packed-program cache.
+
+        The cached pack carries whatever timing vector it was first built
+        with — callers must serve it with *their* case's traced timing
+        (``core.accel.serve_packed(packed, timing=...)``), which is
+        exactly what makes the cache sound: nothing in the packed arrays
+        depends on timing."""
+        cfg_key = _geometry_cfg_key(spec.name, config)
+        if cfg_key is None:
+            with self._lock:
+                self.pack_cache_misses += 1
+            return pack_program_auto(model.build_program(problem, run),
+                                     dram)
+        key = (cfg_key, spec.algorithm_key(
+            self.graph, problem, config, root=root,
+            fixed_iters=fixed_iters))
+        packed = self._singleflight(
+            self._packs, key,
+            lambda: pack_program_auto(
+                model.build_program(problem, run), dram),
+            count=("pack_cache_misses", "pack_cache_hits"))
+        with self._lock:
+            while len(self._packs) > self.PACK_CACHE_CAP:
+                oldest = next(iter(self._packs))
+                if oldest == key or not self._packs[oldest].done():
+                    break
+                del self._packs[oldest]
+        return packed
 
     def run(self, problem, accelerator: str = "hitgraph", *,
             config=None, memory: MemoryLike = None,

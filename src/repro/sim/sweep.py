@@ -12,29 +12,39 @@ What is shared and what is not:
   ``algorithm_key`` matches — every memory type and every variant that
   does not change the execution (e.g. ``prefetch_skip``, ``hbm``) reuses
   one run per (graph, problem) instead of recomputing it.
-* **Trace bucketing / scan compilation**: traces are padded to
-  power-of-two buckets inside the vectorized backend, so the jitted DRAM
-  scan compiles O(log) distinct shapes; cases are *dispatched grouped by
-  (accelerator, graph)* so consecutive cases hit the same compiled
-  buckets instead of ping-ponging shapes.
-* Trace generation itself depends on the memory layout, so it is
-  per-case by construction.
+* **Models and packed programs** are cached by DRAM *geometry + clock*
+  (``DRAMConfig.geometry_key``): neither the trace a model emits nor the
+  packed lockstep streams depend on timing parameters, so a timing
+  comparison grid (e.g. ``memory.timing_variants``) packs each
+  (graph, accelerator) point once and replays it against every traced
+  timing vector.  ``SweepStats.pack_cache_hits`` / ``pack_cache_misses``
+  count the reuse.
+* **Execution is sharded**: ``workers=N`` prepare cases concurrently
+  (algorithm run + trace build + device pack) while the serving loop
+  drains them onto the device in deterministic case order — rows are
+  bit-identical for any worker count.  With ``batch_memories=True``,
+  cases whose packed programs share a compiled shape are additionally
+  stacked into single ``vmap``-ed fused-scan dispatches.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import itertools
+import threading
 import time
-from collections import defaultdict
+from collections import defaultdict, deque
+from concurrent.futures import ThreadPoolExecutor
 from typing import Any, Dict, Iterable, List, Optional, Sequence
 
+import jax.numpy as jnp
 import numpy as np
 
 from repro.algorithms.common import Problem
 from repro.core import vectorized as vec
-from repro.core.accel import (ProgramStats, SimReport, finalize_program,
-                              pack_program)
+from repro.core.accel import (DevicePackedProgram, ProgramStats, SimReport,
+                              finalize_program, finalize_program_device,
+                              serve_packed)
 from repro.graphs.formats import Graph
 from repro.sim.memory import MemoryLike, memory_name, resolve_memory
 from repro.sim.registry import get_accelerator
@@ -96,36 +106,61 @@ class SweepStats:
     cases: int = 0
     algo_runs: int = 0
     algo_cache_hits: int = 0
+    pack_cache_hits: int = 0
+    pack_cache_misses: int = 0
     batched_cases: int = 0
     batch_dispatches: int = 0
+    workers: int = 1
 
 
 class Sweeper:
-    """Executes sweep cases with per-graph algorithm-run caching.
+    """Executes sweep cases with per-graph algorithm/model/pack caching.
 
-    With ``batch_memories=True``, cases whose packed programs share a
-    compiled shape (same steps x channels x banks x ranks — e.g. one
-    accelerator/graph across DDR4 densities, HBM timings, or timing-only
-    variants) are stacked and served by ONE ``vmap``-ed fused-scan
-    dispatch; remaining cases fall back to the per-case path.
+    ``workers=N`` shards case *preparation* (algorithm run, trace build,
+    device pack) over N threads; the serving loop drains the prepared
+    cases onto the device in deterministic case order, so results are
+    identical for any worker count.  With ``batch_memories=True``, cases
+    whose packed programs share a compiled shape (same steps x channels x
+    banks x ranks — e.g. one accelerator/graph across timing variants)
+    are stacked and served by ONE ``vmap``-ed fused-scan dispatch;
+    remaining cases fall back to the per-case path.
     """
 
     def __init__(self, backend: Optional[str] = None,
-                 batch_memories: bool = False):
+                 batch_memories: bool = False, workers: int = 1):
+        if workers < 1:
+            raise ValueError(f"workers must be >= 1, got {workers}")
         self.backend = backend
         self.batch_memories = batch_memories
+        self.workers = workers
         self._sessions: Dict[int, SimSession] = {}
-        self.stats = SweepStats()
+        self._sessions_lock = threading.Lock()
+        self.stats = SweepStats(workers=workers)
 
     def _session(self, g: Graph) -> SimSession:
-        sess = self._sessions.get(id(g))
-        if sess is None:
-            sess = self._sessions[id(g)] = SimSession(g)
-        return sess
+        # worker threads race here via _prepare_case; two sessions for
+        # one graph would silently fork the single-flight caches
+        with self._sessions_lock:
+            sess = self._sessions.get(id(g))
+            if sess is None:
+                sess = self._sessions[id(g)] = SimSession(g)
+            return sess
+
+    def _sync_stats(self) -> None:
+        """Cache counters live on the (thread-safe) sessions; mirror
+        their totals onto the stats surface."""
+        with self._sessions_lock:
+            sessions = list(self._sessions.values())
+        s = self.stats
+        s.workers = self.workers
+        s.algo_runs = sum(x.algo_runs for x in sessions)
+        s.algo_cache_hits = sum(x.algo_cache_hits for x in sessions)
+        s.pack_cache_hits = sum(x.pack_cache_hits for x in sessions)
+        s.pack_cache_misses = sum(
+            x.pack_cache_misses for x in sessions)
 
     def run_case(self, case: SweepCase) -> SweepRow:
         sess = self._session(case.graph)
-        hits0, runs0 = sess.algo_cache_hits, sess.algo_runs
         t0 = time.perf_counter()
         report = sess.run(
             case.problem, case.accelerator, config=case.config,
@@ -134,8 +169,7 @@ class Sweeper:
             fixed_iters=case.fixed_iters)
         wall = time.perf_counter() - t0
         self.stats.cases += 1
-        self.stats.algo_cache_hits += sess.algo_cache_hits - hits0
-        self.stats.algo_runs += sess.algo_runs - runs0
+        self._sync_stats()
         return SweepRow(case=case, report=report, wall_s=wall)
 
     def run(self, cases: Sequence[SweepCase]) -> List[SweepRow]:
@@ -144,77 +178,25 @@ class Sweeper:
         cases = list(cases)
         if self.backend in (None, "vectorized"):
             if self.batch_memories:
-                return self._run_batched(cases)
-            return self._run_pipelined(cases)
-        order = sorted(
-            range(len(cases)),
-            key=lambda i: (cases[i].accelerator, id(cases[i].graph)))
-        rows: List[Optional[SweepRow]] = [None] * len(cases)
-        for i in order:
-            rows[i] = self.run_case(cases[i])
-        return rows
-
-    def _run_pipelined(self, cases: Sequence[SweepCase]) -> List[SweepRow]:
-        """Per-case execution with DRAM packing + scans on a worker
-        thread: the host side of case i+1 (algorithm run, model, trace
-        building) overlaps the pack/scan of case i — XLA releases the
-        GIL while the scan executes, NumPy for most of the packing.
-        Bit-identical to the sequential path."""
-        from concurrent.futures import ThreadPoolExecutor
-        order = sorted(
-            range(len(cases)),
-            key=lambda i: (cases[i].accelerator, id(cases[i].graph)))
-        rows: List[Optional[SweepRow]] = [None] * len(cases)
-
-        def pack_and_scan(program, cfg):
-            packed = pack_program(program, cfg)
-            if packed is None:
-                return None, None
-            carry = vec.init_lean_carry(
-                packed.issue.shape[1], packed.n_banks,
-                packed.banks_per_rank)
-            fin, _ = vec.fused_scan(packed.issue, packed.meta,
-                                    packed.boundary, packed.timing,
-                                    carry)
-            return packed, fin
-
-        def finalize(p):
-            i, case, model, run_, fut, prep_s = p
-            t0 = time.perf_counter()
-            packed, fin = fut.result()
-            stats = (ProgramStats([], 0, 0, 0, 0) if packed is None
-                     else finalize_program(packed, fin))
-            rows[i] = SweepRow(
-                case, model.make_report(case.problem, run_, stats),
-                prep_s + time.perf_counter() - t0)
-
-        pending = None
-        with ThreadPoolExecutor(max_workers=1) as pool:
+                rows = self._run_batched(cases)
+            else:
+                rows = self._run_pipelined(cases)
+        else:
+            order = sorted(
+                range(len(cases)),
+                key=lambda i: (cases[i].accelerator, id(cases[i].graph)))
+            rows = [None] * len(cases)
             for i in order:
-                case = cases[i]
-                t0 = time.perf_counter()
-                prep = self._prepare_case(case, pack=False)
-                if prep is None:
-                    if pending is not None:
-                        finalize(pending)
-                        pending = None
-                    rows[i] = self.run_case(case)
-                    continue
-                self.stats.cases += 1
-                model, run_, program = prep
-                fut = pool.submit(pack_and_scan, program, model.dram)
-                prep_s = time.perf_counter() - t0
-                if pending is not None:
-                    finalize(pending)
-                pending = (i, case, model, run_, fut, prep_s)
-            if pending is not None:
-                finalize(pending)
+                rows[i] = self.run_case(cases[i])
+        self._sync_stats()
         return rows
 
-    def _prepare_case(self, case: SweepCase, pack: bool = True):
-        """Build (model, run, packed-or-raw program) for a batchable
-        case, or ``None`` if the accelerator has no program form (e.g.
-        the event-driven reference machine)."""
+    def _prepare_case(self, case: SweepCase):
+        """Build ``(model, run, packed, dram)`` for a batchable case, or
+        ``None`` if the accelerator has no program form (e.g. the
+        event-driven reference machine).  Thread-safe: every expensive
+        product goes through the session's single-flight caches, and the
+        packed program comes from the geometry-keyed pack cache."""
         sess = self._session(case.graph)
         spec = get_accelerator(case.accelerator)
         cfg = spec.make_config(case.config,
@@ -223,53 +205,134 @@ class Sweeper:
         model = sess.model_for(spec, cfg)
         if not hasattr(model, "build_program"):
             return None
-        hits0, runs0 = sess.algo_cache_hits, sess.algo_runs
         run = sess.algorithm_run(spec, case.problem, cfg, case.root,
                                  case.fixed_iters)
-        self.stats.algo_cache_hits += sess.algo_cache_hits - hits0
-        self.stats.algo_runs += sess.algo_runs - runs0
-        program = model.build_program(case.problem, run)
-        if not pack:
-            return model, run, program
-        packed = pack_program(program, model.dram)
-        return model, run, packed
+        dram = (cfg.dram_config() if hasattr(cfg, "dram_config")
+                else model.dram)
+        packed = sess.packed_program_for(
+            spec, case.problem, cfg, model, run, dram,
+            root=case.root, fixed_iters=case.fixed_iters)
+        return model, run, packed, dram
+
+    def _run_pipelined(self, cases: Sequence[SweepCase]) -> List[SweepRow]:
+        """Sharded per-case execution: ``workers`` threads prepare cases
+        (algorithm run + trace build + pack — XLA and NumPy release the
+        GIL for the heavy parts) while this thread serves the fused scans
+        in deterministic case order.  Bit-identical to the sequential
+        path for any worker count."""
+        order = sorted(
+            range(len(cases)),
+            key=lambda i: (cases[i].accelerator, id(cases[i].graph)))
+        rows: List[Optional[SweepRow]] = [None] * len(cases)
+
+        def prep(i):
+            t0 = time.perf_counter()
+            out = self._prepare_case(cases[i])
+            return out, time.perf_counter() - t0
+
+        with ThreadPoolExecutor(max_workers=self.workers) as pool:
+            pending = deque()
+            it = iter(order)
+
+            def submit_next():
+                i = next(it, None)
+                if i is not None:
+                    pending.append((i, pool.submit(prep, i)))
+
+            # bound the in-flight window so prepared programs don't pile
+            # up in memory ahead of the serving loop
+            for _ in range(self.workers + 2):
+                submit_next()
+            while pending:
+                i, fut = pending.popleft()
+                prepped, prep_s = fut.result()
+                submit_next()
+                case = cases[i]
+                if prepped is None:
+                    rows[i] = self.run_case(case)
+                    continue
+                self.stats.cases += 1
+                model, run_, packed, dram = prepped
+                t0 = time.perf_counter()
+                if packed is None:
+                    stats = ProgramStats([], 0, 0, 0, 0)
+                else:
+                    stats, _ = serve_packed(
+                        packed, timing=vec.timing_params(dram.timing))
+                rows[i] = SweepRow(
+                    case, model.make_report(case.problem, run_, stats),
+                    prep_s + time.perf_counter() - t0)
+        return rows
 
     def _run_batched(self, cases: Sequence[SweepCase]) -> List[SweepRow]:
         rows: List[Optional[SweepRow]] = [None] * len(cases)
-        groups = defaultdict(list)
-        for i, case in enumerate(cases):
+
+        def prep(i):
             t0 = time.perf_counter()
-            prep = self._prepare_case(case)
-            if prep is None:
-                rows[i] = self.run_case(case)
+            out = self._prepare_case(cases[i])
+            return out, time.perf_counter() - t0
+
+        with ThreadPoolExecutor(max_workers=self.workers) as pool:
+            preps = list(pool.map(prep, range(len(cases))))
+        groups = defaultdict(list)
+        for i, (prepped, prep_s) in enumerate(preps):
+            if prepped is None:
+                rows[i] = self.run_case(cases[i])
                 continue
             self.stats.cases += 1
-            groups[prep[2].signature if prep[2] is not None else None]\
-                .append((i, case, *prep, time.perf_counter() - t0))
-        for sig, items in groups.items():
-            if sig is None:                     # empty programs
-                for i, case, model, run, _packed, wall in items:
-                    stats = ProgramStats([], 0, 0, 0, 0)
-                    rows[i] = SweepRow(case, model.make_report(
-                        case.problem, run, stats), wall)
-                continue
+            model, run_, packed, dram = prepped
+            sig = packed.signature if packed is not None else None
+            groups[sig].append((i, cases[i], model, run_, packed, dram,
+                                prep_s))
+        def serve_group(items):
             t0 = time.perf_counter()
             packs = [it[4] for it in items]
-            fins, _ = vec.fused_scan_batch(
-                np.stack([p.issue for p in packs]),
-                np.stack([p.meta for p in packs]),
-                np.stack([p.boundary for p in packs]),
-                np.stack([p.timing for p in packs]),
-                packs[0].n_banks, packs[0].banks_per_rank)
-            fins = np.asarray(fins)
+            timings = np.stack(
+                [vec.timing_params(it[5].timing) for it in items])
+            device = all(isinstance(p, DevicePackedProgram)
+                         for p in packs)
+            if len({id(p) for p in packs}) == 1:
+                # one cached pack, many timing vectors: serve the
+                # resident program against the whole timing batch
+                # without replicating its streams
+                fins, _ = vec.fused_scan_batch_shared(
+                    packs[0].issue, packs[0].meta, packs[0].boundary,
+                    timings, packs[0].n_banks, packs[0].banks_per_rank,
+                    as_numpy=not device)
+            else:
+                stack = jnp.stack if device else np.stack
+                fins, _ = vec.fused_scan_batch(
+                    stack([p.issue for p in packs]),
+                    stack([p.meta for p in packs]),
+                    stack([p.boundary for p in packs]), timings,
+                    packs[0].n_banks, packs[0].banks_per_rank,
+                    as_numpy=not device)
             share = (time.perf_counter() - t0) / len(items)
-            self.stats.batch_dispatches += 1
-            self.stats.batched_cases += len(items)
-            for (i, case, model, run, packed, wall), fin in zip(items,
-                                                                fins):
-                stats = finalize_program(packed, fin)
+            for (i, case, model, run_, packed, _dram, wall), m in zip(
+                    items, range(len(items))):
+                if isinstance(packed, DevicePackedProgram):
+                    stats = finalize_program_device(packed, fins[m])
+                else:
+                    stats = finalize_program(packed, np.asarray(fins[m]))
                 rows[i] = SweepRow(case, model.make_report(
-                    case.problem, run, stats), wall + share)
+                    case.problem, run_, stats), wall + share)
+
+        empties = groups.pop(None, [])
+        for i, case, model, run_, _p, _d, wall in empties:
+            stats = ProgramStats([], 0, 0, 0, 0)
+            rows[i] = SweepRow(case, model.make_report(
+                case.problem, run_, stats), wall)
+        # independent signature groups serve concurrently (their scans
+        # share no state; rows land at disjoint indices)
+        group_items = list(groups.values())
+        self.stats.batch_dispatches += len(group_items)
+        self.stats.batched_cases += sum(len(g) for g in group_items)
+        if self.workers > 1 and len(group_items) > 1:
+            with ThreadPoolExecutor(max_workers=self.workers) as pool:
+                list(pool.map(serve_group, group_items))
+        else:
+            for items in group_items:
+                serve_group(items)
         return rows
 
 
@@ -281,7 +344,7 @@ def sweep(graphs: Iterable[Graph] = (), problems: Iterable = (),
           root: int = 0, fixed_iters: Optional[int] = None,
           backend: Optional[str] = None,
           cases: Optional[Sequence[SweepCase]] = None,
-          batch_memories: bool = False,
+          batch_memories: bool = False, workers: int = 1,
           sweeper: Optional[Sweeper] = None) -> List[SweepRow]:
     """Run a simulation grid; returns one row per grid point.
 
@@ -289,9 +352,10 @@ def sweep(graphs: Iterable[Graph] = (), problems: Iterable = (),
     variants``, expanded as an outer product in that order) or an explicit
     ``cases`` list for irregular grids (e.g. a per-dataset config).
     ``configs`` maps accelerator name -> config dataclass for the grid
-    form.  ``batch_memories=True`` stacks cases whose packed programs
-    share a compiled shape (typically the memory axis of one
-    accelerator/graph point) into single ``vmap``-ed fused-scan
+    form.  ``workers=N`` shards case preparation over N threads (results
+    identical for any N).  ``batch_memories=True`` stacks cases whose
+    packed programs share a compiled shape (typically the memory axis of
+    one accelerator/graph point) into single ``vmap``-ed fused-scan
     dispatches.  Pass a :class:`Sweeper` to share its cache/stats across
     calls or to inspect ``sweeper.stats`` afterwards.
     """
@@ -305,9 +369,15 @@ def sweep(graphs: Iterable[Graph] = (), problems: Iterable = (),
                 graphs, problems, accelerators, memories, variants)
         ]
     if sweeper is None:
-        sweeper = Sweeper(backend=backend, batch_memories=batch_memories)
-    elif batch_memories and not sweeper.batch_memories:
-        raise ValueError(
-            "batch_memories=True conflicts with the provided sweeper "
-            "(construct it with Sweeper(batch_memories=True))")
+        sweeper = Sweeper(backend=backend, batch_memories=batch_memories,
+                          workers=workers)
+    else:
+        if batch_memories and not sweeper.batch_memories:
+            raise ValueError(
+                "batch_memories=True conflicts with the provided sweeper "
+                "(construct it with Sweeper(batch_memories=True))")
+        if workers != 1 and workers != sweeper.workers:
+            raise ValueError(
+                "workers= conflicts with the provided sweeper "
+                f"(it was constructed with workers={sweeper.workers})")
     return sweeper.run(cases)

@@ -1,0 +1,241 @@
+"""Device-resident program packing, the geometry-keyed pack cache, and
+the sharded sweep executor.
+
+* field-by-field parity of the jitted device pack against the NumPy
+  reference packer (``pack_program`` stays the bit-equivalence oracle);
+* SimReport A/B equality of host- vs device-packed serving over a
+  36-scenario grid (graphs x problems x accelerators x memories);
+* determinism of ``Sweeper(workers=N)`` for N in {1, 2, 4};
+* pack-cache reuse: a timing-comparison grid packs each
+  (graph, accelerator) point exactly once.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import vectorized as vec
+from repro.core.accel import (VectorizedDRAM, device_pack_supported,
+                              finalize_program, finalize_program_device,
+                              pack_program, pack_program_device)
+from repro.core.dram import PRESETS
+from repro.core.trace import SegmentedTrace
+from repro.graphs.generators import rmat
+from repro.sim import (SimSession, SweepCase, Sweeper, simulate, sweep,
+                       timing_variants)
+
+
+def _random_program(rng, n_phases=5, span=1 << 18, max_n=300,
+                    sequential=False):
+    phases = []
+    base = 0
+    for p in range(n_phases):
+        n = int(rng.integers(16, max_n))
+        if sequential:                    # hit-dominated (wide blocks)
+            lines = base + np.arange(n)
+            base += n // 2
+        else:
+            lines = rng.integers(0, span, n)
+        phases.append((f"p{p}", lines, np.zeros(n, dtype=bool),
+                       np.sort(rng.integers(0, 4 * n, n))))
+    return SegmentedTrace.from_phases(phases)
+
+
+def _phase_tuples(report_or_backend):
+    return [(p.name, p.requests, p.start_cycle, p.end_cycle, p.row_hits,
+             p.row_conflicts) for p in report_or_backend.phases]
+
+
+class TestDevicePackParity:
+    """The device pack must reproduce every array of the NumPy reference
+    bit-for-bit: blocked streams, boundaries, kinds, and the finish
+    times / statistics the fused scan derives from them."""
+
+    @pytest.mark.parametrize("preset", list(PRESETS))
+    @pytest.mark.parametrize("sequential", [False, True])
+    def test_packed_arrays_match(self, preset, sequential):
+        cfg = PRESETS[preset]()
+        rng = np.random.default_rng(hash((preset, sequential)) % 2**31)
+        prog = _random_program(rng, sequential=sequential)
+        assert device_pack_supported(prog, cfg)
+        host = pack_program(prog, cfg)
+        dev = pack_program_device(prog, cfg)
+        assert np.array_equal(np.asarray(dev.issue), host.issue)
+        assert np.array_equal(np.asarray(dev.meta), host.meta)
+        assert np.array_equal(np.asarray(dev.boundary), host.boundary)
+        assert np.array_equal(np.asarray(dev.kind)[:len(prog)], host.kind)
+        assert np.array_equal(np.asarray(dev.open_row_final),
+                              host.open_row_final)
+        assert dev.n_steps == host.n_steps
+        assert dev.signature == (tuple(host.issue.shape), host.n_banks,
+                                 host.banks_per_rank)
+
+    def test_finish_times_and_stats_match(self):
+        cfg = PRESETS["comparability"]()
+        rng = np.random.default_rng(7)
+        prog = _random_program(rng, sequential=True)
+        host = pack_program(prog, cfg)
+        dev = pack_program_device(prog, cfg)
+        carry = vec.init_lean_carry(cfg.channels, host.n_banks,
+                                    host.banks_per_rank)
+        fin_h, _ = vec.fused_scan(host.issue, host.meta, host.boundary,
+                                  host.timing, carry)
+        carry = vec.init_lean_carry(cfg.channels, dev.n_banks,
+                                    dev.banks_per_rank)
+        fin_d, _ = vec.fused_scan(dev.issue, dev.meta, dev.boundary,
+                                  dev.timing, carry, as_numpy=False)
+        assert finalize_program(host, fin_h) == \
+            finalize_program_device(dev, fin_d)
+
+    def test_open_row_chaining_across_programs(self):
+        """Carry (open rows + timing state) flows identically whether
+        programs are packed on host or device."""
+        cfg = PRESETS["hitgraph"]()
+        rng = np.random.default_rng(3)
+        progs = [_random_program(rng, sequential=bool(i % 2))
+                 for i in range(3)]
+        a = VectorizedDRAM(cfg, pack_backend="host")
+        b = VectorizedDRAM(cfg, pack_backend="device")
+        for prog in progs:
+            a.run_program(prog)
+            b.run_program(prog)
+        assert a.now == b.now
+        assert _phase_tuples(a) == _phase_tuples(b)
+        assert (a.total_requests, a.total_row_hits,
+                a.total_row_conflicts) == \
+            (b.total_requests, b.total_row_hits, b.total_row_conflicts)
+
+    def test_device_pack_counts_dispatches(self):
+        cfg = PRESETS["accugraph"]()
+        prog = _random_program(np.random.default_rng(5))
+        vec.reset_dispatch_counts()
+        pack_program_device(prog, cfg)
+        assert vec.dispatch_counts()["device_pack"] == 1
+
+
+class TestHostDeviceABReports:
+    """The 36-scenario A/B set: SimReports must be bit-identical between
+    host-packed and device-packed serving."""
+
+    def test_ab_grid(self, monkeypatch):
+        graphs = [rmat(8, 5, seed=1).undirected_view(),
+                  rmat(9, 4, seed=2).undirected_view(),
+                  rmat(7, 7, seed=3).undirected_view()]
+        # memory axes fitting each accelerator's channel assignment
+        # (HitGraph's 4 PEs need >= 4 channels)
+        memories = {"hitgraph": [None, "ddr3", "hbm2"],
+                    "accugraph": [None, "ddr4-8gb", "hbm2"]}
+        accels = ("hitgraph", "accugraph")
+        # wcc across the full memory axis; bfs/sssp on the defaults
+        scenarios = (
+            [(g, "wcc", a, m)
+             for g in graphs for a in accels for m in memories[a]]
+            + [(g, p, a, None)
+               for g in graphs for p in ("bfs", "sssp") for a in accels]
+            + [(graphs[0], "pr", a, m) for a in accels for m in memories[a]]
+        )
+        assert len(scenarios) == 36
+        reports = {}
+        for backend in ("host", "device"):
+            monkeypatch.setenv("REPRO_PACK_BACKEND", backend)
+            for idx, (g, p, a, m) in enumerate(scenarios):
+                r = simulate(g, p, accelerator=a, memory=m,
+                             partition_elements=128)
+                reports.setdefault((idx, p, a, m), []).append(r)
+        for s, (rh, rd) in reports.items():
+            assert rh.runtime_ns == rd.runtime_ns, s
+            assert rh.total_requests == rd.total_requests, s
+            assert rh.row_hit_rate == rd.row_hit_rate, s
+            assert [dataclasses.astuple(p) for p in rh.phases] == \
+                [dataclasses.astuple(p) for p in rd.phases], s
+
+
+class TestShardedDeterminism:
+    def _cases(self):
+        g1 = rmat(8, 5, seed=11).undirected_view()
+        g2 = rmat(7, 6, seed=12).undirected_view()
+        return [SweepCase(graph=g, problem="wcc", accelerator=a,
+                          memory=m)
+                for g in (g1, g2) for a in ("hitgraph", "accugraph")
+                for m in (None, "hbm2")]
+
+    def test_identical_rows_any_worker_count(self):
+        cases = self._cases()
+        def key(rows):
+            return [(r.report.system, r.report.runtime_ns,
+                     r.report.total_requests, r.report.row_hit_rate,
+                     tuple(dataclasses.astuple(p)
+                           for p in r.report.phases))
+                    for r in rows]
+        results = {}
+        for w in (1, 2, 4):
+            sw = Sweeper(workers=w)
+            results[w] = key(sw.run(cases))
+            assert sw.stats.workers == w
+            assert sw.stats.cases == len(cases)
+        assert results[1] == results[2] == results[4]
+
+    def test_workers_validation(self):
+        with pytest.raises(ValueError):
+            Sweeper(workers=0)
+        sw = Sweeper(workers=2)
+        with pytest.raises(ValueError):
+            sweep(cases=[], workers=4, sweeper=sw)
+
+
+class TestPackCacheReuse:
+    def test_timing_grid_packs_once_per_point(self):
+        """A DDR3/DDR4/HBM2-timing comparison grid packs each
+        (graph, accelerator) point exactly once and replays the cached
+        pack against every timing vector."""
+        g = rmat(8, 5, seed=21).undirected_view()
+        mems = timing_variants("ddr4-8gb", kinds=("ddr3", "ddr4", "hbm2"))
+        sw = Sweeper(batch_memories=True, workers=2)
+        rows = sweep(graphs=[g], problems=["wcc"],
+                     accelerators=["hitgraph", "accugraph"],
+                     memories=mems, sweeper=sw)
+        assert sw.stats.pack_cache_misses == 2        # one per accelerator
+        assert sw.stats.pack_cache_hits == 4          # the other 4 cases
+        assert sw.stats.batched_cases == 6
+        # the timing axis actually changes results
+        runtimes = {r.memory: r.report.runtime_ns for r in rows
+                    if r.report.system == "accugraph"}
+        assert len(set(runtimes.values())) > 1
+        # a second pass over the same grid is all hits
+        sweep(cases=[SweepCase(graph=g, problem="wcc",
+                               accelerator="hitgraph", memory=mems[0])],
+              sweeper=None)
+        before = sw.stats.pack_cache_misses
+        sw.run([SweepCase(graph=g, problem="wcc", accelerator=a,
+                          memory=m)
+                for a in ("hitgraph", "accugraph") for m in mems])
+        assert sw.stats.pack_cache_misses == before
+
+    def test_timing_variants_share_geometry(self):
+        mems = timing_variants("ddr4-8gb",
+                               kinds=("ddr3", "ddr4-3200", "hbm2e"))
+        keys = {m.geometry_key for m in mems}
+        assert len(keys) == 1
+        assert len({m.timing for m in mems}) == 3
+        assert all("-timing" in m.name for m in mems)
+
+    def test_batched_matches_sequential_on_timing_grid(self):
+        g = rmat(8, 5, seed=31).undirected_view()
+        mems = timing_variants("ddr4", kinds=("ddr3", "ddr4", "hbm2e"))
+        kw = dict(graphs=[g], problems=["wcc"],
+                  accelerators=["accugraph"], memories=mems)
+        batched = sweep(batch_memories=True, workers=2, **kw)
+        seq = sweep(**kw)
+        for b, s in zip(batched, seq):
+            assert b.report.runtime_ns == s.report.runtime_ns
+            assert _phase_tuples(b.report) == _phase_tuples(s.report)
+
+    def test_session_cache_counters(self):
+        g = rmat(7, 5, seed=41).undirected_view()
+        sess = SimSession(g)
+        sess.run("wcc", accelerator="accugraph")
+        sess.run("wcc", accelerator="accugraph", memory="ddr4")
+        # same geometry + clock as the accugraph default -> shared model
+        key_count = len(sess._models)
+        assert key_count == 1
