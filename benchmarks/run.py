@@ -56,14 +56,14 @@ def main() -> int:
     ap.add_argument("--scale", type=float, default=0.01)
     ap.add_argument("--only", default=None,
                     help="comma list: fig09,fig10,fig11,fig12,fig13,"
-                         "fig02,dram,kernels,sweep")
+                         "fig02,dram,kernels,sweep,cache")
     ap.add_argument("--json-out", default=None)
     ap.add_argument("--no-trajectory", action="store_true",
                     help="skip appending the sweep row to BENCH_sweep.json")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
-    from benchmarks import (dram_types, fig02_repro_error,
+    from benchmarks import (cache_hierarchy, dram_types, fig02_repro_error,
                             fig09_hitgraph, fig10_accugraph, fig11_degree,
                             fig12_comparability, fig13_optimizations,
                             kernel_bench, sweep_throughput)
@@ -78,6 +78,7 @@ def main() -> int:
         "dram": lambda: dram_types.run(args.scale),
         "kernels": kernel_bench.run,
         "sweep": lambda: sweep_throughput.run(args.scale),
+        "cache": lambda: cache_hierarchy.run(args.scale),
     }
 
     all_rows = []

@@ -53,3 +53,16 @@ for name, memory in (("ddr4", None), ("hbm2-interleaved", "hbm2")):
     print(f"  {name:18s}: {r.runtime_ms:7.3f} ms greps={r.reps/1e9:.2f}")
 print("\n(64 pipelines + HBM shows the bandwidth headroom the 16-pipe")
 print(" design cannot use — the [Gh19]-style DRAM/workload interaction)")
+
+print("\n== on-chip cache hierarchy (vertex BRAM sweep, WCC) ==")
+# the hierarchy layer is one more sweep axis: cache hits are dropped
+# before they reach DRAM, so a BRAM-budget ladder directly charts how
+# much of the working set each budget keeps on chip.
+for cache in (None, "vertex-64k", "vertex-256k", "vertex-1m", "default"):
+    r = session.run("wcc", "accugraph", cache=cache)
+    label = cache or "no-cache"
+    print(f"  {label:18s}: {r.runtime_ms:7.3f} ms "
+          f"hit-rate={r.cache_hit_rate:5.1%} "
+          f"dram-requests={r.total_requests}")
+print("\n('default' is AccuGraph's declared vertex BRAM; HitGraph's")
+print(" default is a stream prefetcher — see repro.sim.CACHE_PRESETS)")

@@ -18,6 +18,14 @@ Two execution modes share one statistics surface:
   dispatch per phase), kept for interactive/streaming use and as the
   bit-equivalence reference for the fused scan.
 
+When the device carries an on-chip hierarchy level
+(``DRAMConfig.cache``), both modes first run the program through the
+cache filter (:mod:`repro.core.cache`): hits are dropped *before*
+packing and the prefetcher shapes issue lower bounds, with the lookup
+state persisting across phases and programs.  The filtered program is
+what packs — which is why ``DRAMConfig.geometry_key`` includes the cache
+dimension.
+
 Programs are padded to a two-size chunk ladder so the process compiles
 each scan structure exactly twice, whatever the run length; DRAM timing
 parameters are traced inputs, so DDR3/DDR4/HBM2/HBM2E all share one
@@ -44,6 +52,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import cache as cache_mod
 from repro.core.dram import DRAMConfig, CACHE_LINE_BYTES
 from repro.core.trace import SegmentedTrace, Trace
 from repro.core import vectorized as vec
@@ -379,13 +388,28 @@ def pack_program_auto(program: SegmentedTrace, cfg: DRAMConfig,
 class ProgramStats:
     """Accumulated DRAM statistics of one executed program — the shared
     surface :class:`~repro.core.accel.SimReport` assembly reads (duck-typed
-    with ``VectorizedDRAM`` / ``EventDRAM``)."""
+    with ``VectorizedDRAM`` / ``EventDRAM``).  The cache fields describe
+    the on-chip hierarchy level the program passed through before packing
+    (zero when no cache is configured)."""
 
     phases: List[PhaseStats]
     now: int
     total_requests: int
     total_row_hits: int
     total_row_conflicts: int
+    cache_lookups: int = 0
+    cache_hits: int = 0
+    prefetch_hits: int = 0
+
+    def attach_cache(self, cs) -> "ProgramStats":
+        """Fold a :class:`repro.core.cache.CacheStats` into this surface
+        (the sweep engine serves cached packs whose filtering happened at
+        pack time)."""
+        if cs is not None:
+            self.cache_lookups += cs.lookups
+            self.cache_hits += cs.hits
+            self.prefetch_hits += cs.prefetch_hits
+        return self
 
 
 def finalize_program(packed: PackedProgram, finish,
@@ -495,6 +519,12 @@ class VectorizedDRAM:
         self.cfg = cfg
         self.pack_backend = pack_backend
         self._timing = vec.timing_params(cfg.timing)
+        # on-chip hierarchy level: requests are filtered through it (hits
+        # dropped, prefetch issue shaping) before they reach the packer;
+        # the lookup state persists across phases and programs.
+        self.cache = cfg.effective_cache
+        self._cache_state = cache_mod.init_state(self.cache)
+        self.cache_stats = cache_mod.CacheStats()
         self._reset_carry()
         # Device-side cycle math is int32; ``_origin`` (host int64) anchors
         # the device-relative clock so runs can exceed the int32 range
@@ -531,9 +561,26 @@ class VectorizedDRAM:
         self.total_row_hits += hits
         self.total_row_conflicts += confl
 
+    # the SimReport assembly reads these off any stats surface
+    @property
+    def cache_lookups(self) -> int:
+        return self.cache_stats.lookups
+
+    @property
+    def cache_hits(self) -> int:
+        return self.cache_stats.hits
+
+    @property
+    def prefetch_hits(self) -> int:
+        return self.cache_stats.prefetch_hits
+
     def run_phase(self, trace: Trace, name: str = "phase") -> int:
         """Simulate one phase starting at the current clock; returns its
         makespan (absolute memory cycle)."""
+        if self.cache is not None:
+            trace, cs, self._cache_state = cache_mod.filter_trace(
+                trace, self.cache, self._cache_state)
+            self.cache_stats.merge(cs)
         if len(trace) == 0:
             return self.now
         start_rel = self._rel_now
@@ -575,6 +622,10 @@ class VectorizedDRAM:
         dispatches (device-resident pack + fused scan with the phase
         barriers honored inside it); returns the final absolute makespan.
         Bit-equivalent to calling :meth:`run_phase` per phase."""
+        if self.cache is not None:
+            program, cs, self._cache_state = cache_mod.filter_program(
+                program, self.cache, self._cache_state)
+            self.cache_stats.merge(cs)
         packed = pack_program_auto(program, self.cfg,
                                    open_row=self.carry[0],
                                    backend=self.pack_backend)
@@ -617,6 +668,16 @@ class SimReport:
     total_bytes: int
     row_hit_rate: float
     phases: List[PhaseStats]
+    # on-chip hierarchy level (all zero when no cache is configured);
+    # ``total_requests`` counts what reached DRAM *after* filtering.
+    cache_lookups: int = 0
+    cache_hits: int = 0
+    prefetch_hits: int = 0
+
+    @property
+    def cache_hit_rate(self) -> float:
+        """On-chip hit rate over the reads that probed the cache."""
+        return self.cache_hits / max(self.cache_lookups, 1)
 
     @property
     def runtime_s(self) -> float:

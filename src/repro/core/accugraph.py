@@ -251,6 +251,9 @@ class AccuGraphModel:
             row_hit_rate=(stats.total_row_hits
                           / max(stats.total_requests, 1)),
             phases=stats.phases,
+            cache_lookups=getattr(stats, "cache_lookups", 0),
+            cache_hits=getattr(stats, "cache_hits", 0),
+            prefetch_hits=getattr(stats, "prefetch_hits", 0),
         )
 
     def simulate(self, problem: Problem, root: int = 0,

@@ -1,0 +1,408 @@
+"""On-chip cache-hierarchy model: BRAM vertex caches + stream prefetchers.
+
+The paper's accelerators differ most in what they keep *on chip*
+(AccuGraph's vertex BRAM, HitGraph's prefetch units), yet the trace
+models historically baked those effects invisibly into the builders.
+This module makes the hierarchy an explicit, sweepable simulation layer
+that sits **between the emitted request program and the DRAM backends**:
+
+    trace model -> SegmentedTrace -> [cache filter] -> pack -> fused scan
+
+* A :class:`CacheConfig` describes a direct-mapped / set-associative
+  **vertex cache** (LRU per set) plus an optional **sequential stream
+  prefetcher**.  It hangs off :class:`~repro.core.dram.DRAMConfig.cache`,
+  so every accelerator x memory x backend combination gains the axis for
+  free and the geometry-keyed pack cache stays sound
+  (``DRAMConfig.geometry_key`` includes the cache dimension).
+* The **cache** drops read requests that hit on chip *before packing* —
+  hits never reach the DRAM model.  Writes bypass the cache (the traced
+  writes are exactly the accelerators' explicit DRAM write-backs; a
+  write-absorbing model would double-count the BRAM accumulation the
+  trace builders already perform on chip).
+* The **prefetcher** is a stream buffer over the post-cache miss stream:
+  within a phase, read requests to consecutive cache lines form runs,
+  and each run's requests beyond the head are fetched up to ``degree``
+  requests ahead of demand (their DRAM issue lower bound moves back to
+  the triggering demand's issue).  Addresses, program order, and hence
+  row-buffer kinds are untouched — prefetch only shapes *when* a fetch
+  may start, so a prefetched program's makespan is never worse than the
+  unprefetched one.
+
+Both halves depend only on line addresses, program order, and (for the
+prefetcher) the timing-independent issue lower bounds — never on DRAM
+timing parameters — so a filtered program replays against whole timing
+grids exactly like an unfiltered one.
+
+Two interchangeable, bit-identical lookup implementations mirror the
+pack-path split: a vectorized NumPy reference (sets are independent, so
+requests group into per-set lockstep columns and a short Python loop
+runs dense ``[sets, ways]`` LRU steps) and a jitted ``lax.scan`` device
+path over the same columns (``REPRO_CACHE_BACKEND=host|device``
+overrides the platform heuristic).  ``tests/test_cache_model.py``
+enforces the equivalence against an element-wise oracle.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import TYPE_CHECKING, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+if TYPE_CHECKING:  # pragma: no cover
+    from repro.core.trace import SegmentedTrace, Trace
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheConfig:
+    """One level of on-chip hierarchy in front of a DRAM device.
+
+    ``lines``  capacity in 64 B cache lines (0 = no cache); ``sets`` =
+               ``lines // ways``; a line maps to set ``line % sets``.
+    ``ways``   associativity (1 = direct-mapped), LRU replacement.
+    ``prefetch_degree``  sequential stream-buffer depth: reads covered by
+               an ongoing consecutive-line run are issued up to this many
+               requests ahead of demand (0 = off).
+
+    ``lines=0, prefetch_degree=0`` is the identity — the filtered
+    pipeline is bit-equal to no cache at all (property-tested).
+    """
+
+    lines: int = 0
+    ways: int = 1
+    prefetch_degree: int = 0
+    #: display only — excluded from eq/hash so same-geometry configs
+    #: under different names share pack-cache entries (geometry_key
+    #: compares CacheConfigs)
+    name: str = dataclasses.field(default="", compare=False)
+
+    def __post_init__(self) -> None:
+        if self.lines < 0 or self.ways < 1 or self.prefetch_degree < 0:
+            raise ValueError(f"invalid cache geometry: {self}")
+        if self.lines % self.ways:
+            raise ValueError(
+                f"cache lines ({self.lines}) must divide evenly into "
+                f"ways ({self.ways})")
+
+    @property
+    def sets(self) -> int:
+        return self.lines // self.ways
+
+    @property
+    def capacity_bytes(self) -> int:
+        return self.lines * 64
+
+    @property
+    def enabled(self) -> bool:
+        return self.lines > 0 or self.prefetch_degree > 0
+
+    def display_name(self) -> str:
+        if self.name:
+            return self.name
+        if not self.enabled:
+            return "none"
+        parts = []
+        if self.lines:
+            parts.append(f"{self.capacity_bytes // 1024}KiB/{self.ways}w")
+        if self.prefetch_degree:
+            parts.append(f"pf{self.prefetch_degree}")
+        return "+".join(parts)
+
+
+@dataclasses.dataclass
+class CacheStats:
+    """Accumulated hierarchy statistics of one filtered stream."""
+
+    lookups: int = 0        # read requests that probed the cache
+    hits: int = 0           # reads served on chip (dropped before DRAM)
+    prefetch_hits: int = 0  # reads covered by the stream buffer
+
+    def merge(self, other: "CacheStats") -> None:
+        self.lookups += other.lookups
+        self.hits += other.hits
+        self.prefetch_hits += other.prefetch_hits
+
+    @property
+    def hit_rate(self) -> float:
+        return self.hits / max(self.lookups, 1)
+
+
+@dataclasses.dataclass
+class CacheState:
+    """Mutable lookup state: per-set tags (-1 = invalid) and LRU ages
+    (a permutation of ``0..ways-1`` per set; 0 = most recent, the way
+    with the largest age is the victim — untouched ways keep the largest
+    ages, so empty ways fill before any valid line is evicted)."""
+
+    tags: np.ndarray        # int64[sets, ways]
+    age: np.ndarray         # int64[sets, ways]
+
+
+def effective(cache: Optional[CacheConfig]) -> Optional[CacheConfig]:
+    """Normalize a cache selection: a disabled config means "no cache"
+    (the single coercion point the backends and config plumbing share)."""
+    return cache if cache is not None and cache.enabled else None
+
+
+def init_state(cache: Optional[CacheConfig]) -> Optional[CacheState]:
+    if cache is None or cache.sets == 0:
+        return None
+    S, W = cache.sets, cache.ways
+    return CacheState(
+        tags=np.full((S, W), -1, dtype=np.int64),
+        age=np.broadcast_to(np.arange(W, dtype=np.int64),
+                            (S, W)).copy())
+
+
+def _bucket(n: int) -> int:
+    return 1 << max(n - 1, 1).bit_length()
+
+
+def _auto_prefers_device() -> bool:
+    """Mirror of the pack-path platform heuristic: the jitted lookup only
+    pays off when there is a real host->device boundary; on the CPU
+    backend the NumPy column loop wins."""
+    env = os.environ.get("REPRO_CACHE_BACKEND")
+    if env in ("device", "host"):
+        return env == "device"
+    return jax.default_backend() != "cpu"
+
+
+def _columns(n_rows: int, row: np.ndarray, tag: np.ndarray):
+    """Group a per-set-ordered read stream into lockstep columns: column
+    ``t`` holds each set's ``t``-th access (sets are independent, so
+    serving columns in order is exactly program order per set).  Rows
+    are *compact* — callers pass only the touched sets, so a skewed
+    stream costs touched x max-per-set, never sets x max-per-set."""
+    from repro.core.trace import group_ranks
+    counts = np.bincount(row, minlength=n_rows)
+    slot = group_ranks(counts, row)
+    L = int(counts.max()) if len(row) else 0
+    tag_m = np.full((n_rows, L), -1, dtype=np.int64)
+    valid_m = np.zeros((n_rows, L), dtype=bool)
+    tag_m[row, slot] = tag
+    valid_m[row, slot] = True
+    return tag_m, valid_m, slot
+
+
+def _lookup_numpy(tags: np.ndarray, age: np.ndarray, tag_m: np.ndarray,
+                  valid_m: np.ndarray) -> np.ndarray:
+    """The NumPy reference lookup: dense ``[rows, ways]`` LRU steps over
+    the lockstep columns; ``tags``/``age`` (the touched sets' state) are
+    updated in place."""
+    S, W = tags.shape
+    L = tag_m.shape[1]
+    hit_m = np.zeros((S, L), dtype=bool)
+    rows = np.arange(S)
+    for t in range(L):
+        cur = tag_m[:, t]
+        v = valid_m[:, t]
+        match = (tags == cur[:, None]) & v[:, None]
+        h = match.any(axis=1)
+        hit_age = np.max(np.where(match, age, -1), axis=1)
+        # on a hit, ways more recent than the touched one age by 1; on a
+        # miss every way ages and the oldest (argmax — unique, ages are a
+        # permutation) is replaced.  Ages stay a permutation either way.
+        thresh = np.where(h, hit_age, W)
+        tgt = np.where(h, match.argmax(axis=1), age.argmax(axis=1))
+        age += (age < thresh[:, None]) & v[:, None]
+        r = rows[v]
+        age[r, tgt[r]] = 0
+        tags[r, tgt[r]] = cur[r]
+        hit_m[:, t] = h
+    return hit_m
+
+
+@jax.jit
+def _lookup_scan(tag_cols, valid_cols, tags0, age0):
+    """The jitted counterpart of :func:`_lookup_numpy`: one ``lax.scan``
+    over the lockstep columns, carry = (tags, ages).  Bit-identical by
+    construction (same dense step; argmax tie-breaks agree because ages
+    are a per-set permutation and at most one way matches)."""
+    W = tags0.shape[1]
+    way_ids = jnp.arange(W, dtype=jnp.int32)
+
+    def step(carry, x):
+        tags, age = carry
+        cur, v = x
+        match = (tags == cur[:, None]) & v[:, None]
+        h = match.any(axis=1)
+        hit_age = jnp.max(jnp.where(match, age, -1), axis=1)
+        thresh = jnp.where(h, hit_age, W)
+        tgt = jnp.where(h, jnp.argmax(match, axis=1),
+                        jnp.argmax(age, axis=1))
+        age = age + ((age < thresh[:, None]) & v[:, None])
+        upd = (tgt[:, None] == way_ids) & v[:, None]
+        age = jnp.where(upd, 0, age)
+        tags = jnp.where(upd, cur[:, None], tags)
+        return (tags, age), h
+
+    (tags, age), hits = jax.lax.scan(step, (tags0, age0),
+                                     (tag_cols, valid_cols))
+    return hits, tags, age
+
+
+def _lookup_device(tags: np.ndarray, age: np.ndarray, tag_m: np.ndarray,
+                   valid_m: np.ndarray):
+    """Jitted lookup over the compact column matrices; returns the hit
+    matrix and the updated (touched-set) state arrays.  Row and column
+    counts are bucketed to powers of two so the jit cache stays
+    logarithmic in both (padded rows carry no valid accesses and their
+    state is discarded)."""
+    U, L = tag_m.shape
+    if int(tag_m.max()) >= 2**31 or int(tags.max()) >= 2**31:
+        raise ValueError(
+            "cache tags exceed the device lookup's int32 range; use the "
+            "host backend for this program")
+    W = tags.shape[1]
+    U_pad, L_pad = _bucket(U), _bucket(L)
+    tag_p = np.full((L_pad, U_pad), -1, dtype=np.int32)
+    valid_p = np.zeros((L_pad, U_pad), dtype=bool)
+    tag_p[:L, :U] = tag_m.T
+    valid_p[:L, :U] = valid_m.T
+    tags_p = np.full((U_pad, W), -1, dtype=np.int32)
+    tags_p[:U] = tags
+    age_p = np.broadcast_to(np.arange(W, dtype=np.int32),
+                            (U_pad, W)).copy()
+    age_p[:U] = age
+    hits, tags_out, age_out = _lookup_scan(
+        jnp.asarray(tag_p), jnp.asarray(valid_p),
+        jnp.asarray(tags_p), jnp.asarray(age_p))
+    return (np.asarray(hits)[:L, :U].T,
+            np.asarray(tags_out)[:U].astype(np.int64),
+            np.asarray(age_out)[:U].astype(np.int64))
+
+
+def lookup_reads(state: CacheState, set_idx: np.ndarray, tag: np.ndarray,
+                 backend: str = "auto") -> np.ndarray:
+    """Serve a read stream (program order) through the cache; returns the
+    per-request hit mask and updates ``state`` in place.
+
+    Only the *touched* sets' state rows are gathered, served, and
+    scattered back, so cost is bounded by (touched sets x max accesses
+    per set), independent of the total set count — a hot-line-skewed
+    stream cannot inflate the column matrices by the full geometry.
+
+    ``backend``: ``"host"`` (NumPy reference), ``"device"`` (jitted
+    scan), or ``"auto"`` (platform heuristic; host whenever tags exceed
+    the device path's int32 range).
+    """
+    if len(set_idx) == 0:
+        return np.zeros(0, dtype=bool)
+    uniq, inv = np.unique(set_idx, return_inverse=True)
+    tag_m, valid_m, slot = _columns(len(uniq), inv, tag)
+    tags_sub = state.tags[uniq]
+    age_sub = state.age[uniq]
+    if backend == "auto":
+        backend = "device" if _auto_prefers_device() else "host"
+        if backend == "device" and (int(tag.max()) >= 2**31
+                                    or int(tags_sub.max()) >= 2**31):
+            backend = "host"
+    if backend == "device":
+        hit_m, tags_sub, age_sub = _lookup_device(
+            tags_sub, age_sub, tag_m, valid_m)
+    elif backend == "host":
+        hit_m = _lookup_numpy(tags_sub, age_sub, tag_m, valid_m)
+    else:
+        raise ValueError(
+            f"cache backend must be auto|host|device, got {backend!r}")
+    state.tags[uniq] = tags_sub
+    state.age[uniq] = age_sub
+    return hit_m[inv, slot]
+
+
+def _prefetch_issue(line: np.ndarray, is_write: np.ndarray,
+                    issue: np.ndarray, degree: int
+                    ) -> Tuple[np.ndarray, int]:
+    """Stream-buffer issue shaping for one phase: within each run of
+    consecutive-line reads, request ``i`` of the run may be fetched when
+    demand reaches request ``i - degree`` (clamped to the run head, and
+    never later than its own demand), so its issue lower bound becomes
+    ``min(issue[i], issue[max(i - degree, head)])``.  Writes and
+    non-covered reads are untouched.  Returns ``(new_issue,
+    prefetch_hits)`` — a hit is any read covered by an ongoing run.
+    """
+    r = np.nonzero(~is_write)[0]
+    if len(r) == 0 or degree <= 0:
+        return issue, 0
+    ln = line[r]
+    start = np.empty(len(r), dtype=bool)
+    start[0] = True
+    np.not_equal(ln[1:], ln[:-1] + 1, out=start[1:])
+    run_id = np.cumsum(start) - 1
+    head = np.nonzero(start)[0][run_id]
+    idx = np.arange(len(r), dtype=np.int64)
+    src = np.maximum(idx - degree, head)
+    out = issue.copy()
+    out[r] = np.minimum(issue[r], issue[r[src]])
+    return out, int((idx > head).sum())
+
+
+def _filter_arrays(line, is_write, issue, cache: CacheConfig,
+                   state: Optional[CacheState], backend: str):
+    """One phase through the hierarchy: cache drop, then prefetch
+    shaping.  Returns ``(line, is_write, issue, CacheStats)``."""
+    stats = CacheStats()
+    if cache.sets and len(line):
+        r = np.nonzero(~is_write)[0]
+        if len(r):
+            lines_r = line[r]
+            hit = lookup_reads(state, lines_r % cache.sets,
+                               lines_r // cache.sets, backend)
+            stats.lookups = len(r)
+            stats.hits = int(hit.sum())
+            keep = np.ones(len(line), dtype=bool)
+            keep[r[hit]] = False
+            line, is_write, issue = line[keep], is_write[keep], issue[keep]
+    if cache.prefetch_degree and len(line):
+        issue, ph = _prefetch_issue(line, is_write, issue,
+                                    cache.prefetch_degree)
+        stats.prefetch_hits = ph
+    return line, is_write, issue, stats
+
+
+def filter_trace(trace: "Trace", cache: Optional[CacheConfig],
+                 state: Optional[CacheState] = None,
+                 backend: str = "auto"):
+    """Filter one phase trace; returns ``(trace, stats, state)`` (state
+    is created on first use and chained across calls — the incremental
+    counterpart of :func:`filter_program`)."""
+    from repro.core.trace import Trace
+    if cache is None or not cache.enabled:
+        return trace, CacheStats(), state
+    if state is None:
+        state = init_state(cache)
+    line, wr, iss, stats = _filter_arrays(
+        trace.line_addr, trace.is_write, trace.issue, cache, state,
+        backend)
+    return Trace(line, wr, iss), stats, state
+
+
+def filter_program(program: "SegmentedTrace",
+                   cache: Optional[CacheConfig],
+                   state: Optional[CacheState] = None,
+                   backend: str = "auto"):
+    """Filter a whole multi-phase program phase by phase with the cache
+    state carried across phase barriers (the cache persists; prefetch
+    runs never cross a barrier because issue cycles are phase-relative).
+    Bit-equivalent to :func:`filter_trace` per phase.  Returns
+    ``(program, stats, state)``; phases whose every request hits are
+    dropped, matching the backends' empty-phase handling."""
+    from repro.core.trace import SegmentedTrace
+    if cache is None or not cache.enabled or len(program) == 0:
+        return program, CacheStats(), state
+    if state is None:
+        state = init_state(cache)
+    stats = CacheStats()
+    phases = []
+    for p in range(program.n_phases):
+        s, e = int(program.offsets[p]), int(program.offsets[p + 1])
+        line, wr, iss, ps = _filter_arrays(
+            program.line_addr[s:e], program.is_write[s:e],
+            program.issue[s:e], cache, state, backend)
+        stats.merge(ps)
+        phases.append((program.names[p], line, wr, iss))
+    return SegmentedTrace.from_phases(phases), stats, state

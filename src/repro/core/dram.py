@@ -21,9 +21,12 @@ subsequent lines over channels first (the paper's example scheme).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Sequence, Tuple
+from typing import TYPE_CHECKING, Dict, Optional, Sequence, Tuple
 
 import numpy as np
+
+if TYPE_CHECKING:  # pragma: no cover — annotation only, no runtime dep
+    from repro.core.cache import CacheConfig
 
 CACHE_LINE_BYTES = 64
 
@@ -78,7 +81,10 @@ class DRAMOrganization:
 
 @dataclasses.dataclass(frozen=True)
 class DRAMConfig:
-    """A complete device model: standard, speed, organization, addressing."""
+    """A complete memory-system model: standard, speed, organization,
+    addressing — plus the optional on-chip hierarchy level in front of
+    the device (:class:`repro.core.cache.CacheConfig`): requests that hit
+    the cache are dropped before they reach the DRAM model."""
 
     name: str
     standard: str                     # DDR3 | DDR4 | HBM2 | HBM2E
@@ -87,6 +93,7 @@ class DRAMConfig:
     org: DRAMOrganization
     clock_ghz: float                  # memory-controller clock
     order: AddressOrder = DEFAULT_ORDER
+    cache: Optional["CacheConfig"] = None
 
     # ---- derived ----------------------------------------------------
     @property
@@ -125,13 +132,30 @@ class DRAMConfig:
         }
 
     @property
+    def effective_cache(self) -> Optional["CacheConfig"]:
+        """The on-chip level actually in force (a disabled config counts
+        as none) — what the DRAM backends consult."""
+        c = self.cache
+        return c if c is not None and c.enabled else None
+
+    @property
+    def structure_key(self):
+        """The DRAM structure alone — channels, organization, address
+        order.  This is all *trace emission* (model layouts, pacing,
+        static streams) depends on: models with equal structure keys and
+        clocks are shared across every cache and timing variant of a
+        memory point."""
+        return (self.channels, self.org, self.order)
+
+    @property
     def geometry_key(self):
         """Everything request *packing* depends on — channel/rank/bank/row
-        structure and the address-mapping order — and nothing it does not
+        structure, the address-mapping order, and the on-chip cache level
+        (cache hits are dropped before packing) — and nothing it does not
         (timing parameters are traced scan inputs, the clock only scales
         the report).  Devices with equal geometry keys share packed
         programs (see the sweep engine's pack cache)."""
-        return (self.channels, self.org, self.order)
+        return (self.channels, self.org, self.order, self.cache)
 
     def decode_spec(self):
         """Static (shift, mask) per component for the pow2 shift/mask

@@ -17,14 +17,18 @@ add-your-own-accelerator recipe.
 
 from repro.algorithms.common import Problem
 from repro.core.accel import PhaseStats, SimReport
+from repro.core.cache import CacheConfig, CacheStats
 from repro.sim.backends import BACKENDS, EventDRAM, make_backend
-from repro.sim.memory import (MEMORY_PRESETS, MemoryConfig, memory_name,
-                              resolve_memory, timing_variants)
+from repro.sim.memory import (CACHE_PRESETS, MEMORY_PRESETS, MemoryConfig,
+                              cache_name, cache_variants, memory_name,
+                              resolve_cache, resolve_memory,
+                              timing_variants)
 from repro.sim.reference_model import ReferenceConfig, ReferenceModel
 from repro.sim.registry import (AcceleratorSpec, get_accelerator,
                                 list_accelerators, register_accelerator)
 from repro.sim.session import SimSession, simulate
-from repro.sim.sweep import Sweeper, SweepCase, SweepRow, SweepStats, sweep
+from repro.sim.sweep import (SweepCase, SweepError, SweepRow, SweepStats,
+                             Sweeper, sweep)
 
 # importing session already registers the built-in specs
 from repro.sim.specs import AccuGraphSpec, HitGraphSpec, ReferenceSpec
@@ -36,8 +40,10 @@ __all__ = [
     "list_accelerators",
     "MemoryConfig", "MEMORY_PRESETS", "resolve_memory", "memory_name",
     "timing_variants",
+    "CacheConfig", "CacheStats", "CACHE_PRESETS", "resolve_cache",
+    "cache_name", "cache_variants",
     "BACKENDS", "EventDRAM", "make_backend",
-    "Sweeper", "SweepCase", "SweepRow", "SweepStats",
+    "Sweeper", "SweepCase", "SweepRow", "SweepStats", "SweepError",
     "ReferenceConfig", "ReferenceModel",
     "HitGraphSpec", "AccuGraphSpec", "ReferenceSpec",
 ]

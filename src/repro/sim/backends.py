@@ -32,6 +32,7 @@ from typing import Dict, List
 
 import numpy as np
 
+from repro.core import cache as cache_mod
 from repro.core.accel import PhaseStats, VectorizedDRAM
 from repro.core.dram import CACHE_LINE_BYTES, DRAMConfig
 from repro.core.timing import ChannelState, ROW_CONFLICT, ROW_HIT
@@ -39,7 +40,11 @@ from repro.core.trace import SegmentedTrace, Trace
 
 
 class EventDRAM:
-    """Event-driven multi-phase DRAM backend (python reference path)."""
+    """Event-driven multi-phase DRAM backend (python reference path).
+
+    Applies the same on-chip cache filter (``cfg.cache``) as the
+    vectorized backend — per phase, with the lookup state chained across
+    phases — so the two backends stay bit-equivalent under filtering."""
 
     def __init__(self, cfg: DRAMConfig):
         self.cfg = cfg
@@ -48,15 +53,34 @@ class EventDRAM:
                          banks_per_rank=cfg.org.banks)
             for _ in range(cfg.channels)
         ]
+        self.cache = cfg.effective_cache
+        self._cache_state = cache_mod.init_state(self.cache)
+        self.cache_stats = cache_mod.CacheStats()
         self.now = 0                     # memory-clock cycles
         self.phases: List[PhaseStats] = []
         self.total_requests = 0
         self.total_row_hits = 0
         self.total_row_conflicts = 0
 
+    @property
+    def cache_lookups(self) -> int:
+        return self.cache_stats.lookups
+
+    @property
+    def cache_hits(self) -> int:
+        return self.cache_stats.hits
+
+    @property
+    def prefetch_hits(self) -> int:
+        return self.cache_stats.prefetch_hits
+
     def run_phase(self, trace: Trace, name: str = "phase") -> int:
         """Serve one phase in program order per channel, starting at the
         current clock; returns its makespan (absolute memory cycle)."""
+        if self.cache is not None:
+            trace, cs, self._cache_state = cache_mod.filter_trace(
+                trace, self.cache, self._cache_state)
+            self.cache_stats.merge(cs)
         if len(trace) == 0:
             return self.now
         start = self.now

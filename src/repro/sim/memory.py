@@ -25,6 +25,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional, Union
 
+from repro.core.cache import CacheConfig, effective as _effective_cache
 from repro.core.dram import (CONTIGUOUS_ORDER, DEFAULT_ORDER, AddressOrder,
                              DRAMConfig, DRAMTiming, ddr3_1600k, ddr4_2400r,
                              hbm2, hbm2e)
@@ -48,6 +49,7 @@ class MemoryConfig:
     ranks: Optional[int] = None          # DDR only
     density: Optional[str] = None        # DDR4: "4Gb" | "8Gb"
     interleaving: str = "contiguous"     # "contiguous" | "line"
+    cache: Optional[CacheConfig] = None  # on-chip hierarchy level
 
     def resolve(self) -> DRAMConfig:
         if self.kind not in _KINDS:
@@ -67,7 +69,8 @@ class MemoryConfig:
         order: AddressOrder = (CONTIGUOUS_ORDER
                                if self.interleaving == "contiguous"
                                else DEFAULT_ORDER)
-        return dataclasses.replace(cfg, order=order)
+        return dataclasses.replace(cfg, order=order,
+                                   cache=_effective_cache(self.cache))
 
 
 MEMORY_PRESETS = {
@@ -173,3 +176,85 @@ def memory_name(memory: MemoryLike) -> str:
     if isinstance(memory, MemoryConfig):
         return memory.kind
     return memory.name
+
+
+# ---------------------------------------------------------------------------
+# On-chip cache-hierarchy selection (the third memory axis, next to the
+# device and timing axes): named presets + per-spec paper defaults.
+# ---------------------------------------------------------------------------
+
+#: named on-chip hierarchy levels for ``cache=`` / ``caches=`` axes.
+#: ``vertex-*`` are BRAM-class set-associative LRU vertex caches at FPGA
+#: on-chip budgets (the AccuGraph-style axis); ``prefetch-*`` are pure
+#: sequential stream prefetchers (the HitGraph-style axis); both compose
+#: in one ``CacheConfig``.  ``cache="default"`` instead selects the
+#: accelerator spec's declared paper hierarchy
+#: (``AcceleratorSpec.default_cache()``).
+CACHE_PRESETS = {
+    "none": CacheConfig(name="none"),
+    "vertex-64k": CacheConfig(lines=1024, ways=8, name="vertex-64k"),
+    "vertex-256k": CacheConfig(lines=4096, ways=8, name="vertex-256k"),
+    "vertex-1m": CacheConfig(lines=16384, ways=16, name="vertex-1m"),
+    "vertex-2m": CacheConfig(lines=32768, ways=16, name="vertex-2m"),
+    "direct-256k": CacheConfig(lines=4096, ways=1, name="direct-256k"),
+    "prefetch-4": CacheConfig(prefetch_degree=4, name="prefetch-4"),
+    "prefetch-8": CacheConfig(prefetch_degree=8, name="prefetch-8"),
+    "vertex-1m+prefetch": CacheConfig(lines=16384, ways=16,
+                                      prefetch_degree=8,
+                                      name="vertex-1m+prefetch"),
+}
+
+CacheLike = Union[None, str, CacheConfig]
+
+
+def resolve_cache(cache: CacheLike, spec=None) -> Optional[CacheConfig]:
+    """Coerce a cache selector to a :class:`CacheConfig` (or ``None`` for
+    "leave the memory point's cache as it is").
+
+    ``"default"`` picks ``spec.default_cache()`` — the accelerator's
+    declared paper hierarchy (AccuGraph's vertex BRAM, HitGraph's stream
+    prefetch); a disabled config (``"none"`` / ``CacheConfig()``)
+    explicitly strips any cache the memory point carries.
+    """
+    if cache is None:
+        return None
+    if isinstance(cache, CacheConfig):
+        return cache
+    if isinstance(cache, str):
+        if cache == "default":
+            if spec is None:
+                raise ValueError(
+                    'cache="default" needs an accelerator spec to read '
+                    "the paper hierarchy from")
+            return spec.default_cache() or CacheConfig(name="none")
+        try:
+            return CACHE_PRESETS[cache.lower()]
+        except KeyError:
+            raise KeyError(
+                f"unknown cache preset {cache!r}; available: "
+                f"{sorted(CACHE_PRESETS)} or 'default'") from None
+    raise TypeError(
+        f"cache must be None, a preset name, 'default', or a "
+        f"CacheConfig; got {type(cache).__name__}")
+
+
+def cache_name(cache: CacheLike) -> str:
+    """Stable display name for sweep rows."""
+    if cache is None:
+        return "none"
+    if isinstance(cache, str):
+        return cache
+    return cache.display_name()
+
+
+def cache_variants(kinds=("none", "vertex-64k", "vertex-256k",
+                          "vertex-1m")):
+    """A cache-size ladder for sweep ``caches=`` axes, by preset name
+    (the hierarchy-layer analogue of :func:`timing_variants`): returns
+    one ``CacheConfig`` per kind (``"none"``/unknown-free; ``"default"``
+    is per-accelerator and is passed through as the string)."""
+    out = []
+    for kind in kinds:
+        out.append(kind if kind == "default"
+                   else resolve_cache(kind))
+    return out

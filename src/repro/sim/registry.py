@@ -47,9 +47,12 @@ class AcceleratorSpec:
 
     # -- config ---------------------------------------------------------
     def make_config(self, config=None, memory: Optional[DRAMConfig] = None,
-                    **overrides):
+                    cache=None, **overrides):
         """Resolve the effective config: defaults <- config <- overrides
-        <- memory (a resolved :class:`DRAMConfig` replaces ``dram``)."""
+        <- memory (a resolved :class:`DRAMConfig` replaces ``dram``)
+        <- cache (a resolved :class:`~repro.core.cache.CacheConfig`
+        replaces the memory point's on-chip hierarchy level; a disabled
+        config strips it, ``None`` leaves it untouched)."""
         cfg = config if config is not None else self.config_cls()
         if not isinstance(cfg, self.config_cls):
             raise TypeError(
@@ -59,7 +62,20 @@ class AcceleratorSpec:
             cfg = dataclasses.replace(cfg, **overrides)
         if memory is not None:
             cfg = dataclasses.replace(cfg, dram=memory)
+        if cache is not None:
+            from repro.core.cache import effective
+            dram = (cfg.dram_config() if hasattr(cfg, "dram_config")
+                    else cfg.dram)
+            cfg = dataclasses.replace(cfg, dram=dataclasses.replace(
+                dram, cache=effective(cache)))
         return cfg
+
+    def default_cache(self):
+        """The accelerator's paper-accurate on-chip hierarchy (selected
+        with ``cache="default"``); ``None`` when the spec declares none.
+        The baseline pipeline stays cache-free — defaults are declared,
+        not silently applied, so no-cache results match the seed."""
+        return None
 
     def variants(self) -> Dict[str, Dict[str, Any]]:
         """Named optimization variants as config-field overrides."""

@@ -30,9 +30,11 @@ from concurrent.futures import Future
 from typing import Dict, Optional
 
 from repro.algorithms.common import Problem, RunResult
+from repro.core import cache as cache_mod
 from repro.core.accel import SimReport, pack_program_auto
 from repro.graphs.formats import Graph
-from repro.sim.memory import MemoryLike, resolve_memory
+from repro.sim.memory import (CacheLike, MemoryLike, resolve_cache,
+                              resolve_memory)
 from repro.sim.registry import get_accelerator
 
 # built-in specs register on import
@@ -43,17 +45,24 @@ def _coerce_problem(problem) -> Problem:
     return problem if isinstance(problem, Problem) else Problem(problem)
 
 
-def _geometry_cfg_key(spec_name: str, config):
+def _dram_cfg_key(spec_name: str, config, include_cache: bool):
     """Cache key for state that depends on the config and the DRAM
     *geometry + clock* but not its timing: the config with ``dram``
-    nulled, plus the resolved device's geometry key and clock.  ``None``
-    when the config has no pluggable DRAM or is unhashable."""
+    nulled, plus the resolved device's geometry/structure key and clock.
+    ``include_cache=True`` keys on ``geometry_key`` (what *packing*
+    depends on — the on-chip cache filters requests before packing);
+    ``False`` keys on ``structure_key`` (what *trace emission* depends
+    on — models are shared across every cache variant of a memory
+    point).  ``None`` when the config has no pluggable DRAM or is
+    unhashable."""
     if not hasattr(config, "dram_config"):
         return None
     try:
         dram = config.dram_config()
+        dram_key = (dram.geometry_key if include_cache
+                    else dram.structure_key)
         key = (spec_name, dataclasses.replace(config, dram=None),
-               dram.geometry_key, dram.clock_ghz)
+               dram_key, dram.clock_ghz)
         hash(key)
         return key
     except (TypeError, dataclasses.FrozenInstanceError):
@@ -113,9 +122,10 @@ class SimSession:
         """Graph-bound model cache: model construction (edge sorts,
         layout, static streams) is shared across problems/backends — and,
         since model state depends on the DRAM device only through its
-        geometry and clock, across every timing variant of one memory
-        point."""
-        key = _geometry_cfg_key(spec.name, config)
+        structure and clock, across every timing AND cache variant of
+        one memory point (the cache filter runs downstream of trace
+        emission)."""
+        key = _dram_cfg_key(spec.name, config, include_cache=False)
         if key is None:
             try:
                 key = (spec.name, config)
@@ -140,26 +150,35 @@ class SimSession:
     def packed_program_for(self, spec, problem: Problem, config, model,
                            run: RunResult, dram, root: int = 0,
                            fixed_iters: Optional[int] = None):
-        """Geometry-keyed packed-program cache.
+        """Geometry-keyed packed-program cache; returns ``(packed,
+        cache_stats)`` where ``cache_stats`` describes the on-chip
+        hierarchy filtering the program went through before packing
+        (``None`` when the device has no cache).
 
         The cached pack carries whatever timing vector it was first built
         with — callers must serve it with *their* case's traced timing
         (``core.accel.serve_packed(packed, timing=...)``), which is
         exactly what makes the cache sound: nothing in the packed arrays
-        depends on timing."""
-        cfg_key = _geometry_cfg_key(spec.name, config)
+        (nor the cache filter, which sees only addresses, program order,
+        and timing-independent issue bounds) depends on timing."""
+        def _build():
+            program = model.build_program(problem, run)
+            cs = None
+            if dram.cache is not None and dram.cache.enabled:
+                program, cs, _ = cache_mod.filter_program(
+                    program, dram.cache)
+            return pack_program_auto(program, dram), cs
+
+        cfg_key = _dram_cfg_key(spec.name, config, include_cache=True)
         if cfg_key is None:
             with self._lock:
                 self.pack_cache_misses += 1
-            return pack_program_auto(model.build_program(problem, run),
-                                     dram)
+            return _build()
         key = (cfg_key, spec.algorithm_key(
             self.graph, problem, config, root=root,
             fixed_iters=fixed_iters))
         packed = self._singleflight(
-            self._packs, key,
-            lambda: pack_program_auto(
-                model.build_program(problem, run), dram),
+            self._packs, key, _build,
             count=("pack_cache_misses", "pack_cache_hits"))
         with self._lock:
             while len(self._packs) > self.PACK_CACHE_CAP:
@@ -171,6 +190,7 @@ class SimSession:
 
     def run(self, problem, accelerator: str = "hitgraph", *,
             config=None, memory: MemoryLike = None,
+            cache: CacheLike = None,
             backend: Optional[str] = None, variant: Optional[str] = None,
             root: int = 0, fixed_iters: Optional[int] = None,
             **overrides) -> SimReport:
@@ -179,6 +199,11 @@ class SimSession:
         cfg = spec.make_config(config, memory=resolve_memory(memory),
                                **overrides)
         cfg = spec.apply_variant(cfg, variant)
+        cache_cfg = resolve_cache(cache, spec)
+        if cache_cfg is not None:
+            # after variants: a dram-overriding variant (e.g. AccuGraph
+            # "hbm") must not discard the requested on-chip cache
+            cfg = spec.make_config(cfg, cache=cache_cfg)
         run = self.algorithm_run(spec, problem, cfg, root, fixed_iters)
         return spec.simulate(self.graph, problem, cfg, backend=backend,
                              root=root, fixed_iters=fixed_iters, run=run,
@@ -187,6 +212,7 @@ class SimSession:
 
 def simulate(graph: Graph, problem, accelerator: str = "hitgraph", *,
              config=None, memory: MemoryLike = None,
+             cache: CacheLike = None,
              backend: Optional[str] = None, variant: Optional[str] = None,
              root: int = 0, fixed_iters: Optional[int] = None,
              **overrides) -> SimReport:
@@ -205,6 +231,13 @@ def simulate(graph: Graph, problem, accelerator: str = "hitgraph", *,
                   selector accepted by :func:`resolve_memory` — a preset
                   name (``"ddr3"``, ``"ddr4-8gb"``, ``"hbm2"``...), a
                   :class:`MemoryConfig`, or a raw :class:`DRAMConfig`.
+    cache:        on-chip hierarchy level in front of the DRAM device:
+                  ``None`` (no cache, unless the memory selector carries
+                  one), a :data:`~repro.sim.memory.CACHE_PRESETS` name
+                  (``"vertex-1m"``, ``"prefetch-8"``...), ``"default"``
+                  (the accelerator's declared paper hierarchy —
+                  AccuGraph's vertex BRAM, HitGraph's stream prefetch),
+                  or a :class:`~repro.core.cache.CacheConfig`.
     backend:      ``"vectorized"`` (JAX scan fast path), ``"event"``
                   (element-granularity reference; slow), or ``None`` for
                   the accelerator's preferred backend.
@@ -212,6 +245,6 @@ def simulate(graph: Graph, problem, accelerator: str = "hitgraph", *,
                   (``spec.variants()``), e.g. ``"prefetch_skip"``.
     """
     return SimSession(graph).run(
-        problem, accelerator, config=config, memory=memory,
+        problem, accelerator, config=config, memory=memory, cache=cache,
         backend=backend, variant=variant, root=root,
         fixed_iters=fixed_iters, **overrides)

@@ -15,6 +15,7 @@ from repro.algorithms import edge_centric, vertex_centric
 from repro.algorithms.common import Problem, RunResult
 from repro.core import accugraph, hitgraph
 from repro.core.accel import SimReport
+from repro.core.cache import CacheConfig
 from repro.graphs.formats import Graph
 from repro.sim.reference_model import ReferenceConfig, ReferenceModel
 from repro.sim.registry import (EVENT, AcceleratorSpec,
@@ -54,6 +55,17 @@ class HitGraphSpec(AcceleratorSpec):
             "no_filtering": {"update_filtering": False},
             "no_skipping": {"partition_skipping": False},
         }
+
+    def default_cache(self):
+        """HitGraph's on-chip story is *prefetching*, not caching: edge
+        lists, update queues, and value regions stream sequentially, and
+        the original system overlaps the next partition's fetches with
+        processing.  The declared hierarchy is a pure sequential stream
+        prefetcher (8 requests deep, one per pipeline) — it advances
+        issue lower bounds on consecutive-line read runs and never drops
+        or reorders requests, so enabling it can only shorten a run."""
+        return CacheConfig(prefetch_degree=8,
+                           name="hitgraph-stream-prefetch")
 
 
 @register_accelerator
@@ -99,6 +111,17 @@ class AccuGraphSpec(AcceleratorSpec):
             "hbm": {"dram": hbm2()},
         }
 
+    def default_cache(self):
+        """AccuGraph's defining feature is the vertex BRAM: values (and
+        re-streamed pointer/neighbor lines of small instances) live on
+        chip and accumulate asynchronously.  The declared hierarchy is a
+        BRAM-class 2 MiB 16-way LRU vertex cache (16 banks in the
+        original; 16 ways here) over the read streams — repeated
+        per-iteration value/pointer traffic hits on chip and never
+        reaches DRAM."""
+        return CacheConfig(lines=32768, ways=16,
+                           name="accugraph-vertex-bram")
+
 
 @register_accelerator
 class ReferenceSpec(AcceleratorSpec):
@@ -135,6 +158,13 @@ class ReferenceSpec(AcceleratorSpec):
                 f"accelerator 'reference' supports backends "
                 f"{self.backends}, got {backend!r}")
         cfg = config if config is not None else self.config_cls()
+        if cfg.dram_config().effective_cache is not None:
+            # explicit beats silent: the Engine replay has no filter
+            # hook, so accepting a cache would mislabel no-cache rows.
+            raise ValueError(
+                "the event-driven reference machine models its on-chip "
+                "behavior internally (everything fits BRAM); cache= is "
+                "not supported for accelerator 'reference'")
         if model is None:
             model = self.build_model(g, cfg)
         return model.simulate(problem, root=root, fixed_iters=fixed_iters,

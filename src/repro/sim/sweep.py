@@ -1,8 +1,8 @@
 """Batched sweep engine: one call, a grid of simulations, shared work
 deduplicated.
 
-``sweep()`` expands a (graph x problem x accelerator x memory x variant)
-grid — or takes an explicit case list — and returns one
+``sweep()`` expands a (graph x problem x accelerator x memory x cache x
+variant) grid — or takes an explicit case list — and returns one
 :class:`SweepRow` per grid point, in grid order.
 
 What is shared and what is not:
@@ -46,7 +46,8 @@ from repro.core.accel import (DevicePackedProgram, ProgramStats, SimReport,
                               finalize_program, finalize_program_device,
                               serve_packed)
 from repro.graphs.formats import Graph
-from repro.sim.memory import MemoryLike, memory_name, resolve_memory
+from repro.sim.memory import (CacheLike, MemoryLike, cache_name,
+                              memory_name, resolve_cache, resolve_memory)
 from repro.sim.registry import get_accelerator
 from repro.sim.session import SimSession, _coerce_problem
 
@@ -59,6 +60,7 @@ class SweepCase:
     problem: Problem
     accelerator: str = "hitgraph"
     memory: MemoryLike = None
+    cache: CacheLike = None
     variant: Optional[str] = None
     config: Any = None
     root: int = 0
@@ -67,6 +69,23 @@ class SweepCase:
     def __post_init__(self):
         object.__setattr__(self, "problem",
                            _coerce_problem(self.problem))
+
+
+class SweepError(RuntimeError):
+    """A sweep case failed; carries *which* case so grid failures are
+    attributable without replaying the sweep (worker errors used to
+    surface only at drain time as the bare underlying exception)."""
+
+    def __init__(self, index: int, case: SweepCase, cause: BaseException):
+        self.index = index
+        self.case = case
+        super().__init__(
+            f"sweep case #{index} (graph={case.graph.name!r}, "
+            f"problem={case.problem.value}, "
+            f"accelerator={case.accelerator!r}, "
+            f"memory={memory_name(case.memory)}, "
+            f"cache={cache_name(case.cache)}, "
+            f"variant={case.variant or 'baseline'}) failed: {cause!r}")
 
 
 @dataclasses.dataclass
@@ -86,6 +105,10 @@ class SweepRow:
         return memory_name(self.case.memory)
 
     @property
+    def cache(self) -> str:
+        return cache_name(self.case.cache)
+
+    @property
     def variant(self) -> str:
         return self.case.variant or "baseline"
 
@@ -94,9 +117,11 @@ class SweepRow:
         return {
             "graph": self.graph_name, "problem": self.case.problem.value,
             "accelerator": r.system, "memory": self.memory,
-            "variant": self.variant, "runtime_ms": r.runtime_ms,
+            "cache": self.cache, "variant": self.variant,
+            "runtime_ms": r.runtime_ms,
             "iterations": r.iterations, "reps": r.reps,
             "row_hit_rate": r.row_hit_rate,
+            "cache_hit_rate": r.cache_hit_rate,
             "total_requests": r.total_requests, "wall_s": self.wall_s,
         }
 
@@ -164,13 +189,27 @@ class Sweeper:
         t0 = time.perf_counter()
         report = sess.run(
             case.problem, case.accelerator, config=case.config,
-            memory=case.memory, backend=self.backend,
+            memory=case.memory, cache=case.cache, backend=self.backend,
             variant=case.variant, root=case.root,
             fixed_iters=case.fixed_iters)
         wall = time.perf_counter() - t0
         self.stats.cases += 1
         self._sync_stats()
         return SweepRow(case=case, report=report, wall_s=wall)
+
+    @staticmethod
+    def _guard(index: int, case: SweepCase, fn):
+        """Run one case-scoped step; failures re-raise as
+        :class:`SweepError` naming the case, so errors raised from
+        worker threads stay attributable when they surface at drain
+        time (and a poisoned case cannot wedge the executor — the
+        exception still propagates through the drained future)."""
+        try:
+            return fn()
+        except SweepError:
+            raise
+        except Exception as e:
+            raise SweepError(index, case, e) from e
 
     def run(self, cases: Sequence[SweepCase]) -> List[SweepRow]:
         """Run all cases; rows come back in input order, but execution is
@@ -187,21 +226,27 @@ class Sweeper:
                 key=lambda i: (cases[i].accelerator, id(cases[i].graph)))
             rows = [None] * len(cases)
             for i in order:
-                rows[i] = self.run_case(cases[i])
+                rows[i] = self._guard(i, cases[i],
+                                      lambda: self.run_case(cases[i]))
         self._sync_stats()
         return rows
 
     def _prepare_case(self, case: SweepCase):
-        """Build ``(model, run, packed, dram)`` for a batchable case, or
-        ``None`` if the accelerator has no program form (e.g. the
-        event-driven reference machine).  Thread-safe: every expensive
-        product goes through the session's single-flight caches, and the
-        packed program comes from the geometry-keyed pack cache."""
+        """Build ``(model, run, packed, cache_stats, dram)`` for a
+        batchable case, or ``None`` if the accelerator has no program
+        form (e.g. the event-driven reference machine).  Thread-safe:
+        every expensive product goes through the session's single-flight
+        caches, and the (cache-filtered) packed program comes from the
+        geometry-keyed pack cache."""
         sess = self._session(case.graph)
         spec = get_accelerator(case.accelerator)
         cfg = spec.make_config(case.config,
                                memory=resolve_memory(case.memory))
         cfg = spec.apply_variant(cfg, case.variant)
+        cache_cfg = resolve_cache(case.cache, spec)
+        if cache_cfg is not None:
+            # after variants, so dram-overriding variants keep the cache
+            cfg = spec.make_config(cfg, cache=cache_cfg)
         model = sess.model_for(spec, cfg)
         if not hasattr(model, "build_program"):
             return None
@@ -209,10 +254,10 @@ class Sweeper:
                                  case.fixed_iters)
         dram = (cfg.dram_config() if hasattr(cfg, "dram_config")
                 else model.dram)
-        packed = sess.packed_program_for(
+        packed, cstats = sess.packed_program_for(
             spec, case.problem, cfg, model, run, dram,
             root=case.root, fixed_iters=case.fixed_iters)
-        return model, run, packed, dram
+        return model, run, packed, cstats, dram
 
     def _run_pipelined(self, cases: Sequence[SweepCase]) -> List[SweepRow]:
         """Sharded per-case execution: ``workers`` threads prepare cases
@@ -227,7 +272,8 @@ class Sweeper:
 
         def prep(i):
             t0 = time.perf_counter()
-            out = self._prepare_case(cases[i])
+            out = self._guard(i, cases[i],
+                              lambda: self._prepare_case(cases[i]))
             return out, time.perf_counter() - t0
 
         with ThreadPoolExecutor(max_workers=self.workers) as pool:
@@ -249,16 +295,18 @@ class Sweeper:
                 submit_next()
                 case = cases[i]
                 if prepped is None:
-                    rows[i] = self.run_case(case)
+                    rows[i] = self._guard(i, case,
+                                          lambda: self.run_case(case))
                     continue
                 self.stats.cases += 1
-                model, run_, packed, dram = prepped
+                model, run_, packed, cstats, dram = prepped
                 t0 = time.perf_counter()
                 if packed is None:
                     stats = ProgramStats([], 0, 0, 0, 0)
                 else:
                     stats, _ = serve_packed(
                         packed, timing=vec.timing_params(dram.timing))
+                stats.attach_cache(cstats)
                 rows[i] = SweepRow(
                     case, model.make_report(case.problem, run_, stats),
                     prep_s + time.perf_counter() - t0)
@@ -269,7 +317,8 @@ class Sweeper:
 
         def prep(i):
             t0 = time.perf_counter()
-            out = self._prepare_case(cases[i])
+            out = self._guard(i, cases[i],
+                              lambda: self._prepare_case(cases[i]))
             return out, time.perf_counter() - t0
 
         with ThreadPoolExecutor(max_workers=self.workers) as pool:
@@ -277,18 +326,19 @@ class Sweeper:
         groups = defaultdict(list)
         for i, (prepped, prep_s) in enumerate(preps):
             if prepped is None:
-                rows[i] = self.run_case(cases[i])
+                rows[i] = self._guard(i, cases[i],
+                                      lambda: self.run_case(cases[i]))
                 continue
             self.stats.cases += 1
-            model, run_, packed, dram = prepped
+            model, run_, packed, cstats, dram = prepped
             sig = packed.signature if packed is not None else None
-            groups[sig].append((i, cases[i], model, run_, packed, dram,
-                                prep_s))
+            groups[sig].append((i, cases[i], model, run_, packed, cstats,
+                                dram, prep_s))
         def serve_group(items):
             t0 = time.perf_counter()
             packs = [it[4] for it in items]
             timings = np.stack(
-                [vec.timing_params(it[5].timing) for it in items])
+                [vec.timing_params(it[6].timing) for it in items])
             device = all(isinstance(p, DevicePackedProgram)
                          for p in packs)
             if len({id(p) for p in packs}) == 1:
@@ -308,18 +358,19 @@ class Sweeper:
                     packs[0].n_banks, packs[0].banks_per_rank,
                     as_numpy=not device)
             share = (time.perf_counter() - t0) / len(items)
-            for (i, case, model, run_, packed, _dram, wall), m in zip(
-                    items, range(len(items))):
+            for (i, case, model, run_, packed, cstats, _dram,
+                 wall), m in zip(items, range(len(items))):
                 if isinstance(packed, DevicePackedProgram):
                     stats = finalize_program_device(packed, fins[m])
                 else:
                     stats = finalize_program(packed, np.asarray(fins[m]))
+                stats.attach_cache(cstats)
                 rows[i] = SweepRow(case, model.make_report(
                     case.problem, run_, stats), wall + share)
 
         empties = groups.pop(None, [])
-        for i, case, model, run_, _p, _d, wall in empties:
-            stats = ProgramStats([], 0, 0, 0, 0)
+        for i, case, model, run_, _p, cstats, _d, wall in empties:
+            stats = ProgramStats([], 0, 0, 0, 0).attach_cache(cstats)
             rows[i] = SweepRow(case, model.make_report(
                 case.problem, run_, stats), wall)
         # independent signature groups serve concurrently (their scans
@@ -339,6 +390,7 @@ class Sweeper:
 def sweep(graphs: Iterable[Graph] = (), problems: Iterable = (),
           accelerators: Iterable[str] = ("hitgraph", "accugraph"),
           memories: Iterable[MemoryLike] = (None,),
+          caches: Iterable[CacheLike] = (None,),
           variants: Iterable[Optional[str]] = (None,),
           configs: Optional[Dict[str, Any]] = None,
           root: int = 0, fixed_iters: Optional[int] = None,
@@ -348,25 +400,31 @@ def sweep(graphs: Iterable[Graph] = (), problems: Iterable = (),
           sweeper: Optional[Sweeper] = None) -> List[SweepRow]:
     """Run a simulation grid; returns one row per grid point.
 
-    Either pass the axes (``graphs x problems x accelerators x memories x
-    variants``, expanded as an outer product in that order) or an explicit
-    ``cases`` list for irregular grids (e.g. a per-dataset config).
-    ``configs`` maps accelerator name -> config dataclass for the grid
-    form.  ``workers=N`` shards case preparation over N threads (results
-    identical for any N).  ``batch_memories=True`` stacks cases whose
-    packed programs share a compiled shape (typically the memory axis of
-    one accelerator/graph point) into single ``vmap``-ed fused-scan
-    dispatches.  Pass a :class:`Sweeper` to share its cache/stats across
-    calls or to inspect ``sweeper.stats`` afterwards.
+    Either pass the axes (``graphs x problems x accelerators x memories
+    x caches x variants``, expanded as an outer product in that order)
+    or an explicit ``cases`` list for irregular grids (e.g. a
+    per-dataset config).  ``configs`` maps accelerator name -> config
+    dataclass for the grid form.  ``caches`` sweeps the on-chip
+    hierarchy axis (``None`` / preset names / ``"default"`` /
+    :class:`~repro.core.cache.CacheConfig` — see
+    :func:`repro.sim.memory.cache_variants`).  ``workers=N`` shards case
+    preparation over N threads (results identical for any N; a failing
+    case raises :class:`SweepError` naming it).  ``batch_memories=True``
+    stacks cases whose packed programs share a compiled shape (typically
+    the memory axis of one accelerator/graph point) into single
+    ``vmap``-ed fused-scan dispatches.  Pass a :class:`Sweeper` to share
+    its cache/stats across calls or to inspect ``sweeper.stats``
+    afterwards.
     """
     if cases is None:
         configs = configs or {}
         cases = [
             SweepCase(graph=g, problem=p, accelerator=a, memory=m,
-                      variant=v, config=configs.get(a), root=root,
-                      fixed_iters=fixed_iters)
-            for g, p, a, m, v in itertools.product(
-                graphs, problems, accelerators, memories, variants)
+                      cache=c, variant=v, config=configs.get(a),
+                      root=root, fixed_iters=fixed_iters)
+            for g, p, a, m, c, v in itertools.product(
+                graphs, problems, accelerators, memories, caches,
+                variants)
         ]
     if sweeper is None:
         sweeper = Sweeper(backend=backend, batch_memories=batch_memories,

@@ -16,6 +16,13 @@ def pytest_configure(config):
         "markers", "slow: long-running tests (subprocess / multi-device)")
 
 
+def pytest_addoption(parser):
+    parser.addoption(
+        "--update-goldens", action="store_true", default=False,
+        help="rewrite the tests/goldens/*.json conformance fixtures from "
+             "the current pipeline's outputs (then commit the diff)")
+
+
 def _install_hypothesis_stub():
     try:
         import hypothesis  # noqa: F401

@@ -1,0 +1,263 @@
+"""Property and conformance suite for the on-chip cache-hierarchy layer.
+
+* **Lookup parity** (hypothesis): for random traces and cache
+  geometries, the NumPy reference filter and the jitted device lookup
+  are bit-identical to each other and to an element-wise LRU oracle —
+  hit masks AND the chained lookup state.
+* **Identity**: a size-0 cache (``CacheConfig()``) is the identity — the
+  filtered pipeline produces a ``SimReport`` equal to today's no-cache
+  pipeline, field for field.
+* **Monotonicity**: with the set count fixed, LRU hit counts are
+  nondecreasing in cache size (the stack-inclusion property; prefetch
+  off — the stream buffer is a separate structure and never changes
+  cache hits).
+* **Cross-backend parity**: ``EventDRAM`` and ``VectorizedDRAM`` agree
+  on total cycles and statistics under cache filtering for every
+  ``TIMING_PRESETS`` speed grade (extends the ``test_device_pack``
+  parity style to the hierarchy layer).
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.accel import VectorizedDRAM
+from repro.core.cache import (CacheConfig, _prefetch_issue, filter_program,
+                              filter_trace, init_state, lookup_reads)
+from repro.core.trace import SegmentedTrace
+from repro.graphs.generators import rmat
+from repro.sim import CacheStats, simulate
+from repro.sim.memory import TIMING_PRESETS, timing_variants
+
+
+def oracle_hits(set_idx, tag, sets, ways):
+    """Element-wise LRU oracle: per-set recency lists, most recent
+    first; hit iff the tag is resident, miss inserts and trims."""
+    lru = [[] for _ in range(sets)]
+    hits = np.zeros(len(set_idx), dtype=bool)
+    for i, (s, t) in enumerate(zip(set_idx, tag)):
+        entries = lru[s]
+        if t in entries:
+            entries.remove(t)
+            hits[i] = True
+        entries.insert(0, t)
+        del entries[ways:]
+    return hits
+
+
+def _random_stream(rng, n, span):
+    """Skewed random line stream (hot lines + uniform tail + short
+    sequential runs) — exercises hits, conflicts, and prefetch runs."""
+    hot = rng.integers(0, max(span // 16, 1), n)
+    cold = rng.integers(0, span, n)
+    lines = np.where(rng.random(n) < 0.5, hot, cold)
+    run_at = rng.random(n) < 0.3
+    lines[1:][run_at[1:]] = lines[:-1][run_at[1:]] + 1
+    return lines
+
+
+def _random_program(rng, n_phases=4, span=1 << 12, max_n=200,
+                    writes=True):
+    phases = []
+    for p in range(n_phases):
+        n = int(rng.integers(8, max_n))
+        lines = _random_stream(rng, n, span)
+        wr = (rng.random(n) < 0.2) if writes else np.zeros(n, bool)
+        phases.append((f"p{p}", lines, wr,
+                       np.sort(rng.integers(0, 4 * n, n))))
+    return SegmentedTrace.from_phases(phases)
+
+
+class TestLookupParity:
+    @settings(max_examples=25, deadline=None)
+    @given(seed=st.integers(0, 2**16), sets_log=st.integers(0, 6),
+           ways=st.sampled_from([1, 2, 3, 4, 8]),
+           n=st.integers(0, 300))
+    def test_host_device_oracle_identical(self, seed, sets_log, ways, n):
+        rng = np.random.default_rng(seed)
+        sets = 1 << sets_log
+        lines = _random_stream(rng, n, span=sets * ways * 6)
+        set_idx, tag = lines % sets, lines // sets
+        cfg = CacheConfig(lines=sets * ways, ways=ways)
+        st_h, st_d = init_state(cfg), init_state(cfg)
+        hit_h = lookup_reads(st_h, set_idx, tag, backend="host")
+        hit_d = lookup_reads(st_d, set_idx, tag, backend="device")
+        hit_o = oracle_hits(set_idx, tag, sets, ways)
+        assert np.array_equal(hit_h, hit_o)
+        assert np.array_equal(hit_d, hit_o)
+        # chained state must agree too (it feeds the next phase/program)
+        assert np.array_equal(st_h.tags, st_d.tags)
+        assert np.array_equal(st_h.age, st_d.age)
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 2**16))
+    def test_filter_program_matches_per_phase_filter(self, seed):
+        """Whole-program filtering == per-phase filtering with chained
+        state (the ``run_program`` / ``run_phase`` conformance)."""
+        rng = np.random.default_rng(seed)
+        prog = _random_program(rng)
+        cache = CacheConfig(lines=64, ways=4, prefetch_degree=3)
+        whole, ws, _ = filter_program(prog, cache)
+        state = None
+        stats = CacheStats()
+        parts = []
+        for p in range(prog.n_phases):
+            tr, cs, state = filter_trace(prog.phase(p), cache, state)
+            stats.merge(cs)
+            parts.append((prog.names[p], tr))
+        inc = SegmentedTrace.from_phases(parts)
+        assert whole.names == inc.names
+        assert np.array_equal(whole.line_addr, inc.line_addr)
+        assert np.array_equal(whole.is_write, inc.is_write)
+        assert np.array_equal(whole.issue, inc.issue)
+        assert (ws.lookups, ws.hits, ws.prefetch_hits) == \
+            (stats.lookups, stats.hits, stats.prefetch_hits)
+
+
+class TestHierarchyProperties:
+    @settings(max_examples=15, deadline=None)
+    @given(seed=st.integers(0, 2**16),
+           sets=st.sampled_from([1, 4, 16]))
+    def test_hits_monotone_in_cache_size(self, seed, sets):
+        """LRU inclusion: with the set count fixed, growing the cache
+        (more ways) never loses a hit."""
+        rng = np.random.default_rng(seed)
+        lines = _random_stream(rng, 400, span=sets * 64)
+        set_idx, tag = lines % sets, lines // sets
+        hits = []
+        for ways in (1, 2, 4, 8, 16):
+            state = init_state(CacheConfig(lines=sets * ways, ways=ways))
+            hits.append(int(lookup_reads(
+                state, set_idx, tag, backend="host").sum()))
+        assert hits == sorted(hits)
+
+    @settings(max_examples=15, deadline=None)
+    @given(seed=st.integers(0, 2**16), degree=st.integers(1, 8))
+    def test_prefetch_never_delays(self, seed, degree):
+        """Stream-buffer shaping only moves issue lower bounds earlier,
+        leaves addresses/order/writes untouched, and is the identity at
+        degree 0."""
+        rng = np.random.default_rng(seed)
+        n = 300
+        lines = _random_stream(rng, n, span=1 << 10)
+        wr = rng.random(n) < 0.3
+        issue = np.sort(rng.integers(0, 4 * n, n))
+        out, hits = _prefetch_issue(lines, wr, issue, degree)
+        assert np.all(out <= issue)
+        assert np.array_equal(out[wr], issue[wr])
+        # every advanced issue belongs to a covered read
+        assert hits >= int(np.sum(out < issue))
+        same, zero_hits = _prefetch_issue(lines, wr, issue, 0)
+        assert np.array_equal(same, issue) and zero_hits == 0
+
+    def test_size_zero_cache_is_identity(self):
+        """A disabled CacheConfig leaves the program object untouched
+        and the full pipeline bit-identical to no cache at all."""
+        rng = np.random.default_rng(7)
+        prog = _random_program(rng)
+        out, stats, _ = filter_program(prog, CacheConfig())
+        assert out is prog
+        assert (stats.lookups, stats.hits, stats.prefetch_hits) == (0, 0, 0)
+        g = rmat(8, 5, seed=17).undirected_view()
+        for accel in ("hitgraph", "accugraph"):
+            base = simulate(g, "wcc", accelerator=accel,
+                            partition_elements=64)
+            disabled = simulate(g, "wcc", accelerator=accel,
+                                partition_elements=64,
+                                cache=CacheConfig())
+            named_off = simulate(g, "wcc", accelerator=accel,
+                                 partition_elements=64, cache="none")
+            assert dataclasses.astuple(base) == \
+                dataclasses.astuple(disabled), accel
+            assert dataclasses.astuple(base) == \
+                dataclasses.astuple(named_off), accel
+
+    def test_invalid_geometry_rejected(self):
+        with pytest.raises(ValueError):
+            CacheConfig(lines=10, ways=4)       # not evenly divisible
+        with pytest.raises(ValueError):
+            CacheConfig(lines=-1)
+        with pytest.raises(ValueError):
+            CacheConfig(ways=0)
+
+    def test_filter_backend_env_override(self, monkeypatch):
+        """``REPRO_CACHE_BACKEND`` flips the auto heuristic; both
+        choices produce identical SimReports."""
+        g = rmat(8, 4, seed=23).undirected_view()
+        reports = []
+        for backend in ("host", "device"):
+            monkeypatch.setenv("REPRO_CACHE_BACKEND", backend)
+            reports.append(simulate(
+                g, "wcc", accelerator="accugraph", partition_elements=64,
+                cache=CacheConfig(lines=256, ways=4, prefetch_degree=4)))
+        assert dataclasses.astuple(reports[0]) == \
+            dataclasses.astuple(reports[1])
+        assert reports[0].cache_hits > 0
+
+
+def _phase_tuples(stats_surface):
+    return [(p.name, p.requests, p.start_cycle, p.end_cycle, p.row_hits,
+             p.row_conflicts) for p in stats_surface.phases]
+
+
+class TestCrossBackendParity:
+    """EventDRAM vs VectorizedDRAM total-cycle agreement under cache
+    filtering, across every TIMING_PRESETS speed grade."""
+
+    CACHE = CacheConfig(lines=512, ways=4, prefetch_degree=4,
+                        name="parity-cache")
+
+    @pytest.mark.parametrize("kind", sorted(TIMING_PRESETS))
+    def test_event_matches_vectorized_under_cache(self, kind):
+        g = rmat(7, 5, seed=31).undirected_view()
+        mem = timing_variants("ddr4-8gb", kinds=(kind,))[0]
+        mem = dataclasses.replace(mem, cache=self.CACHE)
+        vec_r = simulate(g, "wcc", accelerator="accugraph",
+                         partition_elements=64, memory=mem)
+        ev_r = simulate(g, "wcc", accelerator="accugraph",
+                        partition_elements=64, memory=mem,
+                        backend="event")
+        assert vec_r.runtime_ns == ev_r.runtime_ns, kind
+        assert vec_r.total_requests == ev_r.total_requests
+        assert vec_r.row_hit_rate == ev_r.row_hit_rate
+        assert (vec_r.cache_lookups, vec_r.cache_hits,
+                vec_r.prefetch_hits) == \
+            (ev_r.cache_lookups, ev_r.cache_hits, ev_r.prefetch_hits)
+        assert vec_r.cache_hits > 0
+
+    def test_hitgraph_event_parity_with_prefetch(self):
+        g = rmat(7, 5, seed=37).undirected_view()
+        mem = dataclasses.replace(
+            timing_variants("ddr3", kinds=("ddr3-1333",))[0],
+            cache=CacheConfig(prefetch_degree=8))
+        vec_r = simulate(g, "wcc", accelerator="hitgraph",
+                         partition_elements=64, memory=mem)
+        ev_r = simulate(g, "wcc", accelerator="hitgraph",
+                        partition_elements=64, memory=mem,
+                        backend="event")
+        assert vec_r.runtime_ns == ev_r.runtime_ns
+        assert vec_r.prefetch_hits == ev_r.prefetch_hits > 0
+
+    def test_run_program_matches_run_phase_with_cache(self):
+        """The fused path filters the whole program at once; the
+        incremental path filters phase by phase with chained state —
+        both must land on identical phases and clocks."""
+        from repro.core.dram import PRESETS
+        cfg = dataclasses.replace(PRESETS["comparability"](),
+                                  cache=self.CACHE)
+        rng = np.random.default_rng(11)
+        prog = _random_program(rng, span=1 << 10)
+        fused = VectorizedDRAM(cfg)
+        fused.run_program(prog)
+        inc = VectorizedDRAM(cfg)
+        for p in range(prog.n_phases):
+            inc.run_phase(prog.phase(p), prog.names[p])
+        assert fused.now == inc.now
+        assert _phase_tuples(fused) == _phase_tuples(inc)
+        assert (fused.cache_lookups, fused.cache_hits,
+                fused.prefetch_hits) == \
+            (inc.cache_lookups, inc.cache_hits, inc.prefetch_hits)
+        assert fused.cache_hits > 0

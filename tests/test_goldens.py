@@ -1,0 +1,115 @@
+"""Golden-report conformance fixtures: a seed-parity oracle for the
+whole simulation pipeline.
+
+``tests/goldens/simreports.json`` holds compact digests of small-graph
+``SimReport``\\ s for every registered accelerator x problem x memory
+point (no cache — the baseline pipeline).  Future pipeline refactors
+get checked against these fixtures instead of ad-hoc A/B runs: if a
+change is meant to be bit-neutral, the goldens must not move.
+
+Regenerate intentionally with::
+
+    pytest tests/test_goldens.py --update-goldens
+
+then commit the diff (CI's goldens-drift step regenerates and fails if
+the committed fixtures are stale).
+"""
+
+import json
+from pathlib import Path
+
+import pytest
+
+from repro.graphs.generators import rmat
+from repro.sim import list_accelerators, simulate
+
+GOLDEN_PATH = Path(__file__).parent / "goldens" / "simreports.json"
+
+#: per-accelerator memory axes covering the paper's DDR3 / DDR4 / HBM
+#: devices (HitGraph's 4 PEs need >= 4 channels; the event-driven
+#: reference machine runs on its paper default only — it is the slow
+#: fidelity path, not a memory-exploration vehicle).
+MEMORIES = {
+    "hitgraph": ["ddr3", "hbm2"],
+    "accugraph": ["ddr4", "ddr4-8gb", "hbm2"],
+    "reference": [None],
+}
+
+#: config overrides making the small graphs exercise real partition
+#: structure (multiple blocks / partitions per graph).
+OVERRIDES = {
+    "hitgraph": {"partition_elements": 64},
+    "accugraph": {"partition_elements": 64},
+    "reference": {},
+}
+
+PROBLEMS = ("wcc", "bfs")
+
+
+def _graphs():
+    return {
+        "rmat7": rmat(7, 4, seed=101).undirected_view(),
+        "rmat8": rmat(8, 5, seed=102).undirected_view(),
+    }
+
+
+def _digest(r):
+    """Compact, fully deterministic SimReport digest: the scalar surface
+    plus a phase roll-up (names/cycles/kind counts) — enough to pin the
+    pipeline bit-for-bit without storing thousands of phase rows."""
+    return {
+        "system": r.system,
+        "problem": r.problem,
+        "runtime_ns": r.runtime_ns,
+        "iterations": r.iterations,
+        "edges": r.edges,
+        "vertices": r.vertices,
+        "total_requests": r.total_requests,
+        "total_bytes": r.total_bytes,
+        "row_hit_rate": r.row_hit_rate,
+        "n_phases": len(r.phases),
+        "phase_requests": sum(p.requests for p in r.phases),
+        "row_hits": sum(p.row_hits for p in r.phases),
+        "row_conflicts": sum(p.row_conflicts for p in r.phases),
+        "end_cycle": r.phases[-1].end_cycle if r.phases else 0,
+        "cache_hits": r.cache_hits,
+        "prefetch_hits": r.prefetch_hits,
+    }
+
+
+def _collect():
+    got = {}
+    for gname, g in _graphs().items():
+        for accel in list_accelerators():
+            mems = MEMORIES.get(accel, [None])
+            for mem in mems:
+                for prob in PROBLEMS:
+                    key = f"{gname}/{accel}/{mem or 'default'}/{prob}"
+                    r = simulate(g, prob, accelerator=accel, memory=mem,
+                                 **OVERRIDES.get(accel, {}))
+                    got[key] = _digest(r)
+    return got
+
+
+def test_simreport_goldens(request):
+    update = request.config.getoption("--update-goldens")
+    got = _collect()
+    if update:
+        GOLDEN_PATH.parent.mkdir(parents=True, exist_ok=True)
+        GOLDEN_PATH.write_text(
+            json.dumps(got, indent=1, sort_keys=True) + "\n")
+    if not GOLDEN_PATH.exists():
+        pytest.fail(
+            "golden fixtures missing; generate them with "
+            "`pytest tests/test_goldens.py --update-goldens` and commit "
+            "tests/goldens/simreports.json")
+    golden = json.loads(GOLDEN_PATH.read_text())
+    assert set(golden) == set(got), (
+        "golden grid drifted (accelerator/memory/problem axes changed); "
+        "regenerate with --update-goldens and review the diff")
+    mismatched = {k: (golden[k], got[k]) for k in sorted(got)
+                  if golden[k] != got[k]}
+    assert not mismatched, (
+        f"{len(mismatched)} golden reports drifted (first: "
+        f"{next(iter(mismatched.items()))}); if the pipeline change is "
+        f"intentional, regenerate with --update-goldens")

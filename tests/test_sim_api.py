@@ -11,7 +11,7 @@ from repro.core import accugraph, hitgraph
 from repro.core.dram import CONTIGUOUS_ORDER, DRAMConfig, ddr4_2400r
 from repro.graphs.generators import rmat
 from repro.sim import (AcceleratorSpec, MemoryConfig, SimSession,
-                       SweepCase, Sweeper, get_accelerator,
+                       SweepCase, SweepError, Sweeper, get_accelerator,
                        list_accelerators, register_accelerator,
                        resolve_memory, simulate, sweep)
 from repro.sim.registry import _REGISTRY
@@ -232,6 +232,129 @@ class TestSweep:
                                             "both"]
         base = rows[0].report.runtime_ns
         assert all(r.report.runtime_ns <= base * 1.01 for r in rows)
+
+
+class TestSweepErrors:
+    """Worker errors must surface as :class:`SweepError` naming the
+    failing case — not as a bare drain-time exception — and a poisoned
+    case must not wedge the sharded executor."""
+
+    def _cases(self, g):
+        good = SweepCase(graph=g, problem="wcc", accelerator="accugraph")
+        poisoned = SweepCase(graph=g, problem="wcc",
+                             accelerator="graphicionado")   # unregistered
+        return [good, poisoned, good]
+
+    @pytest.mark.parametrize("workers", [1, 2, 4])
+    def test_poisoned_case_raises_with_case_id(self, g_small, workers):
+        sw = Sweeper(workers=workers)
+        with pytest.raises(SweepError, match=r"case #1") as exc:
+            sw.run(self._cases(g_small))
+        assert exc.value.index == 1
+        assert exc.value.case.accelerator == "graphicionado"
+        assert "graphicionado" in str(exc.value)
+        assert isinstance(exc.value.__cause__, KeyError)
+        # the sweeper survives the failure: a clean grid still runs
+        rows = sw.run([SweepCase(graph=g_small, problem="wcc",
+                                 accelerator="accugraph")])
+        assert rows[0].report.runtime_ns > 0
+
+    def test_poisoned_case_in_batched_mode(self, g_small):
+        sw = Sweeper(batch_memories=True, workers=2)
+        with pytest.raises(SweepError, match=r"case #1"):
+            sw.run(self._cases(g_small))
+
+    def test_poisoned_case_event_backend(self, g_small):
+        """The sequential (non-vectorized-backend) path wraps too."""
+        sw = Sweeper(backend="event")
+        with pytest.raises(SweepError, match=r"case #1"):
+            sw.run(self._cases(g_small))
+
+
+class TestCacheAxis:
+    """The on-chip hierarchy axis through the facade and the sweep."""
+
+    def test_cache_preset_and_default(self, g_small):
+        base = simulate(g_small, "wcc", accelerator="accugraph")
+        bram = simulate(g_small, "wcc", accelerator="accugraph",
+                        cache="default")
+        assert bram.cache_hits > 0
+        assert bram.total_requests < base.total_requests
+        assert bram.runtime_ns < base.runtime_ns
+        assert 0 < bram.cache_hit_rate <= 1
+
+    def test_cache_survives_dram_overriding_variant(self, g_small):
+        """AccuGraph's "hbm" variant replaces the whole DRAM device; the
+        requested on-chip cache must still apply (it is attached after
+        variants)."""
+        r = simulate(g_small, "wcc", accelerator="accugraph",
+                     cache="default", variant="hbm")
+        assert r.cache_hits > 0
+        no_cache = simulate(g_small, "wcc", accelerator="accugraph",
+                            variant="hbm")
+        assert r.total_requests < no_cache.total_requests
+
+    def test_same_geometry_cache_names_share_packs(self, g_small):
+        """CacheConfig names are display-only: identically-shaped caches
+        under different names share geometry keys (and packs)."""
+        from repro.sim import CACHE_PRESETS, CacheConfig
+        a = CACHE_PRESETS["vertex-2m"]
+        b = CacheConfig(lines=a.lines, ways=a.ways, name="other-name")
+        assert a == b and hash(a) == hash(b)
+        sw = Sweeper()
+        sw.run([SweepCase(graph=g_small, problem="wcc",
+                          accelerator="accugraph", cache=c)
+                for c in (a, b)])
+        assert sw.stats.pack_cache_misses == 1
+        assert sw.stats.pack_cache_hits == 1
+
+    def test_unknown_cache_preset(self, g_small):
+        with pytest.raises(KeyError, match="unknown cache preset"):
+            simulate(g_small, "wcc", accelerator="accugraph",
+                     cache="l4-cache")
+
+    def test_reference_rejects_cache(self, g_small):
+        """The event-driven reference machine has no filter hook —
+        a cache selection errors instead of silently doing nothing."""
+        with pytest.raises(ValueError, match="cache= is not supported"):
+            simulate(g_small, "wcc", accelerator="reference",
+                     cache="vertex-1m")
+        # disabled selections still pass through
+        r = simulate(g_small, "wcc", accelerator="reference",
+                     cache="none")
+        assert r.system == "reference"
+
+    def test_sweep_cache_axis_grid_order(self, g_small):
+        rows = sweep(graphs=[g_small], problems=["wcc"],
+                     accelerators=["accugraph"],
+                     caches=[None, "vertex-256k"])
+        assert [r.cache for r in rows] == ["none", "vertex-256k"]
+        assert rows[0].as_dict()["cache"] == "none"
+        assert rows[1].report.cache_hits > 0
+        # sweep path == facade path, cache included
+        solo = simulate(g_small, "wcc", accelerator="accugraph",
+                        cache="vertex-256k")
+        assert rows[1].report.runtime_ns == solo.runtime_ns
+        assert rows[1].report.cache_hits == solo.cache_hits
+
+    def test_models_shared_across_cache_variants(self, g_small):
+        """Trace emission does not depend on the cache: one model serves
+        every cache variant of a memory point (packs stay per-cache —
+        the geometry key gained the cache dimension)."""
+        sess = SimSession(g_small)
+        sess.run("wcc", "accugraph")
+        sess.run("wcc", "accugraph", cache="vertex-256k")
+        sess.run("wcc", "accugraph", cache="default")
+        assert len(sess._models) == 1
+        sw = Sweeper(workers=2)
+        cases = [SweepCase(graph=g_small, problem="wcc",
+                           accelerator="accugraph", cache=c)
+                 for c in (None, "vertex-256k", "default")]
+        sw.run(cases)
+        assert sw.stats.pack_cache_misses == 3  # one pack per cache point
+        sw.run(cases)                           # warm pass: all hits
+        assert sw.stats.pack_cache_misses == 3
+        assert sw.stats.pack_cache_hits == 3
 
 
 class TestSession:
