@@ -1,0 +1,131 @@
+"""CI benchmark regression gate for the sweep-throughput trajectory.
+
+``benchmarks/run.py --only sweep`` appends one row (date, scale,
+``<variant>_cases_per_sec``) to ``BENCH_sweep.json``; this script
+compares the row the current run just appended against the **last
+committed** row with a comparable configuration (same ``scale`` and
+``workers`` — cross-scale comparisons are meaningless) and fails if a
+tracked figure dropped more than ``--threshold`` (default 25%).
+
+Usage (CI)::
+
+    git show HEAD:BENCH_sweep.json > committed_sweep.json
+    python benchmarks/run.py --only sweep --scale 0.002 ...
+    python benchmarks/check_regression.py \
+        --current BENCH_sweep.json --baseline committed_sweep.json \
+        --trend-out sweep_trend.json
+
+No comparable committed row (first run at a new scale, empty history)
+passes with a note — the gate guards *regressions*, it does not block
+new configurations.  ``--trend-out`` writes the full history plus the
+verdict as a JSON artifact for the trend upload.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+#: the gated figures (the issue-tracked warm + batched throughputs);
+#: other per-variant figures are reported but not gated.
+GATED_KEYS = ("warm_cases_per_sec", "batched_timing_cases_per_sec")
+
+
+def load_rows(path: Path):
+    if not path.exists():
+        return []
+    try:
+        rows = json.loads(path.read_text())
+    except json.JSONDecodeError:
+        return []
+    return rows if isinstance(rows, list) else []
+
+
+def comparable(row: dict, ref: dict) -> bool:
+    # host: wall-clock throughput only compares within one machine
+    # class (REPRO_BENCH_HOST tag; CI rows vs dev-laptop rows differ by
+    # far more than any real regression).  Until a maintainer commits a
+    # CI-tagged row (take it from the sweep-trajectory artifact), the
+    # CI gate passes vacuously instead of flaking red.
+    return (row.get("scale") == ref.get("scale")
+            and row.get("workers") == ref.get("workers")
+            and row.get("host") == ref.get("host"))
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--current", default="BENCH_sweep.json",
+                    help="trajectory file containing the just-appended "
+                         "row (last entry is the run under test)")
+    ap.add_argument("--baseline", required=True,
+                    help="the committed trajectory (git show "
+                         "HEAD:BENCH_sweep.json)")
+    ap.add_argument("--threshold", type=float, default=0.25,
+                    help="max allowed fractional drop (0.25 = 25%%)")
+    ap.add_argument("--trend-out", default=None,
+                    help="write history + verdict JSON here (artifact)")
+    args = ap.parse_args(argv)
+
+    current_rows = load_rows(Path(args.current))
+    if not current_rows:
+        print(f"::error::{args.current} is empty — did the sweep "
+              "benchmark run?")
+        return 1
+    row = current_rows[-1]
+
+    baseline_rows = load_rows(Path(args.baseline))
+    refs = [r for r in baseline_rows if comparable(row, r)]
+    verdict = {"row": row, "gated": {}, "ok": True,
+               "baseline_rows": len(baseline_rows)}
+
+    if not refs:
+        print(f"no comparable committed row (scale={row.get('scale')}, "
+              f"workers={row.get('workers')}, "
+              f"host={row.get('host')}) among "
+              f"{len(baseline_rows)} — gate passes vacuously; commit "
+              "this run's row (see the sweep-trajectory artifact) to "
+              "arm the gate for this configuration")
+        verdict["note"] = "no comparable committed row"
+    else:
+        ref = refs[-1]
+        verdict["ref"] = ref
+        for key in GATED_KEYS:
+            got, want = row.get(key), ref.get(key)
+            if got is None or want is None:
+                continue
+            floor = want * (1.0 - args.threshold)
+            ok = got >= floor
+            verdict["gated"][key] = {
+                "current": got, "committed": want,
+                "floor": round(floor, 3), "ok": ok,
+            }
+            status = "ok" if ok else "REGRESSED"
+            print(f"{key}: {got:.2f} vs committed {want:.2f} "
+                  f"(floor {floor:.2f}) -> {status}")
+            if not ok:
+                verdict["ok"] = False
+                print(f"::error::sweep throughput regression: {key} "
+                      f"dropped {100 * (1 - got / want):.1f}% "
+                      f"(> {args.threshold:.0%} allowed) vs the last "
+                      f"committed row")
+        if not verdict["gated"]:
+            # a comparable row exists but nothing was gated: the
+            # trajectory schema drifted (renamed keys?) — fail loudly
+            # rather than silently disarming the gate forever
+            verdict["ok"] = False
+            print(f"::error::comparable committed row found but none "
+                  f"of the gated keys {GATED_KEYS} are present in "
+                  "both rows — the trajectory schema drifted; update "
+                  "GATED_KEYS or fix append_sweep_trajectory")
+
+    if args.trend_out:
+        Path(args.trend_out).write_text(json.dumps(
+            {"history": current_rows, "verdict": verdict}, indent=1)
+            + "\n")
+    return 0 if verdict["ok"] else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -2,11 +2,15 @@
 
 Graph stand-ins are cached twice over: an in-process ``lru_cache`` (one
 instantiation per (abbr, scale, seed) however many benchmark sections ask
-for it) backed by a seeded on-disk ``.npz`` cache under
+for it) backed by the content-addressed corpus store
+(:class:`repro.graphs.corpus.GraphStore`) rooted at
 ``benchmarks/.graph_cache/`` — so repeated benchmark *invocations* (CI
 smoke steps, warm-path timing reruns) skip the pure-NumPy RMAT/road/
-degree-matched generation entirely.  The disk key includes the seed and a
-format version; delete the directory to regenerate.
+degree-matched generation entirely.  Store keys carry the full
+(abbr, scale, seed) parameter set plus the corpus format version, so a
+parameter change or a ``CORPUS_CACHE_VERSION`` bump can never serve a
+stale graph (the old ad-hoc ``.npz`` path was silent and unversioned on
+reads).  Set ``REPRO_GRAPH_CACHE=0`` to disable the disk layer.
 """
 
 from __future__ import annotations
@@ -17,46 +21,19 @@ import os
 from pathlib import Path
 from typing import Dict, Optional
 
-import numpy as np
-
 from repro.algorithms.common import Problem
 from repro.core import accugraph, hitgraph
 from repro.core.dram import ddr4_2400r
 from repro.core.hitgraph import CONTIGUOUS_ORDER
+from repro.graphs.corpus import GraphStore
 from repro.graphs.datasets import TABLE1, instantiate
-from repro.graphs.formats import Graph
 
 # default benchmark scale: ~1% of the full datasets (seconds per sim)
 SCALE = 0.01
 
-#: seeded on-disk graph cache (set REPRO_GRAPH_CACHE=0 to disable)
+#: on-disk graph store (set REPRO_GRAPH_CACHE=0 to disable)
 GRAPH_CACHE_DIR = Path(__file__).resolve().parent / ".graph_cache"
-_GRAPH_CACHE_VERSION = 1
-
-
-def _cache_load(path: Path) -> Optional[Graph]:
-    try:
-        with np.load(path, allow_pickle=False) as z:
-            return Graph(
-                n=int(z["n"]), src=z["src"], dst=z["dst"],
-                weights=z["weights"] if "weights" in z else None,
-                directed=bool(z["directed"]), name=str(z["name"]))
-    except Exception:
-        return None                      # stale/corrupt -> regenerate
-
-
-def _cache_store(path: Path, g: Graph) -> None:
-    try:
-        path.parent.mkdir(parents=True, exist_ok=True)
-        tmp = path.with_suffix(".tmp.npz")
-        arrays = dict(n=g.n, src=g.src, dst=g.dst,
-                      directed=g.directed, name=g.name)
-        if g.weights is not None:
-            arrays["weights"] = g.weights
-        np.savez(tmp, **arrays)
-        os.replace(tmp, path)
-    except OSError:
-        pass                             # read-only checkout: stay in-RAM
+_STORE = GraphStore(GRAPH_CACHE_DIR)
 
 
 @functools.lru_cache(maxsize=32)
@@ -64,17 +41,14 @@ def _base_graph(abbr: str, scale: float, seed: int = 0):
     cap = scale
     if abbr == "tw":                    # 1.47B edges: scale down further
         cap = min(scale, 0.002)
-    use_disk = os.environ.get("REPRO_GRAPH_CACHE", "1") != "0"
-    path = (GRAPH_CACHE_DIR /
-            f"{abbr}_s{cap:g}_seed{seed}_v{_GRAPH_CACHE_VERSION}.npz")
-    if use_disk and path.exists():
-        g = _cache_load(path)
-        if g is not None:
-            return g
-    g = instantiate(abbr, scale=cap, seed=seed)
-    if use_disk:
-        _cache_store(path, g)
-    return g
+
+    def build():
+        return instantiate(abbr, scale=cap, seed=seed)
+
+    if os.environ.get("REPRO_GRAPH_CACHE", "1") == "0":
+        return build()
+    return _STORE.get(f"dataset;abbr={abbr};scale={cap:g};seed={seed}",
+                      build)
 
 
 @functools.lru_cache(maxsize=64)

@@ -1,0 +1,158 @@
+"""Corpus sweep: accelerators x problems x memories x graph scenarios.
+
+The paper's core claim is *comparability across workloads*: the same
+memory-access-pattern simulation ranks accelerators and memories on any
+graph.  This benchmark drives the corpus axis end to end — named presets
+(file-parsed real graph, R-MAT, Kronecker, power-law, road grid, Tab. 1
+stand-ins) resolved through the content-addressed store, swept through
+``sweep(graphs=[...])`` — and **asserts the paper-shaped ordering
+contract** on the way out:
+
+* on a skewed (power-law) graph, locality relabelings (``:degree``,
+  ``:bfs``) finish WCC in no more cycles and no more DRAM requests than
+  the locality-destroying ``:shuffle`` control (hub labels propagate in
+  one hop; scrambled labels do not),
+* vertex ordering measurably *changes* cycles on the high-diameter road
+  grid (the axis is load-bearing — reorderings shift conclusions, which
+  is exactly why the corpus must be swept, cf. arXiv:2104.07776),
+* AccuGraph's declared vertex BRAM keeps a nonzero on-chip hit rate
+  across every corpus scenario and never slows a run down.
+
+Emits one BENCH JSON row per grid point plus ``contract`` rows that CI
+spot-checks.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional
+
+from repro.graphs import corpus
+from repro.sim import Sweeper, sweep
+
+#: the swept corpus: >= 4 named presets including one file-parsed real
+#: graph (karate) and one Tab. 1 stand-in (lj-sample).
+CORPUS = ("karate", "rmat-16", "kron-social", "powerlaw-social",
+          "road-grid", "lj-sample")
+
+PROBLEMS = ("wcc", "pr")
+ACCELERATORS = ("hitgraph", "accugraph")
+MEMORIES = (None, "hbm2")
+
+#: the ordering-contract arms, swept as first-class graph selectors.
+ORDERINGS = ("powerlaw-social:degree", "powerlaw-social:bfs",
+             "powerlaw-social:shuffle", "road-grid:bfs",
+             "road-grid:shuffle")
+
+
+def run(scale: float = 0.01, workers: int = 2) -> List[Dict]:
+    rows: List[Dict] = []
+    sweeper = Sweeper(workers=workers)
+
+    # ---- the corpus grid ------------------------------------------------
+    t0 = time.perf_counter()
+    grid = sweep(graphs=CORPUS, problems=PROBLEMS,
+                 accelerators=ACCELERATORS, memories=MEMORIES,
+                 graph_scale=scale, fixed_iters=None, sweeper=sweeper)
+    grid_wall = time.perf_counter() - t0
+    for r in grid:
+        d = r.as_dict()
+        d["bench"] = "corpus"
+        rows.append(d)
+    n_graphs = len({r.case.graph.fingerprint for r in grid})
+    assert n_graphs == len(CORPUS), (
+        f"corpus collapsed: {n_graphs} distinct graphs for "
+        f"{len(CORPUS)} presets")
+
+    # ---- ordering contract (the paper-shaped direction) -----------------
+    # Floored at 1% scale: below a few hundred vertices the skew is too
+    # shallow for the asymptotic direction to dominate seed noise.
+    cscale = max(scale, 0.01)
+    orows = sweep(graphs=ORDERINGS, problems=("wcc",),
+                  accelerators=ACCELERATORS, graph_scale=cscale,
+                  sweeper=sweeper)
+
+    def pick(sel: str, accel: str):
+        g = corpus.resolve_graph(sel, scale=cscale)
+        return [r for r in orows
+                if r.case.graph.fingerprint == g.fingerprint
+                and r.case.accelerator == accel][0]
+
+    for accel in ACCELERATORS:
+        shuf = pick("powerlaw-social:shuffle", accel)
+        for arm in ("powerlaw-social:degree", "powerlaw-social:bfs"):
+            loc = pick(arm, accel)
+            # Locality orderings on a skewed graph: the hub gets the
+            # minimum label, WCC converges in <= the scrambled
+            # baseline's cycles and DRAM requests.  A regression here
+            # means the transforms (or the activity-dependent trace
+            # path) stopped responding to vertex order.
+            assert (loc.report.runtime_ms
+                    <= shuf.report.runtime_ms * 1.0001), (
+                accel, arm, loc.report.runtime_ms,
+                shuf.report.runtime_ms)
+            assert (loc.report.total_requests
+                    <= shuf.report.total_requests), (
+                accel, arm, loc.report.total_requests,
+                shuf.report.total_requests)
+            rows.append({
+                "bench": "corpus", "variant": "contract",
+                "contract": "skewed-ordering", "accelerator": accel,
+                "arm": arm,
+                "runtime_ms": loc.report.runtime_ms,
+                "shuffle_runtime_ms": shuf.report.runtime_ms,
+                "speedup": (shuf.report.runtime_ms
+                            / max(loc.report.runtime_ms, 1e-12)),
+            })
+        # Vertex order must *move* cycles on the high-diameter grid
+        # (either direction — the point is that ordering shifts
+        # conclusions, so a corpus sweep has to include it).
+        rb = pick("road-grid:bfs", accel)
+        rs = pick("road-grid:shuffle", accel)
+        delta = abs(rb.report.runtime_ms - rs.report.runtime_ms)
+        assert delta > 1e-9, (accel, rb.report.runtime_ms)
+        rows.append({
+            "bench": "corpus", "variant": "contract",
+            "contract": "road-ordering-sensitivity",
+            "accelerator": accel,
+            "bfs_runtime_ms": rb.report.runtime_ms,
+            "shuffle_runtime_ms": rs.report.runtime_ms,
+        })
+
+    # ---- on-chip hierarchy across the corpus ----------------------------
+    crows = sweep(graphs=CORPUS, problems=("wcc",),
+                  accelerators=("accugraph",), caches=(None, "default"),
+                  graph_scale=scale, sweeper=sweeper)
+    by_graph: Dict[str, Dict[Optional[str], object]] = {}
+    for r in crows:
+        by_graph.setdefault(r.graph_name, {})[r.cache] = r
+    for gname, arms in by_graph.items():
+        plain, bram = arms["none"], arms["default"]
+        assert bram.report.cache_lookups > 0, gname
+        assert bram.report.cache_hit_rate > 0, (
+            gname, bram.report.cache_hit_rate)
+        assert (bram.report.runtime_ms
+                <= plain.report.runtime_ms * 1.0001), (
+            gname, bram.report.runtime_ms, plain.report.runtime_ms)
+        rows.append({
+            "bench": "corpus", "variant": "contract",
+            "contract": "bram-corpus", "graph": gname,
+            "cache_hit_rate": bram.report.cache_hit_rate,
+            "runtime_ms": bram.report.runtime_ms,
+            "nocache_runtime_ms": plain.report.runtime_ms,
+        })
+
+    rows.append({
+        "bench": "corpus", "variant": "summary",
+        "graphs": len(CORPUS), "cases": sweeper.stats.cases,
+        "algo_runs": sweeper.stats.algo_runs,
+        "algo_cache_hits": sweeper.stats.algo_cache_hits,
+        "wall_s": grid_wall,
+        "cases_per_sec": len(grid) / grid_wall,
+    })
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(row)

@@ -16,6 +16,7 @@ from __future__ import annotations
 import argparse
 import datetime
 import json
+import os
 import sys
 import time
 from pathlib import Path
@@ -28,11 +29,16 @@ def append_sweep_trajectory(sweep_rows, scale: float,
                             path: Path = BENCH_SWEEP_PATH) -> dict:
     """Append one {date, scale, <variant>_cases_per_sec...} row to the
     append-style trajectory file (a JSON list; one entry per recorded
-    run)."""
+    run).  ``REPRO_BENCH_HOST`` (CI sets ``github-actions``) tags the
+    row with its machine class so the regression gate only ever
+    compares like-for-like hardware."""
     entry = {
         "date": datetime.date.today().isoformat(),
         "scale": scale,
     }
+    host = os.environ.get("REPRO_BENCH_HOST")
+    if host:
+        entry["host"] = host
     for r in sweep_rows:
         if r.get("bench") != "sweep":
             continue
@@ -56,15 +62,16 @@ def main() -> int:
     ap.add_argument("--scale", type=float, default=0.01)
     ap.add_argument("--only", default=None,
                     help="comma list: fig09,fig10,fig11,fig12,fig13,"
-                         "fig02,dram,kernels,sweep,cache")
+                         "fig02,dram,kernels,sweep,cache,corpus")
     ap.add_argument("--json-out", default=None)
     ap.add_argument("--no-trajectory", action="store_true",
                     help="skip appending the sweep row to BENCH_sweep.json")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
-    from benchmarks import (cache_hierarchy, dram_types, fig02_repro_error,
-                            fig09_hitgraph, fig10_accugraph, fig11_degree,
+    from benchmarks import (cache_hierarchy, corpus_sweep, dram_types,
+                            fig02_repro_error, fig09_hitgraph,
+                            fig10_accugraph, fig11_degree,
                             fig12_comparability, fig13_optimizations,
                             kernel_bench, sweep_throughput)
 
@@ -79,6 +86,7 @@ def main() -> int:
         "kernels": kernel_bench.run,
         "sweep": lambda: sweep_throughput.run(args.scale),
         "cache": lambda: cache_hierarchy.run(args.scale),
+        "corpus": lambda: corpus_sweep.run(args.scale),
     }
 
     all_rows = []

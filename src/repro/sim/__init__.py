@@ -18,6 +18,9 @@ add-your-own-accelerator recipe.
 from repro.algorithms.common import Problem
 from repro.core.accel import PhaseStats, SimReport
 from repro.core.cache import CacheConfig, CacheStats
+from repro.graphs.corpus import (GRAPH_PRESETS, GraphPreset, GraphStore,
+                                 bfs_reorder, degree_sort, graph_name,
+                                 graph_variants, resolve_graph)
 from repro.sim.backends import BACKENDS, EventDRAM, make_backend
 from repro.sim.memory import (CACHE_PRESETS, MEMORY_PRESETS, MemoryConfig,
                               cache_name, cache_variants, memory_name,
@@ -40,6 +43,8 @@ __all__ = [
     "list_accelerators",
     "MemoryConfig", "MEMORY_PRESETS", "resolve_memory", "memory_name",
     "timing_variants",
+    "GRAPH_PRESETS", "GraphPreset", "GraphStore", "resolve_graph",
+    "graph_variants", "graph_name", "degree_sort", "bfs_reorder",
     "CacheConfig", "CacheStats", "CACHE_PRESETS", "resolve_cache",
     "cache_name", "cache_variants",
     "BACKENDS", "EventDRAM", "make_backend",

@@ -32,6 +32,7 @@ from typing import Dict, Optional
 from repro.algorithms.common import Problem, RunResult
 from repro.core import cache as cache_mod
 from repro.core.accel import SimReport, pack_program_auto
+from repro.graphs.corpus import GraphLike, resolve_graph
 from repro.graphs.formats import Graph
 from repro.sim.memory import (CacheLike, MemoryLike, resolve_cache,
                               resolve_memory)
@@ -84,8 +85,10 @@ class SimSession:
     #: normal GC, only reuse beyond the window re-packs.
     PACK_CACHE_CAP = 256
 
-    def __init__(self, graph: Graph):
-        self.graph = graph
+    def __init__(self, graph: GraphLike):
+        # corpus preset names resolve here, so a session can be opened
+        # directly on a scenario: ``SimSession("powerlaw-social")``
+        self.graph = resolve_graph(graph)
         self._lock = threading.Lock()
         self._runs: Dict[object, Future] = {}
         self._models: Dict[object, Future] = {}
@@ -210,7 +213,7 @@ class SimSession:
                              model=self.model_for(spec, cfg))
 
 
-def simulate(graph: Graph, problem, accelerator: str = "hitgraph", *,
+def simulate(graph: GraphLike, problem, accelerator: str = "hitgraph", *,
              config=None, memory: MemoryLike = None,
              cache: CacheLike = None,
              backend: Optional[str] = None, variant: Optional[str] = None,
@@ -220,7 +223,9 @@ def simulate(graph: Graph, problem, accelerator: str = "hitgraph", *,
 
     Parameters
     ----------
-    graph:        the :class:`Graph` instance.
+    graph:        a :class:`Graph` instance or a corpus preset name
+                  (``"karate"``, ``"powerlaw-social:degree"``, ... —
+                  see :data:`repro.graphs.corpus.GRAPH_PRESETS`).
     problem:      a :class:`Problem` or its string value (``"wcc"``...).
     accelerator:  registered name (see :func:`list_accelerators`) or an
                   :class:`AcceleratorSpec` instance.

@@ -45,6 +45,7 @@ from repro.core import vectorized as vec
 from repro.core.accel import (DevicePackedProgram, ProgramStats, SimReport,
                               finalize_program, finalize_program_device,
                               serve_packed)
+from repro.graphs.corpus import GraphLike, resolve_graph
 from repro.graphs.formats import Graph
 from repro.sim.memory import (CacheLike, MemoryLike, cache_name,
                               memory_name, resolve_cache, resolve_memory)
@@ -54,9 +55,17 @@ from repro.sim.session import SimSession, _coerce_problem
 
 @dataclasses.dataclass(frozen=True)
 class SweepCase:
-    """One grid point of a sweep."""
+    """One grid point of a sweep.
 
-    graph: Graph
+    ``graph`` accepts a :class:`Graph` or a corpus preset name
+    (``"karate"``, ``"powerlaw-social:degree"``, ... — see
+    :data:`repro.graphs.corpus.GRAPH_PRESETS`); names resolve at
+    construction through the memoized corpus resolver, so every case
+    naming one scenario shares a single graph object (and therefore one
+    per-graph session in the sweep engine).
+    """
+
+    graph: GraphLike
     problem: Problem
     accelerator: str = "hitgraph"
     memory: MemoryLike = None
@@ -65,10 +74,16 @@ class SweepCase:
     config: Any = None
     root: int = 0
     fixed_iters: Optional[int] = None
+    graph_scale: float = 1.0
+    graph_seed: int = 0
 
     def __post_init__(self):
         object.__setattr__(self, "problem",
                            _coerce_problem(self.problem))
+        object.__setattr__(
+            self, "graph",
+            resolve_graph(self.graph, scale=self.graph_scale,
+                          seed=self.graph_seed))
 
 
 class SweepError(RuntimeError):
@@ -164,11 +179,15 @@ class Sweeper:
 
     def _session(self, g: Graph) -> SimSession:
         # worker threads race here via _prepare_case; two sessions for
-        # one graph would silently fork the single-flight caches
+        # one graph would silently fork the single-flight caches.
+        # Keyed by content fingerprint (not id()) so independently
+        # resolved copies of one corpus scenario still share algorithm
+        # runs, models, and packed programs.
+        key = g.fingerprint
         with self._sessions_lock:
-            sess = self._sessions.get(id(g))
+            sess = self._sessions.get(key)
             if sess is None:
-                sess = self._sessions[id(g)] = SimSession(g)
+                sess = self._sessions[key] = SimSession(g)
             return sess
 
     def _sync_stats(self) -> None:
@@ -223,7 +242,7 @@ class Sweeper:
         else:
             order = sorted(
                 range(len(cases)),
-                key=lambda i: (cases[i].accelerator, id(cases[i].graph)))
+                key=lambda i: (cases[i].accelerator, cases[i].graph.fingerprint))
             rows = [None] * len(cases)
             for i in order:
                 rows[i] = self._guard(i, cases[i],
@@ -267,7 +286,7 @@ class Sweeper:
         path for any worker count."""
         order = sorted(
             range(len(cases)),
-            key=lambda i: (cases[i].accelerator, id(cases[i].graph)))
+            key=lambda i: (cases[i].accelerator, cases[i].graph.fingerprint))
         rows: List[Optional[SweepRow]] = [None] * len(cases)
 
         def prep(i):
@@ -387,7 +406,7 @@ class Sweeper:
         return rows
 
 
-def sweep(graphs: Iterable[Graph] = (), problems: Iterable = (),
+def sweep(graphs: Iterable[GraphLike] = (), problems: Iterable = (),
           accelerators: Iterable[str] = ("hitgraph", "accugraph"),
           memories: Iterable[MemoryLike] = (None,),
           caches: Iterable[CacheLike] = (None,),
@@ -397,13 +416,20 @@ def sweep(graphs: Iterable[Graph] = (), problems: Iterable = (),
           backend: Optional[str] = None,
           cases: Optional[Sequence[SweepCase]] = None,
           batch_memories: bool = False, workers: int = 1,
+          graph_scale: float = 1.0, graph_seed: int = 0,
           sweeper: Optional[Sweeper] = None) -> List[SweepRow]:
     """Run a simulation grid; returns one row per grid point.
 
     Either pass the axes (``graphs x problems x accelerators x memories
     x caches x variants``, expanded as an outer product in that order)
     or an explicit ``cases`` list for irregular grids (e.g. a
-    per-dataset config).  ``configs`` maps accelerator name -> config
+    per-dataset config).  ``graphs`` entries are :class:`Graph`
+    instances or corpus preset names (``"karate"``,
+    ``"powerlaw-social:degree"``, ... — see
+    :data:`~repro.graphs.corpus.GRAPH_PRESETS` and
+    :func:`~repro.graphs.corpus.graph_variants`); names are resolved
+    through the content-addressed corpus cache at ``graph_scale`` /
+    ``graph_seed``.  ``configs`` maps accelerator name -> config
     dataclass for the grid form.  ``caches`` sweeps the on-chip
     hierarchy axis (``None`` / preset names / ``"default"`` /
     :class:`~repro.core.cache.CacheConfig` — see
@@ -421,7 +447,8 @@ def sweep(graphs: Iterable[Graph] = (), problems: Iterable = (),
         cases = [
             SweepCase(graph=g, problem=p, accelerator=a, memory=m,
                       cache=c, variant=v, config=configs.get(a),
-                      root=root, fixed_iters=fixed_iters)
+                      root=root, fixed_iters=fixed_iters,
+                      graph_scale=graph_scale, graph_seed=graph_seed)
             for g, p, a, m, c, v in itertools.product(
                 graphs, problems, accelerators, memories, caches,
                 variants)

@@ -1,0 +1,432 @@
+"""Graph-corpus subsystem tests: parsers, the content-addressed binary
+store, ordering transforms, preset resolution, and the sweep axis.
+
+The load-bearing invariants:
+
+* malformed SNAP / MatrixMarket inputs raise :class:`GraphParseError`
+  naming the file and line — never a silently truncated graph;
+* a store round trip (write -> load) is bit-identical, including edge
+  order (partitioners sort stably by it, so order is semantic);
+* a :data:`CORPUS_CACHE_VERSION` bump orphans stale entries (both the
+  address and the header change);
+* ordering transforms are pure relabelings: the edge multiset is
+  preserved under the permutation (hypothesis property).
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.graphs import corpus, generators as gen
+from repro.graphs.corpus import (CORPUS_CACHE_VERSION, CorpusCacheError,
+                                 GRAPH_PRESETS, GraphStore,
+                                 load_graph_binary, save_graph_binary)
+from repro.graphs.formats import (Graph, GraphParseError,
+                                  load_matrix_market, load_snap_edgelist)
+
+# ---------------------------------------------------------------------------
+# SNAP edge-list parser
+# ---------------------------------------------------------------------------
+
+
+def _write(tmp_path, text, name="g.txt"):
+    p = tmp_path / name
+    p.write_text(text)
+    return p
+
+
+class TestSnapParser:
+    def test_parses_comments_and_edges(self, tmp_path):
+        p = _write(tmp_path, "# comment\n\n0 1\n1 2\n2 0\n")
+        g = load_snap_edgelist(p)
+        assert (g.n, g.m) == (3, 3)
+        assert g.weights is None and g.directed
+        assert list(g.src) == [0, 1, 2] and list(g.dst) == [1, 2, 0]
+
+    def test_weighted_column(self, tmp_path):
+        p = _write(tmp_path, "0 1 2.5\n1 0 1.0\n")
+        g = load_snap_edgelist(p)
+        assert g.weights is not None
+        assert list(g.weights) == [2.5, 1.0]
+
+    def test_non_integer_id_names_line(self, tmp_path):
+        p = _write(tmp_path, "0 1\nx 2\n")
+        with pytest.raises(GraphParseError, match=r"g\.txt:2.*not an "
+                                                  r"integer"):
+            load_snap_edgelist(p)
+
+    def test_negative_id(self, tmp_path):
+        p = _write(tmp_path, "0 1\n-3 2\n")
+        with pytest.raises(GraphParseError, match="negative"):
+            load_snap_edgelist(p)
+
+    def test_wrong_column_count(self, tmp_path):
+        p = _write(tmp_path, "0 1\n1 2 3 4\n")
+        with pytest.raises(GraphParseError, match="columns"):
+            load_snap_edgelist(p)
+
+    def test_inconsistent_weights(self, tmp_path):
+        with pytest.raises(GraphParseError, match="inconsistent"):
+            load_snap_edgelist(_write(tmp_path, "0 1 2.0\n1 2\n"))
+        with pytest.raises(GraphParseError, match="inconsistent"):
+            load_snap_edgelist(_write(tmp_path, "0 1\n1 2 2.0\n"))
+
+    def test_empty_file(self, tmp_path):
+        p = _write(tmp_path, "# only comments\n")
+        with pytest.raises(GraphParseError, match="no edges"):
+            load_snap_edgelist(p)
+
+    def test_bad_weight_value(self, tmp_path):
+        p = _write(tmp_path, "0 1 abc\n")
+        with pytest.raises(GraphParseError, match="not a number"):
+            load_snap_edgelist(p)
+
+
+# ---------------------------------------------------------------------------
+# MatrixMarket parser
+# ---------------------------------------------------------------------------
+
+MM_HEADER = "%%MatrixMarket matrix coordinate real general\n"
+
+
+class TestMatrixMarketParser:
+    def test_general_real(self, tmp_path):
+        p = _write(tmp_path, MM_HEADER + "% c\n3 3 2\n1 2 1.5\n3 1 2.0\n",
+                   "m.mtx")
+        g = load_matrix_market(p)
+        assert (g.n, g.m) == (3, 2)
+        # 1-based -> 0-based
+        assert list(g.src) == [0, 2] and list(g.dst) == [1, 0]
+        assert list(g.weights) == [1.5, 2.0]
+
+    def test_pattern_symmetric_mirrors_off_diagonal(self, tmp_path):
+        text = ("%%MatrixMarket matrix coordinate pattern symmetric\n"
+                "3 3 3\n2 1\n3 1\n2 2\n")
+        g = load_matrix_market(_write(tmp_path, text, "m.mtx"))
+        # 2 off-diagonal entries mirrored + 1 diagonal kept once
+        assert g.m == 5 and not g.directed
+        pairs = sorted(zip(g.src.tolist(), g.dst.tolist()))
+        assert pairs == [(0, 1), (0, 2), (1, 0), (1, 1), (2, 0)]
+
+    def test_missing_banner(self, tmp_path):
+        p = _write(tmp_path, "3 3 1\n1 2 1.0\n", "m.mtx")
+        with pytest.raises(GraphParseError, match="banner"):
+            load_matrix_market(p)
+
+    def test_unsupported_field(self, tmp_path):
+        text = ("%%MatrixMarket matrix coordinate complex general\n"
+                "2 2 1\n1 2 1.0 0.0\n")
+        with pytest.raises(GraphParseError, match="complex"):
+            load_matrix_market(_write(tmp_path, text, "m.mtx"))
+
+    def test_bad_size_line(self, tmp_path):
+        p = _write(tmp_path, MM_HEADER + "3 3\n", "m.mtx")
+        with pytest.raises(GraphParseError, match="size line"):
+            load_matrix_market(p)
+
+    def test_index_out_of_range(self, tmp_path):
+        p = _write(tmp_path, MM_HEADER + "3 3 1\n4 1 1.0\n", "m.mtx")
+        with pytest.raises(GraphParseError, match="1-based"):
+            load_matrix_market(p)
+
+    def test_zero_index_rejected(self, tmp_path):
+        p = _write(tmp_path, MM_HEADER + "3 3 1\n0 1 1.0\n", "m.mtx")
+        with pytest.raises(GraphParseError, match="1-based"):
+            load_matrix_market(p)
+
+    def test_declared_zero_edges_rejected(self, tmp_path):
+        p = _write(tmp_path, MM_HEADER + "3 3 0\n", "m.mtx")
+        with pytest.raises(GraphParseError, match="no edges"):
+            load_matrix_market(p)
+
+    def test_nnz_mismatch(self, tmp_path):
+        p = _write(tmp_path, MM_HEADER + "3 3 3\n1 2 1.0\n", "m.mtx")
+        with pytest.raises(GraphParseError, match="nnz=3"):
+            load_matrix_market(p)
+        p = _write(tmp_path,
+                   MM_HEADER + "3 3 1\n1 2 1.0\n2 3 1.0\n", "m.mtx")
+        with pytest.raises(GraphParseError, match="more than"):
+            load_matrix_market(p)
+
+
+# ---------------------------------------------------------------------------
+# Binary store: round trip, versioning, content addressing
+# ---------------------------------------------------------------------------
+
+
+def _graphs():
+    rng = np.random.default_rng(5)
+    plain = gen.rmat(7, 4, seed=3)
+    weighted_f = dataclasses.replace(
+        plain, weights=rng.random(plain.m), name="wf")
+    weighted_i = plain.with_unit_weights()
+    undirected = gen.grid_road(9)
+    return [plain, weighted_f, weighted_i, undirected]
+
+
+class TestBinaryStore:
+    def test_round_trip_bit_identical(self, tmp_path):
+        for i, g in enumerate(_graphs()):
+            p = tmp_path / f"g{i}.rgc"
+            save_graph_binary(p, g, descriptor=f"test-{i}")
+            lg = load_graph_binary(p)
+            assert lg.n == g.n and lg.m == g.m
+            assert lg.name == g.name and lg.directed == g.directed
+            assert np.array_equal(lg.src, g.src)
+            assert np.array_equal(lg.dst, g.dst)
+            if g.weights is None:
+                assert lg.weights is None
+            else:
+                assert np.array_equal(
+                    lg.weights, np.asarray(
+                        g.weights,
+                        dtype=(np.float64 if np.issubdtype(
+                            g.weights.dtype, np.floating)
+                               else np.int64)))
+            # a second write of the loaded graph produces identical bytes
+            p2 = tmp_path / f"g{i}b.rgc"
+            save_graph_binary(p2, lg, descriptor=f"test-{i}")
+            assert p.read_bytes() == p2.read_bytes()
+
+    def test_bad_magic(self, tmp_path):
+        p = tmp_path / "x.rgc"
+        p.write_bytes(b"NOPE" + b"\x00" * 64)
+        with pytest.raises(CorpusCacheError, match="magic"):
+            load_graph_binary(p)
+
+    def test_truncated_file(self, tmp_path):
+        g = _graphs()[0]
+        p = tmp_path / "x.rgc"
+        save_graph_binary(p, g)
+        p.write_bytes(p.read_bytes()[:-16])
+        with pytest.raises(CorpusCacheError, match="truncated|expected"):
+            load_graph_binary(p)
+
+    def test_version_bump_invalidates(self, tmp_path, monkeypatch):
+        g = _graphs()[0]
+        store = GraphStore(tmp_path)
+        key = "preset;x=1"
+        store.store(key, g)
+        assert store.load(key) is not None
+        old_path = store.path_for(key)
+        monkeypatch.setattr(corpus, "CORPUS_CACHE_VERSION",
+                            CORPUS_CACHE_VERSION + 1)
+        # the address changes with the version, so the stale entry is
+        # simply never opened...
+        assert store.path_for(key) != old_path
+        assert store.load(key) is None
+        # ...and even a same-address stale file is rejected by its
+        # header version
+        stale = store.path_for(key)
+        old_path.replace(stale)
+        with pytest.raises(CorpusCacheError, match="version"):
+            load_graph_binary(stale)
+        assert store.load(key) is None   # get() would rebuild, not trust
+
+    def test_param_change_changes_address(self, tmp_path):
+        store = GraphStore(tmp_path)
+        assert (store.path_for("rmat;scale=16;seed=0")
+                != store.path_for("rmat;scale=16;seed=1"))
+
+    def test_get_builds_once_then_hits(self, tmp_path):
+        store = GraphStore(tmp_path)
+        g = _graphs()[0]
+        calls = []
+
+        def build():
+            calls.append(1)
+            return g
+
+        g1 = store.get("k", build)
+        g2 = store.get("k", build)
+        assert len(calls) == 1
+        assert np.array_equal(g1.src, g2.src)
+
+    def test_corrupt_entry_rebuilt(self, tmp_path):
+        store = GraphStore(tmp_path)
+        g = _graphs()[0]
+        store.store("k", g)
+        store.path_for("k").write_bytes(b"garbage")
+        rebuilt = store.get("k", lambda: g)
+        assert np.array_equal(rebuilt.src, g.src)
+
+    def test_corrupt_name_field_rebuilt(self, tmp_path):
+        # valid magic + version but non-UTF-8 bytes where the name
+        # lives: must surface as CorpusCacheError (and rebuild via
+        # get), never as a raw UnicodeDecodeError
+        store = GraphStore(tmp_path)
+        g = _graphs()[0]
+        store.store("k", g)
+        p = store.path_for("k")
+        data = bytearray(p.read_bytes())
+        name_off = 4 + 4 + 8 + 8 + 1 + 4      # magic,ver,n,m,flags,len
+        data[name_off:name_off + 2] = b"\xff\xff"
+        p.write_bytes(bytes(data))
+        with pytest.raises(CorpusCacheError, match="name"):
+            load_graph_binary(p)
+        rebuilt = store.get("k", lambda: g)
+        assert np.array_equal(rebuilt.src, g.src)
+
+
+# ---------------------------------------------------------------------------
+# Ordering transforms: edge-multiset preservation property
+# ---------------------------------------------------------------------------
+
+
+def _edge_multiset(g: Graph):
+    return sorted(zip(g.src.tolist(), g.dst.tolist()))
+
+
+class TestTransforms:
+    @settings(max_examples=12, deadline=None)
+    @given(seed=st.integers(0, 2**16),
+           kind=st.sampled_from(["rmat", "grid", "uniform", "chain"]),
+           transform=st.sampled_from(["degree", "bfs", "shuffle"]))
+    def test_transforms_preserve_edge_multiset(self, seed, kind,
+                                               transform):
+        if kind == "rmat":
+            g = gen.rmat(6, 4, seed=seed)
+        elif kind == "grid":
+            g = gen.grid_road(5 + seed % 4)
+        elif kind == "uniform":
+            g = gen.uniform_random(40, 160, seed=seed)
+        else:
+            g = gen.chain(20 + seed % 10)
+        t = corpus.TRANSFORMS[transform](g)
+        assert (t.n, t.m, t.directed) == (g.n, g.m, g.directed)
+        # recover the permutation from any transform deterministically
+        if transform == "degree":
+            perm = corpus.degree_perm(g)
+        elif transform == "bfs":
+            perm = corpus.bfs_perm(g)
+        else:
+            perm = corpus.shuffle_perm(g)
+        inv = np.empty(g.n, dtype=np.int64)
+        inv[perm] = np.arange(g.n)
+        back = t.relabeled(inv)
+        # edge order itself is preserved by relabeling, so this is
+        # stronger than multiset equality — but assert both forms
+        assert np.array_equal(back.src, g.src)
+        assert np.array_equal(back.dst, g.dst)
+        assert _edge_multiset(t) == sorted(
+            zip(perm[g.src].tolist(), perm[g.dst].tolist()))
+        # degree *sequence* (sorted) is relabeling-invariant
+        assert sorted(t.out_degrees().tolist()) == sorted(
+            g.out_degrees().tolist())
+
+    def test_degree_sort_puts_hubs_first(self):
+        g = gen.degree_matched(200, 2000, skew=1.0, seed=1)
+        t = corpus.degree_sort(g)
+        deg = t.out_degrees() + t.in_degrees()
+        # new id 0 has the maximum total degree
+        assert deg[0] == deg.max()
+
+    def test_bfs_root_gets_id_zero(self):
+        g = gen.grid_road(6)
+        perm = corpus.bfs_perm(g, root=7)
+        assert perm[7] == 0
+        assert sorted(perm.tolist()) == list(range(g.n))
+
+    def test_perm_shape_checked(self):
+        g = gen.chain(10)
+        with pytest.raises(ValueError, match="shape"):
+            g.relabeled(np.arange(5))
+
+
+# ---------------------------------------------------------------------------
+# Presets + resolution + the sweep axis
+# ---------------------------------------------------------------------------
+
+
+class TestPresets:
+    def test_every_preset_builds(self, tmp_path, monkeypatch):
+        monkeypatch.setenv("REPRO_GRAPH_CACHE", "0")
+        for name, preset in GRAPH_PRESETS.items():
+            g = preset.build(scale=0.01)
+            assert g.n >= 8 and g.m >= 8, name
+
+    def test_karate_is_file_parsed_and_real(self):
+        g = GRAPH_PRESETS["karate"].build()
+        assert (g.n, g.m) == (34, 156)      # 78 undirected edges, doubled
+        assert not g.directed
+
+    def test_resolution_is_memoized(self, monkeypatch):
+        monkeypatch.setenv("REPRO_GRAPH_CACHE", "0")
+        g1 = corpus.resolve_graph("rmat-16", scale=0.01)
+        g2 = corpus.resolve_graph("rmat-16", scale=0.01)
+        assert g1 is g2
+
+    def test_transform_suffix(self, monkeypatch):
+        monkeypatch.setenv("REPRO_GRAPH_CACHE", "0")
+        g = corpus.resolve_graph("powerlaw-social:degree", scale=0.01)
+        base = corpus.resolve_graph("powerlaw-social", scale=0.01)
+        assert g.name.endswith("+degsort")
+        assert g.m == base.m
+
+    def test_unknown_preset_and_transform(self):
+        with pytest.raises(KeyError, match="unknown graph preset"):
+            corpus.resolve_graph("no-such-graph")
+        with pytest.raises(KeyError, match="unknown graph transform"):
+            corpus.resolve_graph("karate:zorder")
+
+    def test_graph_passthrough(self):
+        g = gen.chain(10)
+        assert corpus.resolve_graph(g) is g
+
+    def test_dataset_presets_keep_preset_name(self, monkeypatch):
+        monkeypatch.setenv("REPRO_GRAPH_CACHE", "0")
+        g = corpus.resolve_graph("lj-sample", scale=0.2)
+        assert g.name == "lj-sample"
+
+    def test_graph_variants(self, monkeypatch):
+        monkeypatch.setenv("REPRO_GRAPH_CACHE", "0")
+        gs = corpus.graph_variants(("karate", "road-grid"), scale=0.01)
+        assert [g.name for g in gs] == ["karate", "road-grid"]
+
+    def test_kronecker_deterministic(self):
+        a = gen.kronecker(7, 4, seed=9)
+        b = gen.kronecker(7, 4, seed=9)
+        assert np.array_equal(a.src, b.src)
+        assert np.array_equal(a.dst, b.dst)
+        assert not np.array_equal(
+            a.src, gen.kronecker(7, 4, seed=10).src)
+
+    def test_fingerprint_tracks_content(self):
+        a = gen.chain(10)
+        b = gen.chain(10)
+        assert a.fingerprint == b.fingerprint
+        c = dataclasses.replace(gen.chain(10), name="other")
+        assert c.fingerprint != a.fingerprint
+
+
+class TestSweepAxis:
+    def test_sweep_accepts_preset_names(self, monkeypatch):
+        monkeypatch.setenv("REPRO_GRAPH_CACHE", "0")
+        from repro.sim import Sweeper, sweep
+        sw = Sweeper()
+        rows = sweep(graphs=("karate", "road-grid"), problems=("wcc",),
+                     accelerators=("hitgraph",), graph_scale=0.01,
+                     sweeper=sw)
+        assert [r.graph_name for r in rows] == ["karate", "road-grid"]
+        assert all(r.report.runtime_ms > 0 for r in rows)
+
+    def test_sessions_shared_across_equal_graphs(self, monkeypatch):
+        monkeypatch.setenv("REPRO_GRAPH_CACHE", "0")
+        from repro.sim import SweepCase, Sweeper
+        # two structurally identical Graph objects -> one session
+        g1, g2 = gen.rmat(6, 4, seed=4), gen.rmat(6, 4, seed=4)
+        assert g1 is not g2
+        sw = Sweeper()
+        sw.run([SweepCase(graph=g1, problem="wcc"),
+                SweepCase(graph=g2, problem="wcc")])
+        assert sw.stats.algo_runs == 1
+        assert sw.stats.algo_cache_hits == 1
+
+    def test_simulate_accepts_preset_name(self, monkeypatch):
+        monkeypatch.setenv("REPRO_GRAPH_CACHE", "0")
+        from repro.sim import simulate
+        r = simulate("karate", "wcc", accelerator="accugraph")
+        assert r.runtime_ms > 0

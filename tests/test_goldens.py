@@ -20,6 +20,7 @@ from pathlib import Path
 
 import pytest
 
+from repro.graphs.corpus import GRAPH_PRESETS
 from repro.graphs.generators import rmat
 from repro.sim import list_accelerators, simulate
 
@@ -50,6 +51,10 @@ def _graphs():
     return {
         "rmat7": rmat(7, 4, seed=101).undirected_view(),
         "rmat8": rmat(8, 5, seed=102).undirected_view(),
+        # file-parsed corpus scenario: pins the SNAP parser into the
+        # same seed-parity oracle.  Built directly (no disk store, no
+        # memo) so the oracle never trusts mutable cache state.
+        "karate": GRAPH_PRESETS["karate"].build(),
     }
 
 
