@@ -42,7 +42,7 @@ def shard_edges(g: Graph, n_shards: int, weighted: bool = False):
     w = np.ones((n_shards, E), np.int32)
     valid = np.zeros((n_shards, E), bool)
     weights = (g.weights if g.weights is not None
-               else np.ones(g.m)).astype(np.int32)
+               else np.ones(g.m, dtype=np.int32)).astype(np.int32)
     for s in range(n_shards):
         idx = np.nonzero(part == s)[0]
         src[s, :len(idx)] = g.src[idx]

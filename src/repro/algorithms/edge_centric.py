@@ -121,7 +121,8 @@ def run(
 
     if problem in (Problem.SSSP, Problem.WCC, Problem.BFS):
         w_np = np.asarray(
-            g.weights if g.weights is not None else np.ones(g.m),
+            g.weights if g.weights is not None
+            else np.ones(g.m, dtype=np.int32),
             dtype=np.int32)
         if problem == Problem.WCC:
             values_np = np.arange(n, dtype=np.int32)
@@ -152,11 +153,13 @@ def run(
     iters = fixed_iters if fixed_iters is not None else 1
     if problem == Problem.SPMV:
         w = jnp.asarray(
-            g.weights if g.weights is not None else np.ones(g.m),
+            g.weights if g.weights is not None
+            else np.ones(g.m, dtype=np.float32),
             dtype=jnp.float32,
         )
         values = jnp.asarray(
-            x0 if x0 is not None else np.ones(n), dtype=jnp.float32
+            x0 if x0 is not None else np.ones(n, dtype=np.float32),
+            dtype=jnp.float32,
         )
         for _ in range(iters):
             values = _step_spmv(values, src, dst, w, n)

@@ -70,7 +70,7 @@ def wcc(g: Graph) -> np.ndarray:
 def spmv(g: Graph, x: np.ndarray, iterations: int = 1) -> np.ndarray:
     """y = A x repeated; A given by the (weighted) edge list."""
     w = (g.weights if g.weights is not None
-         else np.ones(g.m)).astype(np.float64)
+         else np.ones(g.m, dtype=np.float64)).astype(np.float64)
     y = np.asarray(x, dtype=np.float64)
     for _ in range(iterations):
         out = np.zeros(g.n, dtype=np.float64)
@@ -86,7 +86,7 @@ def pagerank(g: Graph, iterations: int = 1, d: float = 0.85) -> np.ndarray:
     p = np.full(g.n, 1.0 / g.n)
     for _ in range(iterations):
         contrib = p[g.src] / deg[g.src]
-        acc = np.zeros(g.n)
+        acc = np.zeros(g.n, dtype=np.float64)
         np.add.at(acc, g.dst, contrib)
         p = (1.0 - d) / g.n + d * acc
     return p

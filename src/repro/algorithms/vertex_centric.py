@@ -149,7 +149,8 @@ def run(
         return RunResult(np.asarray(values), iters, per_iter)
     if problem == Problem.SPMV:
         w = jnp.asarray(
-            g.weights if g.weights is not None else np.ones(g.m),
+            g.weights if g.weights is not None
+            else np.ones(g.m, dtype=np.float32),
             dtype=jnp.float32,
         )
         values = jnp.ones(n, dtype=jnp.float32)

@@ -1,0 +1,36 @@
+"""``repro.analysis`` — the repo-aware static-analysis + race-
+instrumentation suite gating CI.
+
+Static half (stdlib-only, safe to run anywhere)::
+
+    python -m repro.analysis src/repro
+
+AST lint rules specific to this codebase's invariants: cache-key
+completeness (``cache-key-fields``), JAX tracer/recompile hazards
+(``jit-tracer-branch``, ``jit-tracer-concretize``,
+``jit-fstring-traced``, ``jit-static-hazard``), unordered-set iteration
+(``nondeterministic-order``), Pallas kernel/oracle pairing
+(``kernel-parity``), platform-default dtypes (``dtype-drift``), and
+quarantined-module imports (``quarantine-import``).  Suppressions:
+``# repro: noqa[rule-name]``; accepted findings live in the committed
+``analysis_baseline.json`` with per-entry justifications and a drift
+gate (see :mod:`repro.analysis.baseline`).
+
+Dynamic half: :mod:`repro.analysis.locks` instruments the
+``SimSession`` / ``Sweeper`` / corpus locks and their guarded dicts
+when ``REPRO_ANALYSIS_LOCKS=1``, recording lock-acquisition order,
+lock-order inversions, and unguarded shared-state access —
+``tests/test_concurrency_stress.py`` runs under it.
+"""
+
+from repro.analysis.baseline import (BaselineEntry, apply_baseline,
+                                     load_baseline, save_baseline,
+                                     update_baseline)
+from repro.analysis.framework import (Finding, Rule, RULES,
+                                      load_config, run_analysis)
+
+__all__ = [
+    "BaselineEntry", "Finding", "RULES", "Rule", "apply_baseline",
+    "load_baseline", "load_config", "run_analysis", "save_baseline",
+    "update_baseline",
+]

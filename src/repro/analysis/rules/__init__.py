@@ -1,0 +1,9 @@
+"""Rule modules register themselves on import; importing this package
+is what populates :data:`repro.analysis.framework.RULES`."""
+
+from repro.analysis.rules import (cache_keys, determinism, dtype_drift,
+                                  jax_hazards, kernel_parity,
+                                  quarantine)
+
+__all__ = ["cache_keys", "determinism", "dtype_drift", "jax_hazards",
+           "kernel_parity", "quarantine"]

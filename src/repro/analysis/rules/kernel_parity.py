@@ -1,0 +1,97 @@
+"""``kernel-parity``: every Pallas kernel must keep its oracle.
+
+The repo's kernel discipline (enforced since the PR2 fused pipeline) is
+that each ``kernels/<op>/kernel.py`` public entry point has
+
+* a pure-jnp/NumPy reference ``<stem>_ref`` in the sibling ``ref.py``
+  whose parameters are a subset of the kernel's (no block-shape or
+  ``interpret`` tuning knobs), and
+* interpret-path coverage in the kernel test module, so CPU CI
+  exercises the Pallas body without an accelerator.
+
+A kernel without its oracle (or with a drifted signature) silently
+loses the bit-equivalence contract the whole device/host split rests
+on; this rule makes the pairing structural.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, List
+
+from repro.analysis.framework import (Rule, TreeInfo, register)
+
+
+def _public_defs(tree) -> Dict[str, List[str]]:
+    out = {}
+    for node in tree.body:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                and not node.name.startswith("_"):
+            out[node.name] = [a.arg for a in (node.args.posonlyargs
+                                              + node.args.args
+                                              + node.args.kwonlyargs)]
+    return out
+
+
+def _def_line(tree, name: str) -> int:
+    for node in tree.body:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                and node.name == name:
+            return node.lineno
+    return 1
+
+
+@register
+class KernelParityRule(Rule):
+    name = "kernel-parity"
+    severity = "error"
+    description = ("every public kernel.py op needs a matching ref.py "
+                   "oracle and interpret-path test coverage")
+
+    def check_tree(self, tree: TreeInfo):
+        root = tree.config.kernels_root.rstrip("/")
+        kernels = [m for m in tree.modules
+                   if m.rel.startswith(root + "/")
+                   and m.rel.endswith("/kernel.py")
+                   and m.tree is not None]
+        tests_path = tree.root / tree.config.kernel_tests
+        tests_src = (tests_path.read_text(encoding="utf-8")
+                     if tests_path.exists() else "")
+        for kmod in kernels:
+            pkg = kmod.rel.rsplit("/", 2)[-2]
+            ref_mod = tree.module(kmod.rel[:-len("kernel.py")]
+                                  + "ref.py")
+            refs = (_public_defs(ref_mod.tree)
+                    if ref_mod is not None and ref_mod.tree is not None
+                    else {})
+            for name, params in _public_defs(kmod.tree).items():
+                stem = (name[:-len("_kernel")]
+                        if name.endswith("_kernel") else name)
+                want = f"{stem}_ref"
+                line = _def_line(kmod.tree, name)
+                if ref_mod is None:
+                    yield self.finding(
+                        kmod, line,
+                        f"kernel package {pkg!r} has no ref.py oracle "
+                        f"for {name!r}", symbol=name)
+                    continue
+                if want not in refs:
+                    yield self.finding(
+                        kmod, line,
+                        f"kernel op {name!r} has no {want!r} "
+                        "counterpart in ref.py — the bit-equivalence "
+                        "oracle is missing", symbol=name)
+                    continue
+                extra = [p for p in refs[want] if p not in params]
+                if extra:
+                    yield self.finding(
+                        kmod, line,
+                        f"ref oracle {want!r} takes {extra} which "
+                        f"{name!r} does not — signatures drifted",
+                        symbol=name)
+            if pkg not in tests_src:
+                yield self.finding(
+                    kmod, 1,
+                    f"kernel package {pkg!r} is not referenced by "
+                    f"{tree.config.kernel_tests} — interpret-path "
+                    "coverage is missing", symbol=pkg)

@@ -129,7 +129,7 @@ class AccuGraphModel:
         ids = np.concatenate(
             [nbrs, np.full(pad, -1, dtype=np.int64)])
         groups = ids.reshape(-1, ep)
-        rows = np.repeat(np.arange(len(groups)), ep)
+        rows = np.repeat(np.arange(len(groups), dtype=np.int64), ep)
         flat = groups.ravel()
         valid = flat >= 0
         # broadcast: only *distinct* ids per (group, bank) occupy a port
@@ -198,9 +198,9 @@ class AccuGraphModel:
         n_s, n_w = len(s_line), len(w_line)
         # stable merge (static side wins ties, matching concat order)
         pos_w = np.searchsorted(s_issue, w_issue, side="right") \
-            + np.arange(n_w)
+            + np.arange(n_w, dtype=np.int64)
         pos_s = np.searchsorted(w_issue, s_issue, side="left") \
-            + np.arange(n_s)
+            + np.arange(n_s, dtype=np.int64)
         line = np.empty(n_s + n_w, dtype=np.int64)
         issue = np.empty(n_s + n_w, dtype=np.int64)
         wr = np.zeros(n_s + n_w, dtype=bool)

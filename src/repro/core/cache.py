@@ -79,6 +79,12 @@ class CacheConfig:
     #: compares CacheConfigs)
     name: str = dataclasses.field(default="", compare=False)
 
+    #: checked by the `cache-key-fields` analysis rule
+    TIMING_ONLY_FIELDS = {
+        "name": "display only — same-geometry configs under different "
+                "names must share pack-cache entries",
+    }
+
     def __post_init__(self) -> None:
         if self.lines < 0 or self.ways < 1 or self.prefetch_degree < 0:
             raise ValueError(f"invalid cache geometry: {self}")
@@ -196,7 +202,7 @@ def _lookup_numpy(tags: np.ndarray, age: np.ndarray, tag_m: np.ndarray,
     S, W = tags.shape
     L = tag_m.shape[1]
     hit_m = np.zeros((S, L), dtype=bool)
-    rows = np.arange(S)
+    rows = np.arange(S, dtype=np.int64)
     for t in range(L):
         cur = tag_m[:, t]
         v = valid_m[:, t]

@@ -95,6 +95,17 @@ class DRAMConfig:
     order: AddressOrder = DEFAULT_ORDER
     cache: Optional["CacheConfig"] = None
 
+    #: fields deliberately absent from structure_key/geometry_key:
+    #: they change latency numbers, never the packed program geometry.
+    #: (checked by the `cache-key-fields` analysis rule)
+    TIMING_ONLY_FIELDS = {
+        "name": "display label only",
+        "standard": "display label; geometry lives in org/channels",
+        "timing": "traced-scan input — packing never reads timings",
+        "clock_ghz": "keyed separately by SimSession next to the "
+                     "geometry key (timing-only scale factor)",
+    }
+
     # ---- derived ----------------------------------------------------
     @property
     def banks_total(self) -> int:

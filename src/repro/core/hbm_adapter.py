@@ -63,12 +63,14 @@ def pattern_fractions(n_lines: int = 16384, seed: int = 0) -> Dict[str, float]:
     # embedding gather: random rows of 32 lines (2 KiB ~ d_model=1k bf16;
     # larger d_model streams even better, this is the conservative case)
     rows = rng.integers(0, total_lines // 32, n_lines // 32)
-    emb = (rows[:, None] * 32 + np.arange(32)[None, :]).ravel()
+    emb = (rows[:, None] * 32
+           + np.arange(32, dtype=np.int64)[None, :]).ravel()
     out["gather"] = _run(emb.astype(np.int64), cfg)
 
     # paged KV reads: 2 KiB pages (32 lines) at random page addresses
     pages = rng.integers(0, total_lines // 32, n_lines // 32)
-    kv = (pages[:, None] * 32 + np.arange(32)[None, :]).ravel()
+    kv = (pages[:, None] * 32
+          + np.arange(32, dtype=np.int64)[None, :]).ravel()
     out["kv_page"] = _run(kv.astype(np.int64), cfg)
 
     # MoE dispatch: expert-strided bursts of 64 lines (4 KiB chunks —
@@ -76,7 +78,8 @@ def pattern_fractions(n_lines: int = 16384, seed: int = 0) -> Dict[str, float]:
     experts = rng.integers(0, 64, max(n_lines // 64, 1))
     base = experts * (total_lines // 64)
     offs = rng.integers(0, total_lines // 64 - 64, len(experts))
-    moe = ((base + offs)[:, None] + np.arange(64)[None, :]).ravel()
+    moe = ((base + offs)[:, None]
+           + np.arange(64, dtype=np.int64)[None, :]).ravel()
     out["alltoall"] = _run(moe.astype(np.int64), cfg)
     return out
 

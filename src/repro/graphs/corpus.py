@@ -28,6 +28,7 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+import itertools
 import os
 import struct
 import threading
@@ -36,6 +37,7 @@ from typing import Callable, Dict, Iterable, List, Optional, Union
 
 import numpy as np
 
+from repro.analysis import locks
 from repro.graphs import generators as gen
 from repro.graphs.formats import (Graph, GraphParseError,
                                   load_matrix_market, load_snap_edgelist)
@@ -142,6 +144,10 @@ _F_DIRECTED = 1
 _F_WEIGHTS = 2
 _F_WEIGHTS_FLOAT = 4
 
+#: disambiguates tmp files within one thread (itertools.count is
+#: GIL-atomic, so the whole tmp suffix is unique per in-flight write)
+_TMP_SEQ = itertools.count()
+
 
 class CorpusCacheError(RuntimeError):
     """A corpus store file exists but cannot be used (bad magic, wrong
@@ -178,9 +184,13 @@ def save_graph_binary(path: Union[str, Path], g: Graph,
     pointers = np.zeros(g.n + 1, dtype=np.int64)
     np.cumsum(np.bincount(g.src, minlength=g.n), out=pointers[1:])
     path.parent.mkdir(parents=True, exist_ok=True)
-    tmp = path.with_name(path.name + f".tmp{os.getpid()}")
+    # pid + thread + counter: a pid-only suffix let two threads of one
+    # process writing the same key clobber each other's tmp file
+    tmp = path.with_name(
+        path.name + f".tmp{os.getpid()}.{threading.get_ident()}"
+        f".{next(_TMP_SEQ)}")
     try:
-        with open(tmp, "wb") as f:
+        with locks.witness_write(tmp), open(tmp, "wb") as f:
             f.write(_MAGIC)
             f.write(struct.pack("<IQQB", CORPUS_CACHE_VERSION, g.n,
                                 g.m, flags))
@@ -329,6 +339,11 @@ class GraphPreset:
     params: tuple = ()               # canonical ((key, value), ...)
     description: str = ""
 
+    #: checked by the `cache-key-fields` analysis rule
+    KEY_EXEMPT_FIELDS = {
+        "description": "human-readable blurb; never shapes the graph",
+    }
+
     def p(self) -> dict:
         return dict(self.params)
 
@@ -439,8 +454,12 @@ GRAPH_PRESETS: Dict[str, GraphPreset] = _presets()
 
 GraphLike = Union[Graph, str]
 
-_resolve_lock = threading.Lock()
-_resolved: Dict[tuple, Graph] = {}
+# race-instrumented under REPRO_ANALYSIS_LOCKS=1; the wrappers are
+# installed unconditionally so the flag also covers these module-level
+# objects when it is set after import
+_resolve_lock = locks.make_lock("corpus-resolve")
+_resolved: Dict[tuple, Graph] = \
+    locks.make_dict("corpus._resolved", _resolve_lock)
 _default_store: Optional[GraphStore] = None
 
 

@@ -1,0 +1,54 @@
+"""Seed-era batched LM serving (prefill + greedy decode), quarantined.
+
+This lived in ``repro.serve.engine`` before that module became the
+simulation service; it moved here so the live ``serve`` package carries
+no dependency on the quarantined LM stack (``repro.models`` /
+``repro.train`` — see ``analysis.cfg``).  ``tests/test_distributed.py``
+still exercises it against the smoke-size model configs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import model as M
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: np.ndarray                   # int32[S]
+    max_new_tokens: int = 16
+    eos_id: Optional[int] = None
+
+
+def _pad_prompts(prompts: List[np.ndarray], pad_id: int = 0):
+    S = max(len(p) for p in prompts)
+    out = np.full((len(prompts), S), pad_id, np.int32)
+    for i, p in enumerate(prompts):
+        out[i, S - len(p):] = p          # left-pad (aligned last token)
+    return out
+
+
+def generate(params, cfg: ModelConfig, requests: List[Request],
+             extra: Optional[Dict] = None) -> np.ndarray:
+    """Greedy generation for a batch of requests; returns (B, max_new)."""
+    prompts = _pad_prompts([r.prompt for r in requests])
+    steps = max(r.max_new_tokens for r in requests)
+    logits, cache = jax.jit(
+        lambda p, t: M.prefill(p, t, cfg, extra=extra))(params, prompts)
+
+    decode = jax.jit(lambda p, c, t: M.decode_step(p, c, t, cfg))
+
+    tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+    out = [np.asarray(tok)]
+    for _ in range(steps - 1):
+        logits, cache = decode(params, cache, tok[:, None])
+        tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        out.append(np.asarray(tok))
+    return np.stack(out, axis=1)

@@ -1,52 +1,137 @@
-"""Batched serving: prefill + greedy decode with pre-allocated caches.
+"""``SimService`` — a resident simulation-sweep service.
 
-The jitted ``generate`` loop is the single-host counterpart of the
-``serve_step`` the dry-run lowers on the production mesh; the engine adds
-request batching, padding, and simple continuous-batching slots on top.
+The seed carried an LM serving engine here (now quarantined in
+``repro.models.lm_engine``); this module replaces it with the service
+the ROADMAP grows toward: a long-lived process that keeps ONE resident
+:class:`~repro.sim.sweep.Sweeper` — and therefore its per-graph
+sessions, compiled fused scans, and geometry-keyed pack caches — warm
+across many submitted sweep jobs.
+
+Jobs run strictly FIFO on a single worker thread, so two overlapping
+clients can never race the sweeper's stats surface, and results for a
+given submission order are deterministic regardless of submission
+timing.  The public API is deliberately queue-shaped (submit / poll /
+result) so a network front-end can later wrap it without touching the
+execution core.
+
+    with SimService(workers=2) as svc:
+        job = svc.submit([SweepCase("karate", "pr")])
+        rows = svc.result(job)            # blocks until done
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+import itertools
+import queue
+import threading
+from typing import Dict, List, Optional, Sequence
 
-import jax
-import jax.numpy as jnp
-import numpy as np
+from repro.sim.sweep import Sweeper, SweepCase, SweepRow, SweepStats
 
-from repro.models import model as M
-from repro.models.config import ModelConfig
+#: job lifecycle states, in order
+QUEUED, RUNNING, DONE, FAILED = "queued", "running", "done", "failed"
 
 
 @dataclasses.dataclass
-class Request:
-    prompt: np.ndarray                   # int32[S]
-    max_new_tokens: int = 16
-    eos_id: Optional[int] = None
+class SimJob:
+    """One submitted batch of sweep cases and its eventual outcome."""
+
+    id: int
+    cases: List[SweepCase]
+    status: str = QUEUED
+    rows: Optional[List[SweepRow]] = None
+    error: Optional[BaseException] = None
+    _finished: threading.Event = dataclasses.field(
+        default_factory=threading.Event, repr=False)
 
 
-def _pad_prompts(prompts: List[np.ndarray], pad_id: int = 0):
-    S = max(len(p) for p in prompts)
-    out = np.full((len(prompts), S), pad_id, np.int32)
-    for i, p in enumerate(prompts):
-        out[i, S - len(p):] = p          # left-pad (aligned last token)
-    return out
+class SimService:
+    """FIFO job queue in front of one resident :class:`Sweeper`.
 
+    Thread-safe: ``submit``/``poll``/``result`` may be called from any
+    thread; execution happens on the service's single worker thread so
+    the sweeper (and the JAX dispatch underneath it) is never entered
+    concurrently.
+    """
 
-def generate(params, cfg: ModelConfig, requests: List[Request],
-             extra: Optional[Dict] = None) -> np.ndarray:
-    """Greedy generation for a batch of requests; returns (B, max_new)."""
-    prompts = _pad_prompts([r.prompt for r in requests])
-    steps = max(r.max_new_tokens for r in requests)
-    logits, cache = jax.jit(
-        lambda p, t: M.prefill(p, t, cfg, extra=extra))(params, prompts)
+    def __init__(self, backend: Optional[str] = None,
+                 batch_memories: bool = False, workers: int = 1):
+        self._sweeper = Sweeper(backend=backend,
+                                batch_memories=batch_memories,
+                                workers=workers)
+        self._jobs: Dict[int, SimJob] = {}
+        self._jobs_lock = threading.Lock()
+        self._queue: "queue.Queue[Optional[SimJob]]" = queue.Queue()
+        self._ids = itertools.count()
+        self._closed = False
+        self._worker = threading.Thread(
+            target=self._run_loop, name="sim-service", daemon=True)
+        self._worker.start()
 
-    decode = jax.jit(lambda p, c, t: M.decode_step(p, c, t, cfg))
+    # ---- client surface ----------------------------------------------
+    def submit(self, cases: Sequence[SweepCase]) -> int:
+        """Enqueue a batch of cases; returns the job id immediately."""
+        if self._closed:
+            raise RuntimeError("SimService is closed")
+        job = SimJob(id=next(self._ids), cases=list(cases))
+        with self._jobs_lock:
+            self._jobs[job.id] = job
+        self._queue.put(job)
+        return job.id
 
-    tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
-    out = [np.asarray(tok)]
-    for _ in range(steps - 1):
-        logits, cache = decode(params, cache, tok[:, None])
-        tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
-        out.append(np.asarray(tok))
-    return np.stack(out, axis=1)
+    def poll(self, job_id: int) -> str:
+        """Non-blocking status: queued | running | done | failed."""
+        return self._job(job_id).status
+
+    def result(self, job_id: int,
+               timeout: Optional[float] = None) -> List[SweepRow]:
+        """Block until the job finishes; re-raises its failure."""
+        job = self._job(job_id)
+        if not job._finished.wait(timeout):
+            raise TimeoutError(
+                f"job #{job_id} still {job.status} after {timeout}s")
+        if job.status == FAILED:
+            raise job.error
+        return job.rows
+
+    def stats(self) -> SweepStats:
+        """Cumulative cache/worker stats of the resident sweeper."""
+        return self._sweeper.stats
+
+    def close(self, timeout: Optional[float] = 30.0) -> None:
+        """Drain the queue and stop the worker (idempotent)."""
+        if self._closed:
+            return
+        self._closed = True
+        self._queue.put(None)                  # wake + stop sentinel
+        self._worker.join(timeout)
+
+    def __enter__(self) -> "SimService":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # ---- worker --------------------------------------------------------
+    def _job(self, job_id: int) -> SimJob:
+        with self._jobs_lock:
+            try:
+                return self._jobs[job_id]
+            except KeyError:
+                raise KeyError(f"unknown job id {job_id}") from None
+
+    def _run_loop(self) -> None:
+        while True:
+            job = self._queue.get()
+            if job is None:
+                return
+            job.status = RUNNING
+            try:
+                job.rows = self._sweeper.run(job.cases)
+                job.status = DONE
+            except BaseException as e:       # surface in result()
+                job.error = e
+                job.status = FAILED
+            finally:
+                job._finished.set()

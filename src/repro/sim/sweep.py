@@ -31,7 +31,6 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
-import threading
 import time
 from collections import defaultdict, deque
 from concurrent.futures import ThreadPoolExecutor
@@ -41,6 +40,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.algorithms.common import Problem
+from repro.analysis import locks
 from repro.core import vectorized as vec
 from repro.core.accel import (DevicePackedProgram, ProgramStats, SimReport,
                               finalize_program, finalize_program_device,
@@ -173,8 +173,10 @@ class Sweeper:
         self.backend = backend
         self.batch_memories = batch_memories
         self.workers = workers
-        self._sessions: Dict[int, SimSession] = {}
-        self._sessions_lock = threading.Lock()
+        # race-instrumented under REPRO_ANALYSIS_LOCKS=1
+        self._sessions_lock = locks.make_lock("sweeper-sessions")
+        self._sessions: Dict[int, SimSession] = \
+            locks.make_dict("Sweeper._sessions", self._sessions_lock)
         self.stats = SweepStats(workers=workers)
 
     def _session(self, g: Graph) -> SimSession:

@@ -1,0 +1,633 @@
+"""Per-rule positive/negative fixtures for the ``repro.analysis``
+static suite, plus baseline-gate semantics and the CLI contract
+(synthetic bugs must fail the gate naming rule, file, and line)."""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import (BaselineEntry, apply_baseline, load_baseline,
+                            run_analysis, save_baseline, update_baseline)
+from repro.analysis.baseline import UNREVIEWED
+from repro.analysis.framework import AnalysisConfig
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
+SRC = REPO_ROOT / "src"
+
+CFG = AnalysisConfig(
+    exclude=(),
+    quarantine=("repro.models", "repro.train"),
+    kernels_root="kernels",
+    kernel_tests="tests/test_kernels.py",
+    dtype_scope=("core",),
+)
+
+
+def lint(tmp_path, source, rel="core/mod.py", cfg=CFG, extra=None):
+    """Write fixture files into a scratch repo and run the full suite.
+
+    Sources are dedented per-line-block, so a ``DC``-prefixed class
+    body (unindented prefix + indented triple-quote body) still lands
+    at column zero."""
+    files = {rel: source}
+    files.update(extra or {})
+    for r, src in files.items():
+        f = tmp_path / r
+        f.parent.mkdir(parents=True, exist_ok=True)
+        f.write_text(textwrap.dedent(src), encoding="utf-8")
+    return run_analysis([tmp_path], tmp_path, cfg)
+
+
+def rules_of(findings):
+    return sorted({f.rule for f in findings})
+
+
+# ---------------------------------------------------------------------------
+# cache-key-fields
+# ---------------------------------------------------------------------------
+
+def dc(body: str) -> str:
+    """A dataclass fixture module: dedent the body, prepend imports."""
+    return ("import dataclasses\n\n\n@dataclasses.dataclass\n"
+            + textwrap.dedent(body))
+
+
+class TestCacheKeyFields:
+    def test_unconsumed_field_flagged(self, tmp_path):
+        out = lint(tmp_path, dc("""\
+            class Cfg:
+                channels: int
+                banks: int
+                label: str
+
+                def geometry_key(self):
+                    return (self.channels, self.banks)
+            """))
+        assert rules_of(out) == ["cache-key-fields"]
+        (f,) = out
+        assert f.symbol == "Cfg.label"
+        assert f.severity == "error"
+
+    def test_declared_timing_only_passes(self, tmp_path):
+        out = lint(tmp_path, dc("""\
+            class Cfg:
+                channels: int
+                label: str
+
+                TIMING_ONLY_FIELDS = {"label": "display only"}
+
+                def geometry_key(self):
+                    return (self.channels,)
+            """))
+        assert out == []
+
+    def test_transitive_consumption_through_method(self, tmp_path):
+        out = lint(tmp_path, dc("""\
+            class Cfg:
+                channels: int
+                banks: int
+
+                def _inner(self):
+                    return self.banks
+
+                def geometry_key(self):
+                    return (self.channels, self._inner())
+            """))
+        assert out == []
+
+    def test_bare_self_escape_consumes_everything(self, tmp_path):
+        out = lint(tmp_path, dc("""\
+            class Cfg:
+                channels: int
+                label: str
+
+                def key(self):
+                    return dataclasses.astuple(self)
+            """))
+        assert out == []
+
+    def test_compare_false_needs_declaration(self, tmp_path):
+        out = lint(tmp_path, dc("""\
+            class Cfg:
+                channels: int
+                name: str = dataclasses.field(default="", compare=False)
+            """))
+        assert rules_of(out) == ["cache-key-fields"]
+        assert out[0].symbol == "Cfg.name"
+
+    def test_stale_declaration_flagged(self, tmp_path):
+        out = lint(tmp_path, dc("""\
+            class Cfg:
+                channels: int
+
+                TIMING_ONLY_FIELDS = {"ghost": "never existed"}
+
+                def geometry_key(self):
+                    return (self.channels,)
+            """))
+        assert rules_of(out) == ["cache-key-fields"]
+        assert out[0].symbol == "Cfg.ghost"
+
+    def test_keyless_dataclass_ignored(self, tmp_path):
+        out = lint(tmp_path, dc("""\
+            class Row:
+                value: int
+                label: str
+            """))
+        assert out == []
+
+
+# ---------------------------------------------------------------------------
+# jit hazard rules
+# ---------------------------------------------------------------------------
+
+class TestJaxHazards:
+    def test_branch_on_traced_param(self, tmp_path):
+        out = lint(tmp_path, """\
+            import jax
+
+
+            @jax.jit
+            def f(x):
+                if x > 0:
+                    return x
+                return -x
+            """)
+        assert rules_of(out) == ["jit-tracer-branch"]
+        assert out[0].symbol == "f.x"
+
+    def test_branch_on_static_param_ok(self, tmp_path):
+        out = lint(tmp_path, """\
+            import functools
+            import jax
+
+
+            @functools.partial(jax.jit, static_argnames="mode")
+            def f(x, mode):
+                if mode:
+                    return x
+                return -x
+            """)
+        assert out == []
+
+    def test_is_none_and_shape_tests_ok(self, tmp_path):
+        out = lint(tmp_path, """\
+            import jax
+
+
+            @jax.jit
+            def f(x, y):
+                if y is None:
+                    return x
+                if x.ndim == 2:
+                    return x + y
+                return x - y
+            """)
+        assert out == []
+
+    def test_concretize_traced_param(self, tmp_path):
+        out = lint(tmp_path, """\
+            import jax
+
+
+            @jax.jit
+            def f(x):
+                return int(x)
+            """)
+        assert rules_of(out) == ["jit-tracer-concretize"]
+
+    def test_item_on_traced_param(self, tmp_path):
+        out = lint(tmp_path, """\
+            import jax
+
+
+            @jax.jit
+            def f(x):
+                return x.item()
+            """)
+        assert rules_of(out) == ["jit-tracer-concretize"]
+
+    def test_fstring_on_traced_param_warns(self, tmp_path):
+        out = lint(tmp_path, """\
+            import jax
+
+
+            @jax.jit
+            def f(x):
+                label = f"value={x}"
+                return x, label
+            """)
+        assert rules_of(out) == ["jit-fstring-traced"]
+        assert out[0].severity == "warning"
+
+    def test_static_argnames_typo(self, tmp_path):
+        out = lint(tmp_path, """\
+            import functools
+            import jax
+
+
+            @functools.partial(jax.jit, static_argnames=("mdoe",))
+            def f(x, mode=0):
+                return x * mode
+            """)
+        assert rules_of(out) == ["jit-static-hazard"]
+        assert out[0].symbol == "f.mdoe"
+
+    def test_unhashable_static_annotation(self, tmp_path):
+        out = lint(tmp_path, """\
+            import functools
+            import jax
+
+
+            @functools.partial(jax.jit, static_argnames=("shape",))
+            def f(x, shape: list):
+                return x.reshape(shape)
+            """)
+        assert rules_of(out) == ["jit-static-hazard"]
+
+    def test_unjitted_function_untouched(self, tmp_path):
+        out = lint(tmp_path, """\
+            def f(x):
+                if x > 0:
+                    return int(x)
+                return -x
+            """)
+        assert out == []
+
+
+# ---------------------------------------------------------------------------
+# nondeterministic-order
+# ---------------------------------------------------------------------------
+
+class TestDeterminism:
+    def test_iterating_a_set_flagged(self, tmp_path):
+        out = lint(tmp_path, """\
+            def f(items):
+                seen = set(items)
+                return [x + 1 for x in seen if x]  # not flagged: name
+
+            def g(items):
+                out = []
+                for x in {i.name for i in items}:
+                    out.append(x)
+                return out
+            """)
+        assert rules_of(out) == ["nondeterministic-order"]
+        assert out[0].symbol == "g"
+
+    def test_sorted_set_ok(self, tmp_path):
+        out = lint(tmp_path, """\
+            def g(items):
+                return [x for x in sorted(set(items))]
+            """)
+        assert out == []
+
+    def test_set_algebra_flagged(self, tmp_path):
+        out = lint(tmp_path, """\
+            def g(a, b):
+                return list(set(a) - set(b))
+            """)
+        assert rules_of(out) == ["nondeterministic-order"]
+
+
+# ---------------------------------------------------------------------------
+# dtype-drift
+# ---------------------------------------------------------------------------
+
+class TestDtypeDrift:
+    def test_default_dtype_in_scope_flagged(self, tmp_path):
+        out = lint(tmp_path, """\
+            import numpy as np
+
+            def build(n):
+                return np.arange(n)
+            """)
+        assert rules_of(out) == ["dtype-drift"]
+        assert out[0].severity == "warning"
+        assert out[0].symbol == "build"
+
+    def test_explicit_or_positional_dtype_ok(self, tmp_path):
+        out = lint(tmp_path, """\
+            import numpy as np
+
+            def build(n):
+                a = np.arange(n, dtype=np.int64)
+                b = np.zeros((n, n), np.int32)
+                c = np.full(n, np.float32(0))
+                return a, b, c
+            """)
+        assert out == []
+
+    def test_out_of_scope_module_ignored(self, tmp_path):
+        out = lint(tmp_path, """\
+            import numpy as np
+
+            def build(n):
+                return np.arange(n)
+            """, rel="tools/mod.py")
+        assert out == []
+
+
+# ---------------------------------------------------------------------------
+# kernel-parity
+# ---------------------------------------------------------------------------
+
+KERNEL = """\
+    def scan_kernel(x, block=128, interpret=False):
+        return x
+"""
+
+
+class TestKernelParity:
+    def test_missing_ref_module(self, tmp_path):
+        out = lint(tmp_path, KERNEL, rel="kernels/scan/kernel.py",
+                   extra={"tests/test_kernels.py": "# exercises scan\n"})
+        assert rules_of(out) == ["kernel-parity"]
+        assert "no ref.py" in out[0].message
+
+    def test_missing_ref_function(self, tmp_path):
+        out = lint(tmp_path, KERNEL, rel="kernels/scan/kernel.py",
+                   extra={"kernels/scan/ref.py": "def other_ref(x):\n"
+                                                 "    return x\n",
+                          "tests/test_kernels.py": "# exercises scan\n"})
+        assert rules_of(out) == ["kernel-parity"]
+        assert out[0].symbol == "scan_kernel"
+
+    def test_ref_signature_drift(self, tmp_path):
+        out = lint(tmp_path, KERNEL, rel="kernels/scan/kernel.py",
+                   extra={"kernels/scan/ref.py":
+                          "def scan_ref(x, extra_knob):\n    return x\n",
+                          "tests/test_kernels.py": "# exercises scan\n"})
+        assert rules_of(out) == ["kernel-parity"]
+        assert "extra_knob" in out[0].message
+
+    def test_missing_test_coverage(self, tmp_path):
+        out = lint(tmp_path, KERNEL, rel="kernels/scan/kernel.py",
+                   extra={"kernels/scan/ref.py":
+                          "def scan_ref(x):\n    return x\n",
+                          "tests/test_kernels.py": "# nothing here\n"})
+        assert rules_of(out) == ["kernel-parity"]
+        assert "coverage" in out[0].message
+
+    def test_paired_kernel_passes(self, tmp_path):
+        out = lint(tmp_path, KERNEL, rel="kernels/scan/kernel.py",
+                   extra={"kernels/scan/ref.py":
+                          "def scan_ref(x, block=128):\n    return x\n",
+                          "tests/test_kernels.py": "# exercises scan\n"})
+        assert out == []
+
+
+# ---------------------------------------------------------------------------
+# quarantine-import
+# ---------------------------------------------------------------------------
+
+class TestQuarantine:
+    def test_import_flagged(self, tmp_path):
+        out = lint(tmp_path, """\
+            from repro.models.config import ModelConfig
+            import repro.train.optimizer
+            """)
+        assert rules_of(out) == ["quarantine-import"]
+        assert len(out) == 2
+
+    def test_live_imports_ok(self, tmp_path):
+        out = lint(tmp_path, """\
+            from repro.sim.sweep import Sweeper
+            import repro.graphs.corpus
+            """)
+        assert out == []
+
+
+# ---------------------------------------------------------------------------
+# framework: noqa, syntax errors, exclusion
+# ---------------------------------------------------------------------------
+
+class TestFramework:
+    def test_noqa_suppresses_named_rule(self, tmp_path):
+        out = lint(tmp_path, """\
+            import numpy as np
+
+            def build(n):
+                return np.arange(n)  # repro: noqa[dtype-drift]
+            """)
+        assert out == []
+
+    def test_noqa_other_rule_does_not_suppress(self, tmp_path):
+        out = lint(tmp_path, """\
+            import numpy as np
+
+            def build(n):
+                return np.arange(n)  # repro: noqa[kernel-parity]
+            """)
+        assert rules_of(out) == ["dtype-drift"]
+
+    def test_blanket_noqa(self, tmp_path):
+        out = lint(tmp_path, """\
+            import numpy as np
+
+            def build(n):
+                return np.arange(n)  # repro: noqa
+            """)
+        assert out == []
+
+    def test_syntax_error_is_a_finding(self, tmp_path):
+        out = lint(tmp_path, "def broken(:\n")
+        assert rules_of(out) == ["syntax-error"]
+
+    def test_excluded_dir_skipped(self, tmp_path):
+        cfg = AnalysisConfig(exclude=("core/legacy",),
+                             quarantine=CFG.quarantine,
+                             kernels_root=CFG.kernels_root,
+                             kernel_tests=CFG.kernel_tests,
+                             dtype_scope=CFG.dtype_scope)
+        out = lint(tmp_path, """\
+            import numpy as np
+            a = np.arange(4)
+            """, rel="core/legacy/mod.py", cfg=cfg)
+        assert out == []
+
+
+# ---------------------------------------------------------------------------
+# baseline gate
+# ---------------------------------------------------------------------------
+
+class TestBaseline:
+    def _findings(self, tmp_path):
+        return lint(tmp_path, """\
+            import numpy as np
+
+            def build(n):
+                return np.arange(n)
+            """)
+
+    def test_unjustified_entries_fail_gate(self, tmp_path):
+        findings = self._findings(tmp_path)
+        entries = update_baseline(findings, [])
+        assert [e.justification for e in entries] == [UNREVIEWED]
+        gate = apply_baseline(findings, entries)
+        assert not gate.ok and gate.unjustified_entries
+
+    def test_justified_entries_pass_gate(self, tmp_path):
+        findings = self._findings(tmp_path)
+        entries = update_baseline(findings, [])
+        entries = [BaselineEntry(e.rule, e.path, e.symbol,
+                                 "accepted: fixture") for e in entries]
+        gate = apply_baseline(findings, entries)
+        assert gate.ok and gate.baselined == len(findings)
+
+    def test_new_finding_fails_gate(self, tmp_path):
+        gate = apply_baseline(self._findings(tmp_path), [])
+        assert not gate.ok and len(gate.new_findings) == 1
+
+    def test_stale_entry_fails_gate(self, tmp_path):
+        ghost = BaselineEntry("dtype-drift", "core/gone.py", "f",
+                              "accepted: fixture")
+        gate = apply_baseline([], [ghost])
+        assert not gate.ok and gate.stale_entries == [ghost]
+
+    def test_update_preserves_justifications(self, tmp_path):
+        findings = self._findings(tmp_path)
+        entries = [BaselineEntry(f.rule, f.path, f.symbol or f.message,
+                                 "accepted: fixture") for f in findings]
+        merged = update_baseline(findings, entries)
+        assert [e.justification for e in merged] == ["accepted: fixture"]
+
+    def test_roundtrip(self, tmp_path):
+        entries = [BaselineEntry("r", "p.py", "s", "because")]
+        path = tmp_path / "baseline.json"
+        save_baseline(path, entries)
+        assert load_baseline(path) == entries
+        data = json.loads(path.read_text())
+        assert data["version"] == 1
+
+    def test_fingerprint_survives_line_drift(self, tmp_path):
+        before = self._findings(tmp_path)
+        after = lint(tmp_path, """\
+            import numpy as np
+
+            # a comment pushing everything down
+
+
+            def build(n):
+                return np.arange(n)
+            """)
+        assert before[0].line != after[0].line
+        assert before[0].fingerprint == after[0].fingerprint
+
+
+# ---------------------------------------------------------------------------
+# CLI contract: synthetic bugs fail the gate naming rule, file, line
+# ---------------------------------------------------------------------------
+
+SYNTHETIC_BUGS = {
+    "cache-key-fields": dc("""\
+        class Cfg:
+            channels: int
+            new_knob: int
+
+            def geometry_key(self):
+                return (self.channels,)
+        """),
+    "jit-tracer-branch": """\
+        import jax
+
+
+        @jax.jit
+        def f(x):
+            if x > 0:
+                return x
+            return -x
+        """,
+    "jit-tracer-concretize": """\
+        import jax
+
+
+        @jax.jit
+        def f(x):
+            return float(x)
+        """,
+    "nondeterministic-order": """\
+        def f(items):
+            return [x for x in set(items)]
+        """,
+    "dtype-drift": """\
+        import numpy as np
+        a = np.zeros(8)
+        """,
+    "quarantine-import": """\
+        from repro.models.config import ModelConfig
+        """,
+}
+
+TMP_CFG = """\
+[analysis]
+exclude =
+quarantine =
+    repro.models
+    repro.train
+kernels_root = kernels
+kernel_tests = tests/test_kernels.py
+dtype_scope =
+    core
+"""
+
+
+def run_cli(root, *paths):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(SRC) + os.pathsep + env.get("PYTHONPATH", "")
+    return subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "--root", str(root),
+         *(paths or ("core",))],
+        capture_output=True, text=True, env=env, cwd=root)
+
+
+@pytest.mark.parametrize("rule", sorted(SYNTHETIC_BUGS))
+def test_cli_fails_on_synthetic_bug(tmp_path, rule):
+    (tmp_path / "analysis.cfg").write_text(TMP_CFG)
+    mod = tmp_path / "core" / "mod.py"
+    mod.parent.mkdir()
+    mod.write_text(textwrap.dedent(SYNTHETIC_BUGS[rule]))
+    proc = run_cli(tmp_path)
+    assert proc.returncode == 1, proc.stdout + proc.stderr
+    # the finding must name rule, file, and line: "core/mod.py:N: ..[rule]"
+    hit = [ln for ln in proc.stdout.splitlines()
+           if f"[{rule}]" in ln and "core/mod.py:" in ln]
+    assert hit, proc.stdout
+    line_no = int(hit[0].split("core/mod.py:")[1].split(":")[0])
+    assert line_no >= 1
+
+
+def test_cli_kernel_parity_synthetic_bug(tmp_path):
+    (tmp_path / "analysis.cfg").write_text(TMP_CFG)
+    k = tmp_path / "kernels" / "scan" / "kernel.py"
+    k.parent.mkdir(parents=True)
+    k.write_text(textwrap.dedent(KERNEL))
+    proc = run_cli(tmp_path, "kernels")
+    assert proc.returncode == 1
+    assert "[kernel-parity]" in proc.stdout
+    assert "kernels/scan/kernel.py:" in proc.stdout
+
+
+def test_cli_clean_tree_exits_zero(tmp_path):
+    (tmp_path / "analysis.cfg").write_text(TMP_CFG)
+    mod = tmp_path / "core" / "mod.py"
+    mod.parent.mkdir()
+    mod.write_text("import numpy as np\na = np.zeros(8, dtype=np.float64)\n")
+    proc = run_cli(tmp_path)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+def test_repo_head_passes_the_gate():
+    """The committed tree + committed baseline must be green — this is
+    the same invocation the CI analysis job runs."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(SRC) + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "src/repro"],
+        capture_output=True, text=True, env=env, cwd=REPO_ROOT)
+    assert proc.returncode == 0, proc.stdout + proc.stderr

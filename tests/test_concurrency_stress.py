@@ -1,0 +1,257 @@
+"""Race instrumentation (`repro.analysis.locks`) unit tests plus the
+lock-instrumented concurrency stress: 8 threads hammering one
+``SimSession`` / one ``Sweeper`` / one ``SimService`` with mixed cases
+under ``REPRO_ANALYSIS_LOCKS=1``, asserting zero recorded hazards and
+bit-identical results versus serial execution.
+
+``REPRO_STRESS_ITERS`` multiplies the per-thread iteration count
+(nightly CI runs at 10x).
+"""
+
+import os
+import threading
+from concurrent.futures import ThreadPoolExecutor
+
+import pytest
+
+from repro.analysis import locks
+from repro.graphs.corpus import load_graph_binary, save_graph_binary
+from repro.graphs.generators import rmat
+from repro.sim.session import SimSession
+from repro.sim.sweep import Sweeper, SweepCase
+from repro.serve.engine import DONE, SimService
+
+THREADS = 8
+ITERS = max(1, int(os.environ.get("REPRO_STRESS_ITERS", "1")))
+
+
+@pytest.fixture(autouse=True)
+def _instrumented(monkeypatch):
+    monkeypatch.setenv(locks.ENV_FLAG, "1")
+    locks.reset()
+    yield
+    locks.reset()
+
+
+# ---------------------------------------------------------------------------
+# locks.py unit tests
+# ---------------------------------------------------------------------------
+
+class TestTrackedLock:
+    def test_basic_mutex_semantics(self):
+        lk = locks.make_lock("a")
+        with lk:
+            assert lk.locked() and lk.held_by_current_thread()
+        assert not lk.locked()
+        locks.assert_clean()
+
+    def test_lock_order_inversion_detected(self):
+        a, b = locks.make_lock("outer"), locks.make_lock("inner")
+        with a:
+            with b:
+                pass
+        with b:
+            with a:
+                pass
+        kinds = [f.kind for f in locks.findings()]
+        assert "lock-order-inversion" in kinds
+
+    def test_consistent_order_is_clean(self):
+        a, b = locks.make_lock("outer"), locks.make_lock("inner")
+        for _ in range(3):
+            with a:
+                with b:
+                    pass
+        locks.assert_clean()
+
+    def test_nested_same_role_detected(self):
+        a, b = locks.make_lock("session"), locks.make_lock("session")
+        with a:
+            with b:
+                pass
+        kinds = [f.kind for f in locks.findings()]
+        assert "nested-same-role" in kinds
+
+    def test_reacquire_detected_without_deadlock(self):
+        lk = locks.make_lock("a")
+        lk.acquire()
+        # record-then-block: probe the registry from a helper thread
+        # after a non-blocking re-acquire attempt on this thread
+        assert not lk.acquire(blocking=False)
+        lk.release()
+        kinds = [f.kind for f in locks.findings()]
+        assert "reacquire" in kinds
+
+    def test_disabled_records_nothing(self, monkeypatch):
+        monkeypatch.setenv(locks.ENV_FLAG, "0")
+        a, b = locks.make_lock("x"), locks.make_lock("y")
+        with a:
+            with b:
+                pass
+        with b:
+            with a:
+                pass
+        assert locks.findings() == []
+
+
+class TestGuardedDict:
+    def test_guarded_access_clean(self):
+        lk = locks.make_lock("g")
+        d = locks.make_dict("d", lk)
+        with lk:
+            d["k"] = 1
+            assert d.get("k") == 1
+            assert "k" in d and len(d) == 1
+        locks.assert_clean()
+
+    def test_unguarded_write_detected(self):
+        d = locks.make_dict("d", locks.make_lock("g"))
+        d["k"] = 1
+        kinds = [f.kind for f in locks.findings()]
+        assert kinds == ["unguarded-access"]
+        assert "d" in locks.findings()[0].detail
+
+    def test_unguarded_read_detected(self):
+        lk = locks.make_lock("g")
+        d = locks.make_dict("d", lk)
+        with lk:
+            d["k"] = 1
+        d.get("k")
+        assert [f.kind for f in locks.findings()] == ["unguarded-access"]
+
+    def test_guard_held_by_other_thread_detected(self):
+        lk = locks.make_lock("g")
+        d = locks.make_dict("d", lk)
+        lk.acquire()
+        t = threading.Thread(target=lambda: d.get("k"))
+        t.start()
+        t.join()
+        lk.release()
+        assert [f.kind for f in locks.findings()] == ["unguarded-access"]
+
+
+class TestWitnessWrite:
+    def test_serial_writes_clean(self, tmp_path):
+        with locks.witness_write(tmp_path / "f"):
+            pass
+        with locks.witness_write(tmp_path / "f"):
+            pass
+        locks.assert_clean()
+
+    def test_concurrent_same_path_detected(self, tmp_path):
+        enter = threading.Barrier(2)
+
+        def writer():
+            with locks.witness_write(tmp_path / "f"):
+                enter.wait(timeout=10)
+
+        ts = [threading.Thread(target=writer) for _ in range(2)]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join()
+        assert [f.kind for f in locks.findings()] == ["concurrent-write"]
+
+
+# ---------------------------------------------------------------------------
+# instrumented stress: SimSession / Sweeper / corpus store / SimService
+# ---------------------------------------------------------------------------
+
+def _mixed_cases():
+    """A case mix that exercises every single-flight cache: shared
+    algorithm runs, distinct memory/cache variants, both accelerators."""
+    out = []
+    for problem in ("pr", "bfs", "spmv"):
+        for memory, cache in (("ddr4", None),
+                              ("ddr4", "vertex-64k"),
+                              ("hbm2", None)):
+            out.append(dict(problem=problem, accelerator="hitgraph",
+                            memory=memory, cache=cache))
+    return out
+
+
+def _report_key(report):
+    """Canonical, bit-exact identity of one simulation result."""
+    return (report.system, report.problem, report.runtime_ns,
+            report.iterations, report.total_requests, report.total_bytes,
+            report.row_hit_rate, report.cache_lookups, report.cache_hits)
+
+
+class TestSessionStress:
+    def test_eight_threads_bit_identical_to_serial(self):
+        cases = _mixed_cases() * ITERS
+
+        serial = SimSession("karate")
+        expect = [_report_key(serial.run(**c)) for c in cases]
+
+        shared = SimSession("karate")
+        with ThreadPoolExecutor(THREADS) as pool:
+            got = list(pool.map(
+                lambda c: _report_key(shared.run(**c)), cases))
+
+        assert got == expect
+        locks.assert_clean()
+        # the mixed case set must actually share work across threads
+        assert shared.algo_cache_hits > 0
+
+    def test_sweeper_workers_match_serial(self):
+        cases = [SweepCase("karate", p, memory=m)
+                 for p in ("pr", "wcc") for m in ("ddr4", "hbm2")
+                 for _ in range(ITERS)]
+        serial_rows = Sweeper(workers=1).run(cases)
+        threaded_rows = Sweeper(workers=THREADS).run(cases)
+
+        def strip(row):
+            d = row.as_dict()
+            d.pop("wall_s")
+            return d
+
+        assert list(map(strip, threaded_rows)) == \
+            list(map(strip, serial_rows))
+        locks.assert_clean()
+
+
+class TestCorpusStoreStress:
+    def test_parallel_saves_one_path_no_tmp_collision(self, tmp_path):
+        g = rmat(scale=7, avg_degree=6, seed=0)
+        path = tmp_path / "g.bin"
+        start = threading.Barrier(THREADS)
+
+        def save():
+            start.wait(timeout=30)
+            for _ in range(3 * ITERS):
+                save_graph_binary(path, g)
+
+        with ThreadPoolExecutor(THREADS) as pool:
+            for f in [pool.submit(save) for _ in range(THREADS)]:
+                f.result()
+
+        locks.assert_clean()
+        loaded = load_graph_binary(path)
+        assert loaded.n == g.n and loaded.m == g.m
+        assert list(tmp_path.iterdir()) == [path]   # no tmp litter
+
+
+class TestSimServiceStress:
+    def test_concurrent_submitters_fifo_deterministic(self):
+        with SimService() as svc:
+            cases = [[SweepCase("karate", p)] for p in ("pr", "bfs")]
+            with ThreadPoolExecutor(4) as pool:
+                ids = list(pool.map(svc.submit, cases * (2 * ITERS)))
+            rows = [svc.result(i, timeout=300) for i in ids]
+            assert all(svc.poll(i) == DONE for i in ids)
+        # same submission -> bit-identical rows, regardless of timing
+        key = lambda r: _report_key(r[0].report)       # noqa: E731
+        assert key(rows[0]) == key(rows[2])
+        assert key(rows[1]) == key(rows[3])
+        locks.assert_clean()
+
+    def test_failure_isolated_per_job(self):
+        with SimService() as svc:
+            bad = svc.submit([SweepCase("karate", "pr",
+                                        accelerator="no-such")])
+            good = svc.submit([SweepCase("karate", "pr")])
+            with pytest.raises(Exception):
+                svc.result(bad, timeout=300)
+            assert len(svc.result(good, timeout=300)) == 1
+        locks.assert_clean()

@@ -143,7 +143,7 @@ class TestShardingRules:
 
 class TestServeEngine:
     def test_generate_batch(self):
-        from repro.serve.engine import Request, generate
+        from repro.models.lm_engine import Request, generate
         cfg = get_config("qwen3_0_6b", smoke=True)
         params = M.init_params(jax.random.PRNGKey(0), cfg)
         rng = np.random.default_rng(0)
