@@ -1,11 +1,14 @@
-"""CI benchmark regression gate for the sweep-throughput trajectory.
+"""CI benchmark regression gate for append-style benchmark trajectories.
 
 ``benchmarks/run.py --only sweep`` appends one row (date, scale,
-``<variant>_cases_per_sec``) to ``BENCH_sweep.json``; this script
-compares the row the current run just appended against the **last
-committed** row with a comparable configuration (same ``scale`` and
-``workers`` — cross-scale comparisons are meaningless) and fails if a
-tracked figure dropped more than ``--threshold`` (default 25%).
+``<variant>_cases_per_sec``) to ``BENCH_sweep.json`` (and ``--only
+service`` to ``BENCH_service.json``); this script compares the row the
+current run just appended against the **last committed** row with a
+comparable configuration (same ``scale`` and ``workers`` — cross-scale
+comparisons are meaningless) and fails if a tracked figure dropped more
+than ``--threshold`` (default 25%).  ``--keys`` selects which
+higher-is-better figures are gated (default: the sweep-throughput
+pair).
 
 Usage (CI)::
 
@@ -14,6 +17,12 @@ Usage (CI)::
     python benchmarks/check_regression.py \
         --current BENCH_sweep.json --baseline committed_sweep.json \
         --trend-out sweep_trend.json
+
+    git show HEAD:BENCH_service.json > committed_service.json
+    python benchmarks/run.py --only service --scale 0.002 ...
+    python benchmarks/check_regression.py \
+        --current BENCH_service.json --baseline committed_service.json \
+        --keys clean_cases_per_sec --trend-out service_trend.json
 
 No comparable committed row (first run at a new scale, empty history)
 passes with a note — the gate guards *regressions*, it does not block
@@ -28,8 +37,9 @@ import json
 import sys
 from pathlib import Path
 
-#: the gated figures (the issue-tracked warm + batched throughputs);
-#: other per-variant figures are reported but not gated.
+#: the default gated figures (the issue-tracked warm + batched sweep
+#: throughputs); other per-variant figures are reported but not gated.
+#: Override per-trajectory with ``--keys`` (e.g. the service gate).
 GATED_KEYS = ("warm_cases_per_sec", "batched_timing_cases_per_sec")
 
 
@@ -66,7 +76,13 @@ def main(argv=None) -> int:
                     help="max allowed fractional drop (0.25 = 25%%)")
     ap.add_argument("--trend-out", default=None,
                     help="write history + verdict JSON here (artifact)")
+    ap.add_argument("--keys", default=None,
+                    help="comma list of gated higher-is-better row keys "
+                         f"(default: {','.join(GATED_KEYS)})")
     args = ap.parse_args(argv)
+    gated_keys = (tuple(k.strip() for k in args.keys.split(",")
+                        if k.strip())
+                  if args.keys else GATED_KEYS)
 
     current_rows = load_rows(Path(args.current))
     if not current_rows:
@@ -91,7 +107,7 @@ def main(argv=None) -> int:
     else:
         ref = refs[-1]
         verdict["ref"] = ref
-        for key in GATED_KEYS:
+        for key in gated_keys:
             got, want = row.get(key), ref.get(key)
             if got is None or want is None:
                 continue
@@ -106,7 +122,7 @@ def main(argv=None) -> int:
                   f"(floor {floor:.2f}) -> {status}")
             if not ok:
                 verdict["ok"] = False
-                print(f"::error::sweep throughput regression: {key} "
+                print(f"::error::benchmark regression: {key} "
                       f"dropped {100 * (1 - got / want):.1f}% "
                       f"(> {args.threshold:.0%} allowed) vs the last "
                       f"committed row")
@@ -116,9 +132,9 @@ def main(argv=None) -> int:
             # rather than silently disarming the gate forever
             verdict["ok"] = False
             print(f"::error::comparable committed row found but none "
-                  f"of the gated keys {GATED_KEYS} are present in "
+                  f"of the gated keys {gated_keys} are present in "
                   "both rows — the trajectory schema drifted; update "
-                  "GATED_KEYS or fix append_sweep_trajectory")
+                  "--keys/GATED_KEYS or fix the trajectory appender")
 
     if args.trend_out:
         Path(args.trend_out).write_text(json.dumps(

@@ -23,6 +23,7 @@ from pathlib import Path
 
 REPO_ROOT = Path(__file__).resolve().parent.parent
 BENCH_SWEEP_PATH = REPO_ROOT / "BENCH_sweep.json"
+BENCH_SERVICE_PATH = REPO_ROOT / "BENCH_service.json"
 
 
 def append_sweep_trajectory(sweep_rows, scale: float,
@@ -57,12 +58,50 @@ def append_sweep_trajectory(sweep_rows, scale: float,
     return entry
 
 
+def append_service_trajectory(service_rows, scale: float,
+                              path: Path = BENCH_SERVICE_PATH) -> dict:
+    """Append one {date, scale, <variant>_cases_per_sec / latency /
+    recovery counters} row to ``BENCH_service.json`` (same append-style
+    trajectory + host tagging as the sweep figure; the CI gate compares
+    ``clean_cases_per_sec`` like-for-like)."""
+    entry = {
+        "date": datetime.date.today().isoformat(),
+        "scale": scale,
+    }
+    host = os.environ.get("REPRO_BENCH_HOST")
+    if host:
+        entry["host"] = host
+    for r in service_rows:
+        if r.get("bench") != "service":
+            continue
+        v = r["variant"]
+        entry[f"{v}_cases_per_sec"] = round(r["cases_per_sec"], 3)
+        entry[f"{v}_latency_p50_ms"] = round(r["latency_p50_ms"], 1)
+        entry[f"{v}_latency_p99_ms"] = round(r["latency_p99_ms"], 1)
+        entry.setdefault("workers", r.get("workers"))
+        if v == "faulted":
+            for k in ("shed", "retries", "quarantined",
+                      "worker_crashes", "injected"):
+                if k in r:
+                    entry[f"faulted_{k}"] = r[k]
+    history = []
+    if path.exists():
+        try:
+            history = json.loads(path.read_text())
+        except json.JSONDecodeError:
+            history = []
+    history.append(entry)
+    path.write_text(json.dumps(history, indent=1) + "\n")
+    return entry
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--scale", type=float, default=0.01)
     ap.add_argument("--only", default=None,
                     help="comma list: fig09,fig10,fig11,fig12,fig13,"
-                         "fig02,dram,kernels,sweep,cache,corpus")
+                         "fig02,dram,kernels,sweep,cache,corpus,"
+                         "service")
     ap.add_argument("--json-out", default=None)
     ap.add_argument("--no-trajectory", action="store_true",
                     help="skip appending the sweep row to BENCH_sweep.json")
@@ -73,7 +112,8 @@ def main() -> int:
                             fig02_repro_error, fig09_hitgraph,
                             fig10_accugraph, fig11_degree,
                             fig12_comparability, fig13_optimizations,
-                            kernel_bench, sweep_throughput)
+                            kernel_bench, service_load,
+                            sweep_throughput)
 
     suites = {
         "fig09": lambda: fig09_hitgraph.run(args.scale),
@@ -87,6 +127,7 @@ def main() -> int:
         "sweep": lambda: sweep_throughput.run(args.scale),
         "cache": lambda: cache_hierarchy.run(args.scale),
         "corpus": lambda: corpus_sweep.run(args.scale),
+        "service": lambda: service_load.run(args.scale),
     }
 
     all_rows = []
@@ -121,6 +162,10 @@ def main() -> int:
         entry = append_sweep_trajectory(rows_by_suite["sweep"],
                                         args.scale)
         print(f"# BENCH_sweep.json += {entry}", file=sys.stderr)
+    if "service" in rows_by_suite and not args.no_trajectory:
+        entry = append_service_trajectory(rows_by_suite["service"],
+                                          args.scale)
+        print(f"# BENCH_service.json += {entry}", file=sys.stderr)
     if args.json_out:
         with open(args.json_out, "w") as f:
             json.dump(all_rows, f, indent=1, default=str)

@@ -1,0 +1,175 @@
+"""Service load benchmark: latency envelope under concurrent clients.
+
+Drives one resident :class:`~repro.serve.engine.SimService` with several
+concurrent client threads submitting mixed jobs (different tenants,
+problems, roots, deadlines), twice over:
+
+* ``clean``   — no fault injection; the tracked perf figure is
+  ``cases_per_sec`` (end-to-end through submit/queue/result, so it prices
+  the service layer on top of the raw sweeper throughput).
+* ``faulted`` — the same workload under a deterministic chaos mix
+  (transient prepare/serve faults, read faults, a low worker-crash
+  rate), proving the recovery machinery under load and reporting its
+  cost: retry/shed/quarantine/crash counts ride along in the row.
+
+Both rows carry p50/p99 job latency.  ``benchmarks/run.py --only
+service`` appends the clean row's figures to ``BENCH_service.json`` (the
+trajectory CI gates at 25% via ``check_regression.py --keys
+clean_cases_per_sec``).  When ``REPRO_CHAOS_SITES`` is set the faulted
+pass uses that model instead of the built-in mix (CI's fault-enabled
+smoke path).
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor
+from typing import Dict, List
+
+from benchmarks import common
+from repro.algorithms.common import Problem
+from repro.serve import chaos
+from repro.serve.engine import (AdmissionConfig, AdmissionError,
+                                BreakerConfig, RetryPolicy, ServiceError,
+                                SimService)
+from repro.sim.sweep import SweepCase
+
+CLIENTS = 4
+JOBS_PER_CLIENT = 3
+WORKERS = 2
+
+#: the built-in faulted-pass chaos mix (overridden by REPRO_CHAOS_SITES)
+DEFAULT_FAULT_MIX = {
+    "sweep.prepare": chaos.SiteConfig(rate=0.4, max_attempts=2),
+    "dram.serve": chaos.SiteConfig(rate=0.25, max_attempts=1),
+    "graphstore.read": chaos.SiteConfig(rate=0.5, max_attempts=1),
+    "worker.crash": chaos.SiteConfig(rate=0.1, max_attempts=1,
+                                     crash=True),
+}
+
+
+def _workload(scale: float) -> List[List[SweepCase]]:
+    """A deterministic mixed-job workload: every client submits the same
+    rotation of (problem, root) batches over two dataset stand-ins."""
+    gs = [common.graph(a, scale, undirected=True) for a in ("lj", "yt")]
+    cfgs = [common.comparability_cfgs(a, scale) for a in ("lj", "yt")]
+    batches = []
+    for i in range(CLIENTS * JOBS_PER_CLIENT):
+        g = gs[i % len(gs)]
+        hg_cfg, _ = cfgs[i % len(cfgs)]
+        problem = (Problem.PR, Problem.BFS, Problem.WCC)[i % 3]
+        batches.append([
+            SweepCase(graph=g, problem=problem, accelerator="hitgraph",
+                      config=hg_cfg, root=i % 4,
+                      fixed_iters=2 + i % 3),
+        ])
+    return batches
+
+
+def _drive(svc: SimService, batches: List[List[SweepCase]]) -> Dict:
+    """Concurrent clients: submit, block on result, record latency."""
+    lock = threading.Lock()
+    latencies: List[float] = []
+    outcomes = {"done": 0, "failed": 0, "cancelled": 0, "expired": 0,
+                "shed": 0}
+    totals = {"cases": 0}
+
+    def client(idx: int):
+        my = batches[idx::CLIENTS]
+        for n, cases in enumerate(my):
+            tenant = f"tenant-{idx}"
+            deadline = None if (idx + n) % 3 else 60.0
+            t0 = time.perf_counter()
+            try:
+                job = svc.submit(cases, tenant=tenant,
+                                 deadline=deadline)
+            except AdmissionError:
+                with lock:
+                    outcomes["shed"] += 1
+                continue
+            try:
+                rows = svc.result(job, timeout=240)
+                outcome, n_rows = "done", len(rows)
+            except ServiceError as e:
+                outcome, n_rows = svc.poll(job), len(e.rows)
+            dt = time.perf_counter() - t0
+            with lock:
+                outcomes[outcome] += 1
+                totals["cases"] += n_rows
+                latencies.append(dt)
+
+    t0 = time.perf_counter()
+    with ThreadPoolExecutor(max_workers=CLIENTS) as pool:
+        list(pool.map(client, range(CLIENTS)))
+    wall = time.perf_counter() - t0
+    latencies.sort()
+
+    def pct(p: float) -> float:
+        if not latencies:
+            return 0.0
+        return latencies[min(len(latencies) - 1,
+                             int(p * len(latencies)))]
+
+    return {
+        "wall_s": wall,
+        "jobs": len(latencies),
+        "cases": totals["cases"],
+        "cases_per_sec": totals["cases"] / wall if wall else 0.0,
+        "latency_p50_ms": pct(0.50) * 1e3,
+        "latency_p99_ms": pct(0.99) * 1e3,
+        **outcomes,
+    }
+
+
+def _fault_config(seed: int) -> chaos.ChaosConfig:
+    env_cfg = chaos.config_from_env()
+    if env_cfg is not None:
+        return env_cfg
+    return chaos.ChaosConfig(seed=seed, sites=dict(DEFAULT_FAULT_MIX))
+
+
+def run(scale: float = common.SCALE, seed: int = 0) -> List[Dict]:
+    batches = _workload(scale)
+    retry = RetryPolicy(retries=8, backoff_base_s=0.002,
+                        backoff_cap_s=0.05)
+    admission = AdmissionConfig(max_tenant_jobs=JOBS_PER_CLIENT + 1)
+    rows = []
+
+    # an explicitly empty model, NOT deactivate(): the service arms
+    # REPRO_CHAOS_SITES on init when no model is active, and the clean
+    # pass must stay clean even on CI's fault-enabled smoke path
+    with chaos.scope(chaos.ChaosConfig(seed=0, sites={})):
+        with SimService(workers=WORKERS, retry=retry,
+                        admission=admission) as svc:
+            svc.result(svc.submit(batches[0]), timeout=240)  # warm-up
+            clean = _drive(svc, batches)
+    rows.append({"bench": "service", "variant": "clean",
+                 "workers": WORKERS, "clients": CLIENTS, **clean})
+
+    with chaos.scope(_fault_config(seed)):
+        with SimService(workers=WORKERS, retry=retry,
+                        admission=admission,
+                        breaker=BreakerConfig(threshold=50)) as svc:
+            faulted = _drive(svc, batches)
+            st = svc.service_stats
+            faulted.update(
+                retries=st.retries, quarantined=st.quarantined,
+                worker_crashes=st.worker_crashes,
+                breaker_trips=st.breaker_trips,
+                injected=len(chaos.injected_log()))
+    rows.append({"bench": "service", "variant": "faulted",
+                 "workers": WORKERS, "clients": CLIENTS,
+                 "chaos_seed": seed, **faulted})
+
+    # the harness contract: a faulted smoke that injects nothing proves
+    # nothing — fail loudly instead of passing vacuously
+    assert rows[-1]["injected"] > 0, "chaos injected zero faults"
+    assert rows[-1]["jobs"] + rows[-1]["shed"] \
+        == CLIENTS * JOBS_PER_CLIENT
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -2,8 +2,9 @@
 is what populates :data:`repro.analysis.framework.RULES`."""
 
 from repro.analysis.rules import (cache_keys, determinism, dtype_drift,
-                                  jax_hazards, kernel_parity,
-                                  quarantine)
+                                  exception_hygiene, jax_hazards,
+                                  kernel_parity, quarantine)
 
-__all__ = ["cache_keys", "determinism", "dtype_drift", "jax_hazards",
-           "kernel_parity", "quarantine"]
+__all__ = ["cache_keys", "determinism", "dtype_drift",
+           "exception_hygiene", "jax_hazards", "kernel_parity",
+           "quarantine"]

@@ -11,57 +11,21 @@ knows how to rebuild mesh + shardings for the currently-available device
 count, and resumes the data pipeline purely from the step counter
 (``train/data.py`` is a pure function of (seed, step, shard)).
 
-``StragglerMonitor`` implements the standard detect-and-mitigate policy:
-per-step wall-time EWMA; a step exceeding ``threshold x`` the EWMA is
-recorded, and the policy hook decides (log | re-dispatch | drop-node) —
-on a single host this degrades to bookkeeping, but the interface is the
-one the launcher wires to real health signals.
+:class:`StragglerMonitor` / :class:`StragglerEvent` moved to
+:mod:`repro.serve.chaos`, next to the failure model they belong to (the
+simulation service uses the EWMA for admission-control retry-after
+hints); they are re-exported here so existing imports keep working.
 """
 
 from __future__ import annotations
 
-import dataclasses
 import time
-from typing import Any, Callable, Dict, List, Optional
-
-import jax
-import numpy as np
+from typing import Callable
 
 from repro.distributed import checkpoint as ckpt
-from repro.distributed import sharding as shd
+from repro.serve.chaos import StragglerEvent, StragglerMonitor
 
-
-@dataclasses.dataclass
-class StragglerEvent:
-    step: int
-    duration: float
-    ewma: float
-
-
-class StragglerMonitor:
-    def __init__(self, threshold: float = 3.0, alpha: float = 0.1,
-                 on_straggler: Optional[Callable[[StragglerEvent], None]]
-                 = None):
-        self.threshold = threshold
-        self.alpha = alpha
-        self.ewma: Optional[float] = None
-        self.events: List[StragglerEvent] = []
-        self.on_straggler = on_straggler
-
-    def observe(self, step: int, duration: float) -> bool:
-        is_straggler = (self.ewma is not None
-                        and duration > self.threshold * self.ewma)
-        if is_straggler:
-            ev = StragglerEvent(step, duration, self.ewma)
-            self.events.append(ev)
-            if self.on_straggler:
-                self.on_straggler(ev)
-            # do not poison the EWMA with the outlier
-        else:
-            self.ewma = (duration if self.ewma is None
-                         else (1 - self.alpha) * self.ewma
-                         + self.alpha * duration)
-        return is_straggler
+__all__ = ["StragglerEvent", "StragglerMonitor", "ElasticTrainer"]
 
 
 class ElasticTrainer:

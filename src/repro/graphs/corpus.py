@@ -39,6 +39,7 @@ import numpy as np
 
 from repro.analysis import locks
 from repro.graphs import generators as gen
+from repro.serve import chaos
 from repro.graphs.formats import (Graph, GraphParseError,
                                   load_matrix_market, load_snap_edgelist)
 
@@ -294,8 +295,12 @@ class GraphStore:
         if not path.exists():
             return None
         try:
+            # chaos site: an injected read fault is indistinguishable
+            # from a truncated/corrupt entry and takes the same
+            # rebuild-never-trust path below
+            chaos.maybe_inject("graphstore.read", key)
             return load_graph_binary(path)
-        except (CorpusCacheError, OSError):
+        except (CorpusCacheError, OSError, chaos.InjectedFault):
             return None
 
     def store(self, key: str, g: Graph) -> Optional[Path]:

@@ -1,0 +1,37 @@
+"""``repro.serve`` — the resident simulation-sweep service.
+
+:mod:`repro.serve.engine` is the supervised multi-tenant job engine
+(:class:`SimService`); :mod:`repro.serve.chaos` is the deterministic
+fault-injection layer that proves its recovery paths.  See
+``src/repro/serve/README.md``.
+"""
+
+# Lazy re-exports (PEP 562): ``repro.sim.sweep`` imports the chaos
+# module while ``repro.serve.engine`` imports the sweep engine — eagerly
+# importing engine here would close that loop into a cycle.
+_CHAOS = ("ChaosConfig", "SiteConfig", "InjectedFault", "WorkerCrash",
+          "StragglerMonitor")
+_ENGINE = ("SimService", "SimJob", "ServiceStats", "QUEUED", "RUNNING",
+           "DONE", "FAILED", "CANCELLED", "EXPIRED", "RetryPolicy",
+           "AdmissionConfig", "AdmissionError", "BreakerConfig",
+           "CircuitOpenError", "JobFailed", "JobCancelled", "JobExpired")
+
+
+def __getattr__(name):
+    import importlib
+    if name in _CHAOS:
+        return getattr(importlib.import_module("repro.serve.chaos"), name)
+    if name in _ENGINE:
+        return getattr(importlib.import_module("repro.serve.engine"),
+                       name)
+    raise AttributeError(f"module 'repro.serve' has no attribute {name!r}")
+
+
+__all__ = [
+    "SimService", "SimJob", "ServiceStats",
+    "QUEUED", "RUNNING", "DONE", "FAILED", "CANCELLED", "EXPIRED",
+    "RetryPolicy", "AdmissionConfig", "AdmissionError", "BreakerConfig",
+    "CircuitOpenError", "JobFailed", "JobCancelled", "JobExpired",
+    "ChaosConfig", "SiteConfig", "InjectedFault", "WorkerCrash",
+    "StragglerMonitor",
+]

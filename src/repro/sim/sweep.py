@@ -51,6 +51,7 @@ from repro.sim.memory import (CacheLike, MemoryLike, cache_name,
                               memory_name, resolve_cache, resolve_memory)
 from repro.sim.registry import get_accelerator
 from repro.sim.session import SimSession, _coerce_problem
+from repro.serve import chaos
 
 
 @dataclasses.dataclass(frozen=True)
@@ -84,6 +85,31 @@ class SweepCase:
             self, "graph",
             resolve_graph(self.graph, scale=self.graph_scale,
                           seed=self.graph_seed))
+
+
+def case_chaos_key(case: "SweepCase") -> str:
+    """Stable identity of one grid point, used for deterministic fault
+    injection and supervisor crash attribution: everything that *names*
+    the case, nothing that depends on object identity or scheduling."""
+    return "|".join((case.graph.fingerprint, case.problem.value,
+                     case.accelerator, memory_name(case.memory),
+                     cache_name(case.cache), case.variant or "baseline",
+                     str(case.root), str(case.fixed_iters)))
+
+
+class SweepInterrupted(RuntimeError):
+    """A sweep stopped cooperatively at a case boundary (client cancel,
+    deadline expiry, service shutdown).  ``rows`` is the input-aligned
+    row list at the moment of interruption — completed cases carry their
+    :class:`SweepRow`, unserved ones ``None`` — so callers keep the
+    partial results."""
+
+    def __init__(self, reason: str, rows: Sequence[Optional["SweepRow"]]):
+        self.reason = reason
+        self.rows = list(rows)
+        done = sum(r is not None for r in self.rows)
+        super().__init__(f"sweep interrupted ({reason}) after "
+                         f"{done}/{len(self.rows)} cases")
 
 
 class SweepError(RuntimeError):
@@ -205,12 +231,15 @@ class Sweeper:
         s.pack_cache_misses = sum(
             x.pack_cache_misses for x in sessions)
 
-    def run_case(self, case: SweepCase) -> SweepRow:
+    def run_case(self, case: SweepCase,
+                 backend: Optional[str] = None) -> SweepRow:
+        chaos.maybe_inject("dram.serve", case_chaos_key(case))
         sess = self._session(case.graph)
         t0 = time.perf_counter()
         report = sess.run(
             case.problem, case.accelerator, config=case.config,
-            memory=case.memory, cache=case.cache, backend=self.backend,
+            memory=case.memory, cache=case.cache,
+            backend=self.backend if backend is None else backend,
             variant=case.variant, root=case.root,
             fixed_iters=case.fixed_iters)
         wall = time.perf_counter() - t0
@@ -232,23 +261,45 @@ class Sweeper:
         except Exception as e:
             raise SweepError(index, case, e) from e
 
-    def run(self, cases: Sequence[SweepCase]) -> List[SweepRow]:
+    @staticmethod
+    def _check_control(control, rows) -> None:
+        """Cooperative cancellation checkpoint: ``control`` (a callable
+        returning ``None`` to continue or a reason string to stop) is
+        polled at every case boundary; tripping raises
+        :class:`SweepInterrupted` carrying the rows completed so far."""
+        if control is None:
+            return
+        reason = control()
+        if reason:
+            raise SweepInterrupted(reason, rows)
+
+    def run(self, cases: Sequence[SweepCase], *, control=None,
+            backend: Optional[str] = None) -> List[SweepRow]:
         """Run all cases; rows come back in input order, but execution is
-        grouped by (accelerator, graph) for scan/model reuse."""
+        grouped by (accelerator, graph) for scan/model reuse.
+
+        ``control`` is an optional cancellation probe checked between
+        cases (see :meth:`_check_control`); ``backend`` overrides the
+        sweeper's backend for this run only (the service's degraded-
+        fidelity arm forces ``"vectorized"`` without rebuilding the
+        resident sweeper)."""
         cases = list(cases)
-        if self.backend in (None, "vectorized"):
+        backend = self.backend if backend is None else backend
+        if backend in (None, "vectorized"):
             if self.batch_memories:
-                rows = self._run_batched(cases)
+                rows = self._run_batched(cases, control)
             else:
-                rows = self._run_pipelined(cases)
+                rows = self._run_pipelined(cases, control)
         else:
             order = sorted(
                 range(len(cases)),
                 key=lambda i: (cases[i].accelerator, cases[i].graph.fingerprint))
             rows = [None] * len(cases)
             for i in order:
-                rows[i] = self._guard(i, cases[i],
-                                      lambda: self.run_case(cases[i]))
+                self._check_control(control, rows)
+                rows[i] = self._guard(
+                    i, cases[i],
+                    lambda: self.run_case(cases[i], backend=backend))
         self._sync_stats()
         return rows
 
@@ -259,6 +310,9 @@ class Sweeper:
         every expensive product goes through the session's single-flight
         caches, and the (cache-filtered) packed program comes from the
         geometry-keyed pack cache."""
+        key = case_chaos_key(case)
+        chaos.maybe_inject("worker.crash", key)
+        chaos.maybe_inject("sweep.prepare", key)
         sess = self._session(case.graph)
         spec = get_accelerator(case.accelerator)
         cfg = spec.make_config(case.config,
@@ -280,7 +334,8 @@ class Sweeper:
             root=case.root, fixed_iters=case.fixed_iters)
         return model, run, packed, cstats, dram
 
-    def _run_pipelined(self, cases: Sequence[SweepCase]) -> List[SweepRow]:
+    def _run_pipelined(self, cases: Sequence[SweepCase],
+                       control=None) -> List[SweepRow]:
         """Sharded per-case execution: ``workers`` threads prepare cases
         (algorithm run + trace build + pack — XLA and NumPy release the
         GIL for the heavy parts) while this thread serves the fused scans
@@ -310,30 +365,46 @@ class Sweeper:
             # up in memory ahead of the serving loop
             for _ in range(self.workers + 2):
                 submit_next()
-            while pending:
-                i, fut = pending.popleft()
-                prepped, prep_s = fut.result()
-                submit_next()
-                case = cases[i]
-                if prepped is None:
-                    rows[i] = self._guard(i, case,
-                                          lambda: self.run_case(case))
-                    continue
-                self.stats.cases += 1
-                model, run_, packed, cstats, dram = prepped
-                t0 = time.perf_counter()
-                if packed is None:
-                    stats = ProgramStats([], 0, 0, 0, 0)
-                else:
-                    stats, _ = serve_packed(
-                        packed, timing=vec.timing_params(dram.timing))
-                stats.attach_cache(cstats)
-                rows[i] = SweepRow(
-                    case, model.make_report(case.problem, run_, stats),
-                    prep_s + time.perf_counter() - t0)
+            try:
+                while pending:
+                    self._check_control(control, rows)
+                    i, fut = pending.popleft()
+                    prepped, prep_s = fut.result()
+                    submit_next()
+                    case = cases[i]
+                    if prepped is None:
+                        rows[i] = self._guard(
+                            i, case, lambda: self.run_case(case))
+                        continue
+                    self.stats.cases += 1
+                    model, run_, packed, cstats, dram = prepped
+                    t0 = time.perf_counter()
+
+                    def _serve():
+                        chaos.maybe_inject("dram.serve",
+                                           case_chaos_key(case))
+                        if packed is None:
+                            return ProgramStats([], 0, 0, 0, 0)
+                        s, _ = serve_packed(
+                            packed,
+                            timing=vec.timing_params(dram.timing))
+                        return s
+                    stats = self._guard(i, case, _serve)
+                    stats.attach_cache(cstats)
+                    rows[i] = SweepRow(
+                        case,
+                        model.make_report(case.problem, run_, stats),
+                        prep_s + time.perf_counter() - t0)
+            except BaseException:
+                # stop at this case boundary: drop queued preps (running
+                # ones finish under the executor's exit) and let the
+                # interruption/error propagate with the rows so far
+                pool.shutdown(wait=False, cancel_futures=True)
+                raise
         return rows
 
-    def _run_batched(self, cases: Sequence[SweepCase]) -> List[SweepRow]:
+    def _run_batched(self, cases: Sequence[SweepCase],
+                     control=None) -> List[SweepRow]:
         rows: List[Optional[SweepRow]] = [None] * len(cases)
 
         def prep(i):
@@ -342,6 +413,7 @@ class Sweeper:
                               lambda: self._prepare_case(cases[i]))
             return out, time.perf_counter() - t0
 
+        self._check_control(control, rows)
         with ThreadPoolExecutor(max_workers=self.workers) as pool:
             preps = list(pool.map(prep, range(len(cases))))
         groups = defaultdict(list)
@@ -400,10 +472,12 @@ class Sweeper:
         self.stats.batch_dispatches += len(group_items)
         self.stats.batched_cases += sum(len(g) for g in group_items)
         if self.workers > 1 and len(group_items) > 1:
+            self._check_control(control, rows)
             with ThreadPoolExecutor(max_workers=self.workers) as pool:
                 list(pool.map(serve_group, group_items))
         else:
             for items in group_items:
+                self._check_control(control, rows)
                 serve_group(items)
         return rows
 

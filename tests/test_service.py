@@ -1,0 +1,268 @@
+"""SimService lifecycle, concurrency, and admission-control tests.
+
+Covers the fault-free contract: the job state machine
+(QUEUED -> RUNNING -> DONE | FAILED | CANCELLED | EXPIRED), concurrent
+submit/poll/result, deterministic FIFO result ordering, close/cancel/
+timeout edges, fresh-``JobFailed`` re-raise semantics, and the
+admission-control budgets (quota shed, cost shed, degraded arm).  The
+fault-injection recovery paths live in ``test_service_faults.py``.
+"""
+
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor
+
+import pytest
+
+from repro.serve.engine import (CANCELLED, DONE, EXPIRED, FAILED, QUEUED,
+                                RUNNING, TERMINAL, AdmissionConfig,
+                                AdmissionError, JobCancelled, JobExpired,
+                                JobFailed, RetryPolicy, SimService)
+from repro.sim.sweep import SweepCase, Sweeper
+
+CASES = [SweepCase("karate", "pr"), SweepCase("karate", "bfs"),
+         SweepCase("karate", "sssp")]
+
+FAST_RETRY = RetryPolicy(retries=2, backoff_base_s=0.001,
+                         backoff_cap_s=0.01)
+
+
+@pytest.fixture()
+def svc():
+    s = SimService(workers=2, retry=FAST_RETRY)
+    yield s
+    s.close()
+
+
+# ---------------------------------------------------------------------------
+# lifecycle state machine
+# ---------------------------------------------------------------------------
+
+class TestLifecycle:
+    def test_submit_runs_to_done(self, svc):
+        job = svc.submit(list(CASES))
+        rows = svc.result(job, timeout=120)
+        assert svc.poll(job) == DONE
+        assert [r.case.problem.value for r in rows] == \
+            [c.problem.value for c in CASES]
+        info = svc.info(job)
+        assert info["rows_done"] == len(CASES)
+        assert info["quarantined"] == []
+        assert svc.service_stats.done == 1
+
+    def test_states_are_disjoint_and_terminal_is_terminal(self, svc):
+        assert TERMINAL == {DONE, FAILED, CANCELLED, EXPIRED}
+        assert QUEUED not in TERMINAL and RUNNING not in TERMINAL
+        job = svc.submit([SweepCase("karate", "pr")])
+        svc.result(job, timeout=120)
+        # terminal states reject transitions: cancel is a no-op
+        assert svc.cancel(job) is False
+        assert svc.poll(job) == DONE
+
+    def test_failed_job_raises_fresh_jobfailed_with_cause(self, svc):
+        job = svc.submit([SweepCase("karate", "pr",
+                                    accelerator="no-such-accel")])
+        with pytest.raises(JobFailed) as e1:
+            svc.result(job, timeout=120)
+        with pytest.raises(JobFailed) as e2:
+            svc.result(job, timeout=5)
+        assert svc.poll(job) == FAILED
+        # fresh instance per call, cause chained — never the shared
+        # worker-side object re-raised (that would splice tracebacks)
+        assert e1.value is not e2.value
+        assert e1.value.__cause__ is e2.value.__cause__
+        assert e1.value.__cause__ is not None
+        assert isinstance(e1.value, Exception)   # catchable narrowly
+
+    def test_partial_failure_keeps_surviving_rows(self, svc):
+        cases = [SweepCase("karate", "pr"),
+                 SweepCase("karate", "pr", accelerator="no-such-accel"),
+                 SweepCase("karate", "bfs")]
+        job = svc.submit(cases)
+        with pytest.raises(JobFailed) as exc:
+            svc.result(job, timeout=120)
+        assert [r.case.problem.value for r in exc.value.rows] == \
+            ["pr", "bfs"]
+        assert svc.info(job)["quarantined"] == [1]
+        assert svc.partial_rows(job) == exc.value.rows
+
+    def test_deadline_expires_job(self, svc):
+        job = svc.submit(list(CASES), deadline=0.0)
+        with pytest.raises(JobExpired):
+            svc.result(job, timeout=120)
+        assert svc.poll(job) == EXPIRED
+        assert svc.service_stats.expired == 1
+
+    def test_result_timeout_raises_timeouterror(self, svc):
+        job = svc.submit([SweepCase("karate", "pr")
+                          for _ in range(8)])
+        with pytest.raises(TimeoutError):
+            svc.result(job, timeout=0.0)
+        assert svc.result(job, timeout=120)   # then completes normally
+
+    def test_unknown_job_id(self, svc):
+        with pytest.raises(KeyError):
+            svc.poll(12345)
+
+
+# ---------------------------------------------------------------------------
+# cancel / close edges
+# ---------------------------------------------------------------------------
+
+class TestCancelClose:
+    def test_cancel_queued_job_is_immediate(self):
+        with SimService(workers=1, retry=FAST_RETRY) as svc:
+            hog = svc.submit([SweepCase("karate", "pr")
+                              for _ in range(4)])
+            victim = svc.submit([SweepCase("karate", "bfs")])
+            assert svc.cancel(victim) is True
+            assert svc.poll(victim) == CANCELLED
+            with pytest.raises(JobCancelled):
+                svc.result(victim, timeout=5)
+            assert len(svc.result(hog, timeout=120)) == 4
+
+    def test_cancel_running_job_keeps_partial_rows(self):
+        with SimService(workers=1, retry=FAST_RETRY) as svc:
+            job = svc.submit([SweepCase("karate", "pr")
+                              for _ in range(6)])
+            # wait for it to actually start, then cancel mid-flight
+            while svc.poll(job) == QUEUED:
+                time.sleep(0.001)
+            svc.cancel(job)
+            with pytest.raises(JobCancelled) as exc:
+                svc.result(job, timeout=120)
+            assert svc.poll(job) == CANCELLED
+            assert len(exc.value.rows) < 6
+
+    def test_close_fails_queued_jobs_instead_of_stranding(self):
+        svc = SimService(workers=1, retry=FAST_RETRY)
+        jobs = [svc.submit([SweepCase("karate", "pr")])
+                for _ in range(5)]
+        svc.close(timeout=120)
+        for j in jobs:
+            assert svc.poll(j) in TERMINAL
+        # none may be left QUEUED/RUNNING, and result() must not block
+        cancelled = 0
+        for j in jobs:
+            try:
+                svc.result(j, timeout=1)
+            except JobCancelled:
+                cancelled += 1
+        assert cancelled >= 1               # the still-queued tail
+
+    def test_submit_after_close_raises(self):
+        svc = SimService(workers=1, retry=FAST_RETRY)
+        svc.close()
+        with pytest.raises(RuntimeError):
+            svc.submit([SweepCase("karate", "pr")])
+
+    def test_close_is_idempotent_and_context_manager(self):
+        svc = SimService(workers=1, retry=FAST_RETRY)
+        svc.close()
+        svc.close()
+        with SimService(workers=1, retry=FAST_RETRY) as s2:
+            assert s2.result(s2.submit([SweepCase("karate", "pr")]),
+                             timeout=120)
+
+
+# ---------------------------------------------------------------------------
+# concurrency + determinism
+# ---------------------------------------------------------------------------
+
+class TestConcurrency:
+    def test_concurrent_submit_poll_result(self, svc):
+        def client(i):
+            job = svc.submit([CASES[i % len(CASES)]])
+            while svc.poll(job) not in TERMINAL:
+                time.sleep(0.001)
+            return svc.result(job, timeout=120)[0]
+
+        with ThreadPoolExecutor(max_workers=8) as pool:
+            rows = list(pool.map(client, range(16)))
+        assert [r.case.problem.value for r in rows] == \
+            [CASES[i % len(CASES)].problem.value for i in range(16)]
+        assert svc.service_stats.done == 16
+
+    def test_results_bit_identical_to_direct_sweeper(self, svc):
+        job = svc.submit(list(CASES))
+        got = svc.result(job, timeout=120)
+        want = Sweeper(workers=1).run(list(CASES))
+        assert [(r.report.runtime_ns, r.report.total_bytes,
+                 r.report.row_hit_rate) for r in got] == \
+            [(r.report.runtime_ns, r.report.total_bytes,
+              r.report.row_hit_rate) for r in want]
+
+    def test_many_threads_share_one_terminal_event(self, svc):
+        job = svc.submit(list(CASES))
+        out = []
+        threads = [threading.Thread(
+            target=lambda: out.append(len(svc.result(job, timeout=120))))
+            for _ in range(6)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert out == [len(CASES)] * 6
+
+
+# ---------------------------------------------------------------------------
+# admission control
+# ---------------------------------------------------------------------------
+
+class TestAdmission:
+    def test_tenant_quota_sheds_with_retry_after(self):
+        with SimService(workers=1, retry=FAST_RETRY,
+                        admission=AdmissionConfig(max_tenant_jobs=1)) \
+                as svc:
+            first = svc.submit([SweepCase("karate", "pr")
+                                for _ in range(3)], tenant="t")
+            with pytest.raises(AdmissionError) as exc:
+                svc.submit([SweepCase("karate", "pr")], tenant="t")
+            assert exc.value.retry_after > 0
+            # other tenants are not starved by t's quota
+            other = svc.submit([SweepCase("karate", "bfs")],
+                               tenant="other")
+            svc.result(first, timeout=120)
+            svc.result(other, timeout=120)
+            assert svc.service_stats.shed == 1
+            # quota frees after the job finishes
+            svc.result(svc.submit([SweepCase("karate", "pr")],
+                                  tenant="t"), timeout=120)
+
+    def test_global_quota_sheds(self):
+        with SimService(workers=1, retry=FAST_RETRY,
+                        admission=AdmissionConfig(max_inflight_jobs=1)) \
+                as svc:
+            svc.submit([SweepCase("karate", "pr") for _ in range(3)])
+            with pytest.raises(AdmissionError):
+                svc.submit([SweepCase("karate", "pr")], tenant="b")
+
+    def test_cost_budget_sheds_without_opt_in(self):
+        with SimService(workers=1, retry=FAST_RETRY,
+                        admission=AdmissionConfig(max_queued_cost=0.5)) \
+                as svc:
+            with pytest.raises(AdmissionError) as exc:
+                svc.submit([SweepCase("karate", "pr")])
+            assert "allow_degraded" in str(exc.value)
+
+    def test_degraded_arm_caps_iterations(self):
+        with SimService(workers=1, retry=FAST_RETRY,
+                        admission=AdmissionConfig(max_queued_cost=0.5,
+                                                  degraded_iter_cap=3)) \
+                as svc:
+            job = svc.submit([SweepCase("karate", "pr")],
+                             allow_degraded=True)
+            rows = svc.result(job, timeout=120)
+            assert svc.info(job)["degraded"] is True
+            assert rows[0].case.fixed_iters == 3
+            assert rows[0].report.iterations <= 3
+            assert svc.service_stats.degraded == 1
+
+    def test_load_snapshot_shape(self, svc):
+        job = svc.submit([SweepCase("karate", "pr")])
+        load = svc.load()
+        assert set(load) == {"inflight_jobs", "queued_cost", "tenants",
+                             "ewma_case_s", "retry_after_hint"}
+        assert load["retry_after_hint"] > 0
+        svc.result(job, timeout=120)
+        assert svc.load()["inflight_jobs"] == 0

@@ -1,0 +1,389 @@
+"""Fault-injection recovery proofs for the simulation service.
+
+Every recovery path of :class:`~repro.serve.engine.SimService` is
+exercised against :mod:`repro.serve.chaos`:
+
+* transient faults retry with backoff and the job still completes;
+* permanent faults quarantine the poisoned case, the job finishes with
+  partial rows and a structured cause;
+* an injected :class:`WorkerCrash` kills the worker thread, the
+  supervisor requeues the job (quarantining only a *permanent* crash)
+  and spawns a replacement;
+* ``graphstore.read`` faults take the rebuild-on-corruption path;
+* the per-(graph, accelerator) circuit breaker trips, fails fast, and
+  half-opens after cooldown;
+* **no job is ever stuck**: whatever the fault mix, every submitted job
+  reaches a terminal state; and
+* **determinism**: same submissions + same fault seed produce
+  bit-identical surviving rows for any worker count, equal to the
+  no-fault rows at the surviving indices.
+"""
+
+import tempfile
+
+import pytest
+
+from repro.serve import chaos
+from repro.serve.engine import (DONE, FAILED, TERMINAL, BreakerConfig,
+                                JobFailed, RetryPolicy, SimService)
+from repro.sim.sweep import (SweepCase, SweepError, Sweeper,
+                             case_chaos_key)
+
+CASES = [SweepCase("karate", "pr"), SweepCase("karate", "bfs"),
+         SweepCase("karate", "sssp"),
+         SweepCase("karate", "pr", root=5),
+         SweepCase("karate", "bfs", root=7),
+         SweepCase("karate", "sssp", root=9)]
+
+FAST = RetryPolicy(retries=6, backoff_base_s=0.001, backoff_cap_s=0.01)
+NO_TRIP = BreakerConfig(threshold=10_000)
+
+
+def row_sig(rows):
+    return [(r.case.problem.value, str(r.case.root),
+             r.report.runtime_ns, r.report.total_bytes,
+             r.report.row_hit_rate) for r in rows]
+
+
+@pytest.fixture(autouse=True)
+def _no_leftover_chaos():
+    chaos.deactivate()
+    yield
+    chaos.deactivate()
+
+
+# ---------------------------------------------------------------------------
+# per-site recovery paths
+# ---------------------------------------------------------------------------
+
+class TestTransientRecovery:
+    def test_prepare_faults_are_retried_to_success(self):
+        cfg = chaos.ChaosConfig(seed=7, sites={
+            "sweep.prepare": chaos.SiteConfig(rate=1.0, max_attempts=2)})
+        with chaos.scope(cfg):
+            with SimService(workers=2, retry=FAST,
+                            breaker=NO_TRIP) as svc:
+                job = svc.submit(list(CASES))
+                rows = svc.result(job, timeout=240)
+            # the log dies with the scope: snapshot before it closes
+            assert any(site == "sweep.prepare"
+                       for site, *_ in chaos.injected_log())
+        assert len(rows) == len(CASES)
+        assert svc.service_stats.retries > 0
+        assert svc.service_stats.quarantined == 0
+
+    def test_dram_serve_faults_are_retried_to_success(self):
+        cfg = chaos.ChaosConfig(seed=5, sites={
+            "dram.serve": chaos.SiteConfig(rate=1.0, max_attempts=1)})
+        with chaos.scope(cfg):
+            with SimService(workers=1, retry=FAST,
+                            breaker=NO_TRIP) as svc:
+                rows = svc.result(svc.submit(list(CASES)), timeout=240)
+        assert len(rows) == len(CASES)
+        assert svc.service_stats.retries > 0
+
+    def test_transient_rows_match_no_fault_run(self):
+        baseline = row_sig(Sweeper(workers=1).run(list(CASES)))
+        cfg = chaos.ChaosConfig(seed=3, sites={
+            "sweep.prepare": chaos.SiteConfig(rate=0.7, max_attempts=3),
+            "dram.serve": chaos.SiteConfig(rate=0.5, max_attempts=2)})
+        with chaos.scope(cfg):
+            with SimService(workers=2, retry=FAST,
+                            breaker=NO_TRIP) as svc:
+                rows = svc.result(svc.submit(list(CASES)), timeout=240)
+        assert row_sig(rows) == baseline
+
+
+class TestPermanentQuarantine:
+    def test_permanent_fault_quarantines_with_structured_cause(self):
+        cfg = chaos.ChaosConfig(seed=2, sites={
+            "dram.serve": chaos.SiteConfig(rate=1.0, permanent_rate=1.0)})
+        with chaos.scope(cfg):
+            with SimService(workers=1, retry=FAST,
+                            breaker=NO_TRIP) as svc:
+                job = svc.submit(list(CASES))
+                with pytest.raises(JobFailed) as exc:
+                    svc.result(job, timeout=240)
+                info = svc.info(job)
+        assert info["quarantined"] == list(range(len(CASES)))
+        assert exc.value.rows == []
+        # the stored cause is the structured SweepError naming the case
+        cause = exc.value.__cause__
+        assert isinstance(cause, SweepError)
+        assert isinstance(cause.__cause__, chaos.InjectedFault)
+        assert cause.__cause__.permanent
+        # permanent faults never burn retry budget
+        assert svc.service_stats.retries == 0
+
+    def test_mixed_permanent_keeps_surviving_rows(self):
+        cfg = chaos.ChaosConfig(seed=9, sites={
+            "sweep.prepare": chaos.SiteConfig(rate=0.5,
+                                              permanent_rate=1.0)})
+        with chaos.scope(cfg):
+            with SimService(workers=2, retry=FAST,
+                            breaker=NO_TRIP) as svc:
+                job = svc.submit(list(CASES))
+                try:
+                    svc.result(job, timeout=240)
+                except JobFailed:
+                    pass
+                info = svc.info(job)
+                rows = svc.partial_rows(job)
+        assert 0 < len(rows) < len(CASES)
+        assert len(rows) + len(info["quarantined"]) == len(CASES)
+        # surviving rows are bit-identical to the no-fault run
+        baseline = row_sig(Sweeper(workers=1).run(list(CASES)))
+        quarantined = set(info["quarantined"])
+        assert row_sig(rows) == [s for i, s in enumerate(baseline)
+                                 if i not in quarantined]
+
+
+class TestWorkerCrashSupervision:
+    def test_transient_crash_requeues_and_completes(self):
+        cfg = chaos.ChaosConfig(seed=1, sites={
+            "worker.crash": chaos.SiteConfig(rate=1.0, max_attempts=1,
+                                             crash=True)})
+        with chaos.scope(cfg):
+            with SimService(workers=1, retry=FAST,
+                            breaker=NO_TRIP) as svc:
+                job = svc.submit(list(CASES))
+                rows = svc.result(job, timeout=240)
+                assert svc.poll(job) == DONE
+        assert len(rows) == len(CASES)
+        assert svc.service_stats.worker_crashes >= 1
+        assert svc.service_stats.quarantined == 0
+
+    def test_permanent_crash_quarantines_and_service_survives(self):
+        key0 = case_chaos_key(CASES[0])
+        cfg = chaos.ChaosConfig(seed=1, sites={
+            "worker.crash": chaos.SiteConfig(rate=1.0, permanent_rate=1.0,
+                                             crash=True)})
+        # only CASES[0] submitted -> its crash is permanent and observed
+        with chaos.scope(cfg):
+            with SimService(workers=1, retry=FAST,
+                            breaker=NO_TRIP) as svc:
+                job = svc.submit([CASES[0]])
+                with pytest.raises(JobFailed) as exc:
+                    svc.result(job, timeout=240)
+                info = svc.info(job)
+                assert info["quarantined"] == [0]
+                assert svc.service_stats.worker_crashes >= 1
+                assert isinstance(exc.value.__cause__,
+                                  chaos.WorkerCrash)
+                assert exc.value.__cause__.key == key0
+                # supervisor replaced the worker: service still serves
+                chaos.deactivate()
+                ok = svc.submit([CASES[1]])
+                assert len(svc.result(ok, timeout=240)) == 1
+
+
+class TestGraphStoreFaults:
+    def test_read_faults_take_rebuild_path(self):
+        from repro.graphs.corpus import GraphStore, resolve_graph
+        with tempfile.TemporaryDirectory() as d:
+            store = GraphStore(root=d)
+            builds = []
+
+            def build():
+                builds.append(1)
+                return resolve_graph("karate")
+
+            g0 = store.get("k", build)
+            store.get("k", build)
+            assert len(builds) == 1          # warm hit
+            cfg = chaos.ChaosConfig(seed=1, sites={
+                "graphstore.read": chaos.SiteConfig(rate=1.0,
+                                                    max_attempts=1)})
+            with chaos.scope(cfg):
+                g1 = store.get("k", build)   # fault -> rebuild
+                store.get("k", build)        # prefix spent -> hit again
+            assert len(builds) == 2
+            assert g1.fingerprint == g0.fingerprint
+
+    def test_sweep_completes_under_read_faults(self):
+        cfg = chaos.ChaosConfig(seed=4, sites={
+            "graphstore.read": chaos.SiteConfig(rate=1.0,
+                                                max_attempts=2)})
+        with chaos.scope(cfg):
+            with SimService(workers=1, retry=FAST,
+                            breaker=NO_TRIP) as svc:
+                rows = svc.result(svc.submit(list(CASES[:3])),
+                                  timeout=240)
+        assert len(rows) == 3
+
+
+class TestCircuitBreaker:
+    def test_breaker_trips_and_fails_fast(self):
+        cfg = chaos.ChaosConfig(seed=2, sites={
+            "dram.serve": chaos.SiteConfig(rate=1.0, permanent_rate=1.0)})
+        with chaos.scope(cfg):
+            with SimService(workers=1, retry=FAST,
+                            breaker=BreakerConfig(threshold=2,
+                                                  cooldown_s=60.0)) \
+                    as svc:
+                job = svc.submit(list(CASES))
+                with pytest.raises(JobFailed):
+                    svc.result(job, timeout=240)
+                info = svc.info(job)
+        # every case terminal: the first `threshold` quarantined by real
+        # failures, the rest shed fast by the open breaker
+        assert info["quarantined"] == list(range(len(CASES)))
+        assert svc.service_stats.breaker_trips >= 1
+        assert svc.service_stats.breaker_fastfails >= 1
+
+    def test_breaker_half_opens_after_cooldown(self):
+        cfg = chaos.ChaosConfig(seed=2, sites={
+            "dram.serve": chaos.SiteConfig(rate=1.0, permanent_rate=1.0)})
+        with SimService(workers=1, retry=FAST,
+                        breaker=BreakerConfig(threshold=1,
+                                              cooldown_s=0.05)) as svc:
+            with chaos.scope(cfg):
+                job = svc.submit([CASES[0]])
+                with pytest.raises(JobFailed):
+                    svc.result(job, timeout=240)
+                assert svc.service_stats.breaker_trips == 1
+            # faults gone + cooldown elapsed -> half-open trial passes
+            import time
+            time.sleep(0.1)
+            ok = svc.submit([CASES[0]])
+            assert len(svc.result(ok, timeout=240)) == 1
+
+
+# ---------------------------------------------------------------------------
+# global invariants
+# ---------------------------------------------------------------------------
+
+class TestEveryJobTerminates:
+    def test_no_job_stuck_under_mixed_chaos(self):
+        cfg = chaos.ChaosConfig(seed=13, sites={
+            "sweep.prepare": chaos.SiteConfig(rate=0.5, max_attempts=2,
+                                              permanent_rate=0.2),
+            "dram.serve": chaos.SiteConfig(rate=0.3, max_attempts=1,
+                                           permanent_rate=0.3),
+            "worker.crash": chaos.SiteConfig(rate=0.25,
+                                             permanent_rate=0.5,
+                                             crash=True)})
+        with chaos.scope(cfg):
+            with SimService(workers=2, retry=FAST,
+                            breaker=NO_TRIP) as svc:
+                jobs = [svc.submit([c]) for c in CASES]
+                jobs.append(svc.submit(list(CASES[:3])))
+                for j in jobs:
+                    try:
+                        svc.result(j, timeout=240)
+                    except Exception:
+                        pass
+                states = [svc.poll(j) for j in jobs]
+        assert all(s in TERMINAL for s in states), states
+
+
+class TestDeterminism:
+    SITES = {
+        "sweep.prepare": chaos.SiteConfig(rate=0.5, max_attempts=2),
+        "dram.serve": chaos.SiteConfig(rate=0.3, max_attempts=1,
+                                       permanent_rate=0.3),
+        "worker.crash": chaos.SiteConfig(rate=0.2, permanent_rate=0.5,
+                                         crash=True),
+    }
+
+    def _run(self, workers, seed):
+        with chaos.scope(chaos.ChaosConfig(seed=seed, sites=self.SITES)):
+            with SimService(workers=workers, retry=FAST,
+                            breaker=NO_TRIP) as svc:
+                job = svc.submit(list(CASES))
+                try:
+                    svc.result(job, timeout=240)
+                except JobFailed:
+                    pass
+                return (row_sig(svc.partial_rows(job)),
+                        svc.info(job)["quarantined"])
+
+    @pytest.mark.parametrize("seed", [3, 11])
+    def test_rows_bit_identical_across_worker_counts(self, seed):
+        sig1, q1 = self._run(1, seed)
+        sig4, q4 = self._run(4, seed)
+        assert sig1 == sig4
+        assert q1 == q4
+        # and surviving rows equal the no-fault rows at those indices
+        baseline = row_sig(Sweeper(workers=1).run(list(CASES)))
+        surviving = [s for i, s in enumerate(baseline) if i not in q1]
+        assert sig1 == surviving
+
+    def test_retry_budget_must_cover_chaos_prefix(self):
+        cfg = chaos.ChaosConfig(seed=0, sites={
+            "sweep.prepare": chaos.SiteConfig(rate=0.5, max_attempts=4),
+            "dram.serve": chaos.SiteConfig(rate=0.5, max_attempts=3)})
+        assert cfg.max_transient_attempts() == 7   # summed, crash-free
+        with chaos.scope(cfg):
+            with pytest.raises(ValueError):
+                SimService(workers=1, retry=RetryPolicy(retries=6))
+
+
+# ---------------------------------------------------------------------------
+# chaos model unit surface
+# ---------------------------------------------------------------------------
+
+class TestChaosModel:
+    def test_plan_is_pure_and_prefix_shaped(self):
+        cfg = chaos.ChaosConfig(seed=1, sites={
+            "s": chaos.SiteConfig(rate=1.0, max_attempts=3)})
+        p1 = chaos.plan("s", "k", cfg)
+        p2 = chaos.plan("s", "k", cfg)
+        assert p1 == p2
+        kind, k = p1
+        assert kind == "transient" and 1 <= k <= 3
+
+    def test_maybe_inject_consumes_prefix_then_passes(self):
+        cfg = chaos.ChaosConfig(seed=1, sites={
+            "s": chaos.SiteConfig(rate=1.0, max_attempts=2)})
+        with chaos.scope(cfg):
+            kind, k = chaos.plan("s", "k")
+            for _ in range(k):
+                with pytest.raises(chaos.InjectedFault):
+                    chaos.maybe_inject("s", "k")
+            chaos.maybe_inject("s", "k")     # prefix spent: clean
+            assert len(chaos.injected_log()) == k
+
+    def test_config_from_env_grammar(self):
+        cfg = chaos.config_from_env({
+            chaos.ENV_SEED: "9",
+            chaos.ENV_SITES: ("sweep.prepare=0.3,dram.serve=0.2:3,"
+                              "worker.crash=0.05:1:1.0")})
+        assert cfg.seed == 9
+        assert cfg.sites["sweep.prepare"] == chaos.SiteConfig(rate=0.3)
+        assert cfg.sites["dram.serve"].max_attempts == 3
+        assert cfg.sites["worker.crash"].crash is True
+        assert cfg.sites["worker.crash"].permanent_rate == 1.0
+        assert chaos.config_from_env({}) is None
+
+    def test_config_from_env_rejects_malformed(self):
+        with pytest.raises(ValueError):
+            chaos.config_from_env({chaos.ENV_SITES: "no-equals-sign"})
+        with pytest.raises(ValueError):
+            chaos.config_from_env({chaos.ENV_SITES: "a=1:2:3:4"})
+
+    def test_service_arms_chaos_from_env(self, monkeypatch):
+        monkeypatch.setenv(chaos.ENV_SEED, "7")
+        monkeypatch.setenv(chaos.ENV_SITES, "sweep.prepare=1.0:1")
+        with SimService(workers=1, retry=FAST, breaker=NO_TRIP) as svc:
+            assert chaos.active() is not None
+            rows = svc.result(svc.submit([CASES[0]]), timeout=240)
+        assert len(rows) == 1
+        assert svc.service_stats.retries > 0
+
+    def test_is_transient_classification(self):
+        assert chaos.is_transient(
+            chaos.InjectedFault("s", "k", 0, permanent=False))
+        assert not chaos.is_transient(
+            chaos.InjectedFault("s", "k", 0, permanent=True))
+        assert chaos.is_transient(OSError("disk hiccup"))
+        assert chaos.is_transient(MemoryError())
+        assert chaos.is_transient(
+            RuntimeError("RESOURCE_EXHAUSTED: out of memory"))
+        assert not chaos.is_transient(ValueError("bad config"))
+        # classification walks the cause chain through SweepError
+        root = chaos.InjectedFault("s", "k", 0)
+        try:
+            raise SweepError(0, CASES[0], root) from root
+        except SweepError as wrapped:
+            assert chaos.is_transient(wrapped)
