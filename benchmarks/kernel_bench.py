@@ -95,6 +95,49 @@ def run() -> List[Dict]:
          "us_per_call": t_dev,
          "derived": f"vs_host={t_host / t_dev:.2f}x"},
     ]
+
+    # --- dram_serve arm: the blocked [S, C, K] serve fast path, scan
+    # vs Pallas (interpret mode on CPU — compiled execution needs an
+    # accelerator), per kernel tile size.  The sweep-shaped row below
+    # feeds BENCH_sweep.json as `kernel_cases_per_sec` (serve calls per
+    # second of the full packed program on the resolved auto backend),
+    # gated by CI via check_regression.py --keys.
+    from repro.core import vectorized as vec
+    from repro.kernels.dram_timing.ops import dram_serve
+    packed = pack_program(prog, cfg)
+    carry = vec.init_lean_carry(cfg.channels, packed.n_banks,
+                                packed.banks_per_rank)
+    timing = vec.timing_params(cfg.timing)
+
+    def serve(backend):
+        return vec.fused_scan(packed.issue, packed.meta,
+                              packed.boundary, timing, carry,
+                              backend=backend)
+    t_scan = _time(lambda: serve("scan"))
+    t_pallas = _time(lambda: serve("pallas"), 1)
+    rows += [
+        {"bench": "kernel", "name": "dram_serve_scan",
+         "us_per_call": t_scan,
+         "derived": f"S={packed.issue.shape[0]}"},
+        {"bench": "kernel", "name": "dram_serve_pallas",
+         "us_per_call": t_pallas,
+         "derived": f"vs_scan={t_scan / t_pallas:.2f}x"},
+    ]
+    state = tuple(carry) + (jnp.zeros((cfg.channels,), jnp.int32),)
+    sl = slice(0, 2048)
+    import jax
+    for tile in (128, 512):
+        t_tile = _time(lambda: jax.block_until_ready(dram_serve(
+            packed.issue[sl], packed.meta[sl], packed.boundary[sl],
+            timing, state, banks_per_rank=packed.banks_per_rank,
+            tile=tile)[0]), 1)
+        rows.append(
+            {"bench": "kernel", "name": f"dram_serve_tile{tile}",
+             "us_per_call": t_tile,
+             "derived": f"S=2048 grid={2048 // tile}"})
+    t_auto = _time(lambda: serve("auto"))
+    rows.append({"bench": "sweep", "variant": "kernel",
+                 "cases_per_sec": 1e6 / t_auto, "workers": 1})
     return rows
 
 

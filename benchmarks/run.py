@@ -158,9 +158,14 @@ def main() -> int:
                 print(f"{r['bench']}:{key},{val_us:.0f},{derived}")
         print(f"# {name}: {len(rows)} rows in {wall:.1f}s",
               file=sys.stderr)
-    if "sweep" in rows_by_suite and not args.no_trajectory:
-        entry = append_sweep_trajectory(rows_by_suite["sweep"],
-                                        args.scale)
+    # the kernels suite emits one sweep-shaped row (variant "kernel",
+    # the dram_serve throughput) so the kernel serve path is tracked in
+    # the same trajectory file / regression gate as the sweep figures
+    traj_rows = list(rows_by_suite.get("sweep", ()))
+    traj_rows += [r for r in rows_by_suite.get("kernels", ())
+                  if r.get("bench") == "sweep"]
+    if traj_rows and not args.no_trajectory:
+        entry = append_sweep_trajectory(traj_rows, args.scale)
         print(f"# BENCH_sweep.json += {entry}", file=sys.stderr)
     if "service" in rows_by_suite and not args.no_trajectory:
         entry = append_service_trajectory(rows_by_suite["service"],

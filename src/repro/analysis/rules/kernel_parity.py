@@ -95,3 +95,37 @@ class KernelParityRule(Rule):
                     f"kernel package {pkg!r} is not referenced by "
                     f"{tree.config.kernel_tests} — interpret-path "
                     "coverage is missing", symbol=pkg)
+
+
+@register
+class KernelParityCoverageRule(Rule):
+    name = "kernel-parity-coverage"
+    severity = "error"
+    description = ("every ref.py oracle symbol must be exercised by the "
+                   "kernel parity tests")
+
+    def check_tree(self, tree: TreeInfo):
+        """The inverse direction of ``kernel-parity``: that rule proves
+        each kernel op HAS an oracle; this one proves each oracle is
+        actually *used* — a ``<stem>_ref`` never named by the kernel
+        test module is a parity test that silently stopped running
+        (e.g. the test was deleted or renamed while the oracle stayed
+        behind)."""
+        root = tree.config.kernels_root.rstrip("/")
+        refs = [m for m in tree.modules
+                if m.rel.startswith(root + "/")
+                and m.rel.endswith("/ref.py")
+                and m.tree is not None]
+        tests_path = tree.root / tree.config.kernel_tests
+        tests_src = (tests_path.read_text(encoding="utf-8")
+                     if tests_path.exists() else "")
+        for rmod in refs:
+            for name in _public_defs(rmod.tree):
+                if not name.endswith("_ref"):
+                    continue
+                if name not in tests_src:
+                    yield self.finding(
+                        rmod, _def_line(rmod.tree, name),
+                        f"ref oracle {name!r} is never exercised by "
+                        f"{tree.config.kernel_tests} — its parity test "
+                        "is missing or was renamed away", symbol=name)

@@ -477,14 +477,16 @@ def finalize_program_device(packed: DevicePackedProgram, finish,
 
 
 def serve_packed(packed, timing=None, carry=None,
-                 origin: int = 0):
+                 origin: int = 0, serve_backend: str = "scan"):
     """Run one packed program (host- or device-packed) through the fused
     scan from the given carry (default: cold DRAM state) and reduce it to
     :class:`ProgramStats`.  Returns ``(stats, lean_carry)``.
 
     ``timing`` overrides the timing vector packed with the program — this
     is what lets a geometry-keyed cached pack replay against any traced
-    timing (the pack itself never depends on timing).
+    timing (the pack itself never depends on timing).  ``serve_backend``
+    picks the fused-scan implementation (XLA scan or the Pallas serve
+    kernel — bit-identical; see ``vec.resolve_serve_backend``).
     """
     if timing is None:
         timing = packed.timing
@@ -495,7 +497,8 @@ def serve_packed(packed, timing=None, carry=None,
     device = isinstance(packed, DevicePackedProgram)
     fin, lean = vec.fused_scan(packed.issue, packed.meta,
                                packed.boundary, timing, carry,
-                               as_numpy=not device)
+                               as_numpy=not device,
+                               backend=serve_backend)
     if device:
         return finalize_program_device(packed, fin, origin=origin), lean
     return finalize_program(packed, fin, origin=origin), lean
@@ -509,6 +512,10 @@ class VectorizedDRAM:
     NumPy otherwise), ``"host"`` (always the NumPy reference packer), or
     ``"device"`` (force the jitted path; raises when unsupported).  Both
     produce bit-identical scans and statistics.
+
+    The serve side is governed by ``cfg.serve_backend``
+    (``auto|scan|pallas``): the XLA fused scan or the Pallas serve
+    kernel, also bit-identical — both knobs trade execution speed only.
     """
 
     def __init__(self, cfg: DRAMConfig, pack_backend: str = "auto"):
@@ -518,6 +525,9 @@ class VectorizedDRAM:
                 f"got {pack_backend!r}")
         self.cfg = cfg
         self.pack_backend = pack_backend
+        # resolve once: auto -> scan|pallas for this process's platform
+        self.serve_backend = vec.resolve_serve_backend(
+            getattr(cfg, "serve_backend", "auto"))
         self._timing = vec.timing_params(cfg.timing)
         # on-chip hierarchy level: requests are filtered through it (hits
         # dropped, prefetch issue shaping) before they reach the packer;
@@ -640,7 +650,8 @@ class VectorizedDRAM:
             self._rel_now = 0
         stats, lean = serve_packed(packed, timing=self._timing,
                                    carry=vec.lean_from_full(self.carry),
-                                   origin=self._origin)
+                                   origin=self._origin,
+                                   serve_backend=self.serve_backend)
         self.carry = vec.full_from_lean(lean, packed.open_row_final)
         self.phases.extend(stats.phases)
         self.total_requests += stats.total_requests

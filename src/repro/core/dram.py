@@ -94,6 +94,10 @@ class DRAMConfig:
     clock_ghz: float                  # memory-controller clock
     order: AddressOrder = DEFAULT_ORDER
     cache: Optional["CacheConfig"] = None
+    #: serve-path execution backend: ``auto`` | ``scan`` | ``pallas``
+    #: (see ``repro.core.vectorized.resolve_serve_backend``); ``auto``
+    #: picks the Pallas kernel on TPU/GPU and the XLA scan on CPU.
+    serve_backend: str = "auto"
 
     #: fields deliberately absent from structure_key/geometry_key:
     #: they change latency numbers, never the packed program geometry.
@@ -104,7 +108,17 @@ class DRAMConfig:
         "timing": "traced-scan input — packing never reads timings",
         "clock_ghz": "keyed separately by SimSession next to the "
                      "geometry key (timing-only scale factor)",
+        "serve_backend": "execution-speed knob only — scan and pallas "
+                         "serve bit-identical results, so configs "
+                         "differing only here MUST share model/pack "
+                         "cache entries",
     }
+
+    def __post_init__(self):
+        if self.serve_backend not in ("auto", "scan", "pallas"):
+            raise ValueError(
+                "serve_backend must be auto|scan|pallas, got "
+                f"{self.serve_backend!r}")
 
     # ---- derived ----------------------------------------------------
     @property

@@ -40,6 +40,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import os
 import threading
 from typing import Dict
 
@@ -76,8 +77,10 @@ def choose_block_lanes(n_miss: int, n: int) -> int:
 #: throughput benchmark asserts a run costs a few fused chunk dispatches,
 #: never the legacy two per iteration.  ``device_pack`` counts whole
 #: device-resident pack invocations (each is two jitted dispatches:
-#: classify+blocks, then the scatter).
-DISPATCHES = {"packed": 0, "fused": 0, "fused_batch": 0, "device_pack": 0}
+#: classify+blocks, then the scatter).  ``pallas`` counts fused-serve
+#: chunks dispatched through the Pallas kernel instead of the XLA scan.
+DISPATCHES = {"packed": 0, "fused": 0, "fused_batch": 0,
+              "device_pack": 0, "pallas": 0}
 
 _DISPATCH_LOCK = threading.Lock()
 
@@ -98,6 +101,35 @@ def reset_dispatch_counts() -> None:
     with _DISPATCH_LOCK:
         for k in DISPATCHES:
             DISPATCHES[k] = 0
+
+
+#: legal values of the ``serve_backend`` knob (``DRAMConfig`` field /
+#: ``simulate(serve_backend=...)``).  ``scan`` is the XLA ``lax.scan``
+#: serve path; ``pallas`` the VMEM-resident kernel in
+#: ``repro.kernels.dram_timing`` (bit-identical by construction: both
+#: run :func:`make_serve_step`).
+SERVE_BACKENDS = ("auto", "scan", "pallas")
+
+
+def resolve_serve_backend(backend: str = "auto") -> str:
+    """Resolve the ``serve_backend`` knob to ``scan`` or ``pallas``.
+
+    ``auto`` prefers the Pallas kernel on accelerator platforms and the
+    XLA scan on CPU, where the kernel could only run in interpret mode
+    (an eval loop, orders of magnitude slower — fine for parity tests,
+    wrong for serving).  ``REPRO_SERVE_BACKEND`` overrides ``auto``
+    only; an explicit argument always wins.
+    """
+    if backend == "auto":
+        env = os.environ.get("REPRO_SERVE_BACKEND", "")
+        if env in ("scan", "pallas"):
+            return env
+        return "pallas" if jax.default_backend() != "cpu" else "scan"
+    if backend not in ("scan", "pallas"):
+        raise ValueError(
+            f"serve_backend must be one of {SERVE_BACKENDS}, got "
+            f"{backend!r}")
+    return backend
 
 
 def timing_params(t: DRAMTiming) -> np.ndarray:
@@ -537,11 +569,31 @@ def _fused_scan_core(issue, meta, boundary, timing, carry,
     phase's start (0 on invalid lanes), so per-phase makespans and stats
     reduce on the host.
     """
+    step = make_serve_step(timing, carry[0].shape[0], carry[0].shape[1],
+                           carry[3].shape[1], issue.shape[2],
+                           banks_per_rank)
+    state, fin = jax.lax.scan(step, carry, (issue, meta, boundary))
+    return fin, state
+
+
+def make_serve_step(timing, C, B, R, K, banks_per_rank):
+    """Build the blocked lockstep serve step over ``[C, K]`` request
+    blocks — the single source of the step semantics, shared verbatim
+    by the XLA scan (:func:`_fused_scan_core`) and the Pallas serve
+    kernel (``repro.kernels.dram_timing``), so the two ``serve_backend``
+    paths cannot drift.
+
+    Returns ``step(state, (iss[C,K], mt[C,K], bnd)) -> (state,
+    fin_out[C,K])`` where ``state`` is the 6-tuple in-scan carry
+    (persistent lean carry + phase-makespan accumulator).  The
+    phase-boundary carry re-base is branchless (``where`` on the
+    boundary flag instead of ``lax.cond``): bit-identical, because a
+    zero shift is the identity on every carry value (all are
+    ``>= NEG_INF32`` by construction), and it is what lets the Pallas
+    kernel run the same code without ref-mutating control flow.
+    """
     tCL, tRCD, tRP, tRAS, tBL, tRRD, tFAW = (
         timing[i] for i in range(len(TIMING_FIELDS)))
-    C, B = carry[0].shape
-    R = carry[3].shape[1]
-    K = issue.shape[2]
     bank_ids = jnp.arange(B, dtype=jnp.int32)
     rank_ids = jnp.arange(R, dtype=jnp.int32)
     ptr_ids = jnp.arange(4, dtype=jnp.int32)
@@ -632,19 +684,15 @@ def _fused_scan_core(issue, meta, boundary, timing, carry,
             ptr = jnp.where(ohr_m & m_any[:, None],
                             ((ptr_m + 1) % 4)[:, None], ptr)
 
-        def rebase(op):
-            avail, act, bus, hist, pmf = op
-            shift = jnp.max(pmf)
-            avail, act, bus, hist = _lean_rebase(avail, act, bus, hist,
-                                                 shift)
-            return avail, act, bus, hist, jnp.zeros_like(pmf)
-
-        avail, act, bus, hist, pmf = jax.lax.cond(
-            bnd, rebase, lambda op: op, (avail, act, bus, hist, pmf))
+        # branchless phase-boundary re-base: shift = 0 off-boundary is
+        # the identity (every carry value is >= NEG_INF32)
+        shift = jnp.where(bnd, jnp.max(pmf), jnp.int32(0))
+        avail, act, bus, hist = _lean_rebase(avail, act, bus, hist,
+                                             shift)
+        pmf = jnp.where(bnd, jnp.zeros_like(pmf), pmf)
         return (avail, act, bus, hist, ptr, pmf), fin_out
 
-    state, fin = jax.lax.scan(step, carry, (issue, meta, boundary))
-    return fin, state
+    return step
 
 
 def _concat_fins(fins, as_numpy, axis=0):
@@ -681,7 +729,8 @@ def _fused_scan(issue, meta, boundary, timing, carry):
                             banks_per_rank)
 
 
-def fused_scan(issue, meta, boundary, timing, carry, as_numpy=True):
+def fused_scan(issue, meta, boundary, timing, carry, as_numpy=True,
+               backend="scan"):
     """Serve a whole packed program: a handful of fixed-shape jitted
     dispatches (see :data:`CHUNK_LADDER`), state chained across chunks.
 
@@ -690,18 +739,34 @@ def fused_scan(issue, meta, boundary, timing, carry, as_numpy=True):
     boundary, where it is zero by construction).  ``as_numpy=False``
     keeps the finish array on device (the device-packed path reduces it
     there; nothing round-trips through the host).
+
+    ``backend`` selects the serve implementation per
+    :func:`resolve_serve_backend`: the XLA scan or the Pallas kernel
+    (``repro.kernels.dram_timing.ops.dram_serve``) — bit-identical, both
+    run :func:`make_serve_step`; the choice is purely an execution-speed
+    knob.
     """
+    backend = resolve_serve_backend(backend)
+    if backend == "pallas":
+        # lazy: ref.py in the kernel package imports this module
+        from repro.kernels.dram_timing.ops import dram_serve
     C = issue.shape[1]
     state = tuple(carry) + (jnp.zeros((C,), dtype=jnp.int32),)
     timing = jnp.asarray(timing, dtype=jnp.int32)
+    banks_per_rank = carry[0].shape[1] // carry[3].shape[1]
     fins = []
     pos = 0
     for size in plan_chunks(issue.shape[0]):
-        count_dispatch("fused")
-        fin, state = _fused_scan(
-            jnp.asarray(issue[pos:pos + size]),
-            jnp.asarray(meta[pos:pos + size]),
-            jnp.asarray(boundary[pos:pos + size]), timing, state)
+        chunk = (jnp.asarray(issue[pos:pos + size]),
+                 jnp.asarray(meta[pos:pos + size]),
+                 jnp.asarray(boundary[pos:pos + size]))
+        if backend == "pallas":
+            count_dispatch("pallas")
+            fin, state = dram_serve(*chunk, timing, state,
+                                    banks_per_rank=banks_per_rank)
+        else:
+            count_dispatch("fused")
+            fin, state = _fused_scan(*chunk, timing, state)
         fins.append(np.asarray(fin) if as_numpy else fin)
         pos += size
     return _concat_fins(fins, as_numpy), state[:5]

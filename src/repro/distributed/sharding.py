@@ -21,9 +21,12 @@ from __future__ import annotations
 from typing import Any, Dict, Optional, Tuple
 
 import jax
+import jax.numpy as jnp
 import numpy as np
+from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.core import vectorized as vec
 from repro.distributed import context as dctx
 from repro.models.config import ModelConfig
 
@@ -174,6 +177,103 @@ def make_ctx(cfg: ModelConfig, mesh: Mesh, multi_pod: bool) -> dctx.ShardCtx:
         token_axes=("pod", "data") if multi_pod else ("data",),
         expert_axis="model",
     )
+
+
+# ---------------------------------------------------------------------------
+# case-sharded sweep serving
+# ---------------------------------------------------------------------------
+#
+# The batched fused scan (``vec.fused_scan_batch``) vmaps independent
+# cases down one device.  On an N-device host the case batch shards over
+# a 1-D ``("cases",)`` mesh (``launch.mesh.make_sweep_mesh``) instead:
+# every device serves its slice of the batch with the SAME per-case math
+# (no cross-device collectives — the scans are independent), so the
+# result is bit-identical to the unsharded vmap for any device count.
+# The batch pads up to a multiple of the mesh size with replicas of case
+# 0 (discarded after); padding with *real* work keeps every device on
+# the identical compiled scan shape.
+
+
+def _pad_cases(arr, pad):
+    if not pad:
+        return jnp.asarray(arr)
+    arr = jnp.asarray(arr)
+    reps = jnp.broadcast_to(arr[:1], (pad,) + arr.shape[1:])
+    return jnp.concatenate([arr, reps], axis=0)
+
+
+def _sweep_state(M, C, n_banks, banks_per_rank):
+    single = vec.init_lean_carry(C, n_banks, banks_per_rank)
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (M,) + x.shape),
+        single + (jnp.zeros((C,), dtype=jnp.int32),))
+
+
+def sharded_fused_scan_batch(issue, meta, boundary, timing, n_banks,
+                             banks_per_rank, mesh: Mesh,
+                             as_numpy=True):
+    """Case-sharded :func:`repro.core.vectorized.fused_scan_batch`:
+    leading axis = case batch, sharded over ``mesh``'s ``cases`` axis.
+    Bit-identical rows for any device count."""
+    M, S, C, K = issue.shape
+    D = mesh.shape["cases"]
+    pad = (-M) % D
+    issue, meta, boundary = (_pad_cases(issue, pad),
+                             _pad_cases(meta, pad),
+                             _pad_cases(boundary, pad))
+    timing = _pad_cases(jnp.asarray(timing, jnp.int32), pad)
+    state = _sweep_state(M + pad, C, n_banks, banks_per_rank)
+    # check_rep=False: every operand is case-sharded; there is no
+    # replicated output for the checker to reason about
+    fn = shard_map(vec._fused_scan_batch, mesh=mesh,
+                   in_specs=P("cases"), out_specs=P("cases"),
+                   check_rep=False)
+    fins = []
+    pos = 0
+    for size in vec.plan_chunks(S):
+        vec.count_dispatch("fused_batch")
+        fin, state = fn(issue[:, pos:pos + size],
+                        meta[:, pos:pos + size],
+                        boundary[:, pos:pos + size], timing, state)
+        fins.append(fin)
+        pos += size
+    fin = (fins[0] if len(fins) == 1
+           else jnp.concatenate(fins, axis=1))[:M]
+    state = jax.tree.map(lambda x: x[:M], state[:5])
+    return (np.asarray(fin) if as_numpy else fin), state
+
+
+def sharded_fused_scan_batch_shared(issue, meta, boundary, timing,
+                                    n_banks, banks_per_rank, mesh: Mesh,
+                                    as_numpy=True):
+    """Case-sharded shared-stream variant: ONE packed program (streams
+    replicated on every device) served against a sharded batch of
+    timing vectors — the sharded twin of
+    :func:`repro.core.vectorized.fused_scan_batch_shared`."""
+    M = timing.shape[0]
+    S, C, K = issue.shape
+    D = mesh.shape["cases"]
+    pad = (-M) % D
+    issue = jnp.asarray(issue)
+    meta = jnp.asarray(meta)
+    boundary = jnp.asarray(boundary)
+    timing = _pad_cases(jnp.asarray(timing, jnp.int32), pad)
+    state = _sweep_state(M + pad, C, n_banks, banks_per_rank)
+    fn = shard_map(vec._fused_scan_batch_shared, mesh=mesh,
+                   in_specs=(P(), P(), P(), P("cases"), P("cases")),
+                   out_specs=P("cases"), check_rep=False)
+    fins = []
+    pos = 0
+    for size in vec.plan_chunks(S):
+        vec.count_dispatch("fused_batch")
+        fin, state = fn(issue[pos:pos + size], meta[pos:pos + size],
+                        boundary[pos:pos + size], timing, state)
+        fins.append(fin)
+        pos += size
+    fin = (fins[0] if len(fins) == 1
+           else jnp.concatenate(fins, axis=1))[:M]
+    state = jax.tree.map(lambda x: x[:M], state[:5])
+    return (np.asarray(fin) if as_numpy else fin), state
 
 
 # ---------------------------------------------------------------------------

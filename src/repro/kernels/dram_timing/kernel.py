@@ -1,17 +1,33 @@
-"""Pallas TPU kernel for the DRAM-timing scan (the paper's hot loop).
+"""Pallas TPU kernels for the DRAM-timing loop (the paper's hot path).
 
-Grid = (channels, trace_chunks): channels are independent bank-state
-machines (the property Ramulator's state-machine tree encodes) and map to
-parallel grid rows; the trace dimension is walked sequentially with the
-bank/rank state resident in VMEM scratch — the TPU analogue of the FPGA
-keeping controller state in registers/BRAM.
+Two kernels live here:
 
-BlockSpec tiling: each step loads a ``(1, chunk)`` tile of the four trace
-arrays into VMEM (4 x chunk x 4 B; chunk=512 -> 8 KiB working set, far
-under the ~16 MiB VMEM budget, leaving room for the double-buffered next
-tile).  The inner ``fori_loop`` is sequential by nature (bank state is a
-loop-carried dependency); throughput comes from the channel grid dimension
-— exactly how the timing model parallelizes on real DRAM too.
+* :func:`dram_timing_kernel` — the legacy per-channel ``[C, L]`` scan
+  (one request per channel per step).  Grid = (channels, trace_chunks):
+  channels are independent bank-state machines (the property Ramulator's
+  state-machine tree encodes) and map to parallel grid rows; the trace
+  dimension is walked sequentially with the bank/rank state resident in
+  VMEM scratch — the TPU analogue of the FPGA keeping controller state
+  in registers/BRAM.
+
+* :func:`dram_serve_kernel` — the production serve path: the blocked
+  ``[S, C, K]`` lockstep stream format that ``VectorizedDRAM.
+  run_program`` serves (K row hits or one miss retired per channel per
+  step, phase barriers honored in-scan via a branchless carry re-base).
+  Channels are coupled at phase boundaries (the re-base shift is the max
+  over *all* channels), so the grid walks step *tiles* sequentially and
+  the step itself vectorizes over channels.  The step body is
+  ``repro.core.vectorized.make_serve_step`` — literally the same traced
+  code as the XLA scan backend, so the two ``serve_backend`` paths are
+  bit-identical by construction, not merely by test.
+
+BlockSpec tiling streams ``(tile, C, K)`` trace tiles through VMEM
+(Pallas double-buffers the next tile's copy-in behind the current tile's
+compute); the carry state stays resident in VMEM scratch across the
+whole grid.  Working set per tile at the default ``tile=512``, C=4, K=8:
+two int32 streams of 512x4x8 = 128 KiB plus O(C*B) state — far under
+the ~16 MiB VMEM budget.  Timing parameters ride as a *traced* int32[7]
+input (never static), so one compiled kernel serves every speed grade.
 """
 
 from __future__ import annotations
@@ -23,17 +39,23 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core import vectorized as vec
+
 NEG_INF32 = -(1 << 30)
 
+#: steps per serve-kernel grid tile.  Both fused-scan chunk-ladder sizes
+#: (2**13, 2**17) are multiples, so ladder chunks always tile exactly.
+SERVE_TILE = 512
 
-def _kernel(issue_ref, bank_ref, row_ref, valid_ref,
+
+def _kernel(issue_ref, bank_ref, row_ref, valid_ref, timing_ref,
             finish_ref, kind_ref,
             open_row, act_time, bank_avail, bus_free,
             act_hist, act_ptr, last_act,
-            *, chunk: int, n_banks: int, banks_per_rank: int,
-            tCL: int, tRCD: int, tRP: int, tRAS: int, tBL: int,
-            tRRD: int, tFAW: int):
+            *, chunk: int, n_banks: int, banks_per_rank: int):
     t_idx = pl.program_id(1)
+    tCL, tRCD, tRP, tRAS, tBL, tRRD, tFAW = (
+        timing_ref[i] for i in range(7))
 
     @pl.when(t_idx == 0)
     def _init():
@@ -94,28 +116,30 @@ def _kernel(issue_ref, bank_ref, row_ref, valid_ref,
 
 def dram_timing_kernel(
     issue: jnp.ndarray, bank: jnp.ndarray, row: jnp.ndarray,
-    valid: jnp.ndarray, *, n_banks: int, banks_per_rank: int,
-    tCL: int, tRCD: int, tRP: int, tRAS: int, tBL: int,
-    tRRD: int, tFAW: int, chunk: int = 512, interpret: bool = True,
+    valid: jnp.ndarray, timing: jnp.ndarray, *, n_banks: int,
+    banks_per_rank: int, chunk: int = 512, interpret: bool = False,
 ):
     """Run the timing scan over ``[C, L]`` per-channel padded streams.
 
-    L must be a multiple of ``chunk``.  Returns (finish, kind) int32[C, L].
+    ``timing`` is the *traced* int32[7] vector
+    (:func:`repro.core.vectorized.timing_params` order) — one compiled
+    kernel serves every speed grade; L must be a multiple of ``chunk``.
+    Returns (finish, kind) int32[C, L].
     """
     C, L = issue.shape
     assert L % chunk == 0, (L, chunk)
     n_ranks = max(n_banks // banks_per_rank, 1)
     grid = (C, L // chunk)
     spec = pl.BlockSpec((1, chunk), lambda c, t: (c, t))
+    tspec = pl.BlockSpec((7,), lambda c, t: (0,))
     kern = functools.partial(
         _kernel, chunk=chunk, n_banks=n_banks,
-        banks_per_rank=banks_per_rank, tCL=tCL, tRCD=tRCD, tRP=tRP,
-        tRAS=tRAS, tBL=tBL, tRRD=tRRD, tFAW=tFAW,
+        banks_per_rank=banks_per_rank,
     )
     return pl.pallas_call(
         kern,
         grid=grid,
-        in_specs=[spec, spec, spec, spec],
+        in_specs=[spec, spec, spec, spec, tspec],
         out_specs=[spec, spec],
         out_shape=[
             jax.ShapeDtypeStruct((C, L), jnp.int32),
@@ -132,4 +156,100 @@ def dram_timing_kernel(
         ],
         interpret=interpret,
     )(issue.astype(jnp.int32), bank.astype(jnp.int32),
-      row.astype(jnp.int32), valid.astype(jnp.int32))
+      row.astype(jnp.int32), valid.astype(jnp.int32),
+      timing.astype(jnp.int32))
+
+
+def _serve_kernel(issue_ref, meta_ref, boundary_ref, timing_ref,
+                  avail_in, act_in, bus_in, hist_in, ptr_in, pmf_in,
+                  fin_ref, avail_out, act_out, bus_out, hist_out,
+                  ptr_out, pmf_out,
+                  avail_s, act_s, bus_s, hist_s, ptr_s, pmf_s,
+                  *, tile: int, banks_per_rank: int):
+    t_idx = pl.program_id(0)
+
+    @pl.when(t_idx == 0)
+    def _init():
+        avail_s[...] = avail_in[...]
+        act_s[...] = act_in[...]
+        bus_s[...] = bus_in[...]
+        hist_s[...] = hist_in[...]
+        ptr_s[...] = ptr_in[...]
+        pmf_s[...] = pmf_in[...]
+
+    C, B = avail_s.shape
+    R = hist_s.shape[1]
+    K = issue_ref.shape[2]
+    step = vec.make_serve_step(timing_ref[...], C, B, R, K,
+                               banks_per_rank)
+
+    def body(j, _):
+        state = (avail_s[...], act_s[...], bus_s[...], hist_s[...],
+                 ptr_s[...], pmf_s[...])
+        x = (issue_ref[j], meta_ref[j], boundary_ref[j] != 0)
+        (avail, act, bus, hist, ptr, pmf), fin = step(state, x)
+        avail_s[...] = avail
+        act_s[...] = act
+        bus_s[...] = bus
+        hist_s[...] = hist
+        ptr_s[...] = ptr
+        pmf_s[...] = pmf
+        fin_ref[j] = fin
+        return 0
+
+    jax.lax.fori_loop(0, tile, body, 0)
+
+    avail_out[...] = avail_s[...]
+    act_out[...] = act_s[...]
+    bus_out[...] = bus_s[...]
+    hist_out[...] = hist_s[...]
+    ptr_out[...] = ptr_s[...]
+    pmf_out[...] = pmf_s[...]
+
+
+def dram_serve_kernel(
+    issue: jnp.ndarray, meta: jnp.ndarray, boundary: jnp.ndarray,
+    timing: jnp.ndarray, avail: jnp.ndarray, act: jnp.ndarray,
+    bus: jnp.ndarray, hist: jnp.ndarray, ptr: jnp.ndarray,
+    pmf: jnp.ndarray, *, banks_per_rank: int, tile: int = SERVE_TILE,
+    interpret: bool = False,
+):
+    """Serve one fused-scan chunk of blocked ``[S, C, K]`` streams.
+
+    The six carry arrays are the in-scan serve state (persistent lean
+    carry + phase-makespan accumulator, see
+    ``repro.core.vectorized.init_lean_carry``); ``boundary`` is int32[S]
+    (nonzero = phase's last step), ``timing`` the traced int32[7]
+    vector.  S must be a multiple of ``tile`` (the ops wrapper pads
+    with invalid steps, which are state no-ops).  Returns
+    ``(finish[S, C, K], (avail, act, bus, hist, ptr, pmf))`` —
+    bit-identical to ``vec._fused_scan_core`` on the same inputs.
+    """
+    S, C, K = issue.shape
+    assert S % tile == 0, (S, tile)
+    B = avail.shape[1]
+    R = hist.shape[1]
+    grid = (S // tile,)
+    stream = pl.BlockSpec((tile, C, K), lambda t: (t, 0, 0))
+
+    def whole(shape):
+        ix = tuple(0 for _ in shape)
+        return pl.BlockSpec(shape, lambda t, _ix=ix: _ix)
+
+    carry_shapes = [(C, B), (C, B), (C,), (C, R, 4), (C, R), (C,)]
+    kern = functools.partial(_serve_kernel, tile=tile,
+                             banks_per_rank=banks_per_rank)
+    out = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[stream, stream, pl.BlockSpec((tile,), lambda t: (t,)),
+                  whole((7,))] + [whole(s) for s in carry_shapes],
+        out_specs=[stream] + [whole(s) for s in carry_shapes],
+        out_shape=[jax.ShapeDtypeStruct((S, C, K), jnp.int32)]
+        + [jax.ShapeDtypeStruct(s, jnp.int32) for s in carry_shapes],
+        scratch_shapes=[pltpu.VMEM(s, jnp.int32) for s in carry_shapes],
+        interpret=interpret,
+    )(issue.astype(jnp.int32), meta.astype(jnp.int32),
+      boundary.astype(jnp.int32), timing.astype(jnp.int32),
+      avail, act, bus, hist, ptr, pmf)
+    return out[0], tuple(out[1:])

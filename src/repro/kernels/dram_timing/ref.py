@@ -1,6 +1,6 @@
-"""Pure-jnp oracle for the dram_timing kernel: the lax.scan model from
-``core/vectorized`` (itself bit-exact against the python-loop semantics
-in ``core/timing`` — see tests/test_dram_timing.py)."""
+"""Pure-jnp oracles for the dram_timing kernels: the lax.scan models
+from ``core/vectorized`` (themselves bit-exact against the python-loop
+semantics in ``core/timing`` — see tests/test_dram_timing.py)."""
 
 from __future__ import annotations
 
@@ -9,13 +9,27 @@ import jax.numpy as jnp
 from repro.core import vectorized as vec
 
 
-def dram_timing_ref(issue, bank, row, valid, *, n_banks, banks_per_rank,
-                    tCL, tRCD, tRP, tRAS, tBL, tRRD, tFAW):
-    timing = jnp.array([tCL, tRCD, tRP, tRAS, tBL, tRRD, tFAW],
-                       dtype=jnp.int32)
+def dram_timing_ref(issue, bank, row, valid, timing, *, n_banks,
+                    banks_per_rank):
     finish, kind, _ = vec._simulate_packed(
         jnp.asarray(issue, jnp.int32), jnp.asarray(bank, jnp.int32),
         jnp.asarray(row, jnp.int32), jnp.asarray(valid, bool),
-        timing, n_banks, banks_per_rank,
+        jnp.asarray(timing, jnp.int32), n_banks, banks_per_rank,
     )
     return finish.astype(jnp.int32), kind.astype(jnp.int32)
+
+
+def dram_serve_ref(issue, meta, boundary, timing, avail, act, bus,
+                   hist, ptr, pmf, *, banks_per_rank):
+    """Blocked ``[S, C, K]`` serve oracle: the XLA ``lax.scan`` backend
+    run on exactly the carry/stream contract of
+    ``dram_serve_kernel`` — the bit-equivalence reference for the
+    ``serve_backend=pallas`` path."""
+    carry = (jnp.asarray(avail, jnp.int32), jnp.asarray(act, jnp.int32),
+             jnp.asarray(bus, jnp.int32), jnp.asarray(hist, jnp.int32),
+             jnp.asarray(ptr, jnp.int32), jnp.asarray(pmf, jnp.int32))
+    fin, state = vec._fused_scan_core(
+        jnp.asarray(issue, jnp.int32), jnp.asarray(meta, jnp.int32),
+        jnp.asarray(boundary).astype(bool),
+        jnp.asarray(timing, jnp.int32), carry, banks_per_rank)
+    return fin, state

@@ -23,3 +23,19 @@ def make_host_mesh(model: int = 2):
     n = len(jax.devices())
     model = min(model, n)
     return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+def make_sweep_mesh(devices: int):
+    """1-D ``("cases",)`` mesh over the first ``devices`` host devices —
+    the sweep executor's case-sharding axis (independent fused scans,
+    one shard of the case batch per device; no cross-device collectives
+    inside the scan)."""
+    avail = jax.devices()
+    if devices < 1:
+        raise ValueError(f"devices must be >= 1, got {devices}")
+    if devices > len(avail):
+        raise ValueError(
+            f"devices={devices} exceeds the {len(avail)} visible "
+            f"device(s); set XLA_FLAGS=--xla_force_host_platform_"
+            f"device_count=N to mock a larger CPU mesh")
+    return jax.sharding.Mesh(avail[:devices], ("cases",))

@@ -295,12 +295,16 @@ class SimService:
 
     def __init__(self, backend: Optional[str] = None,
                  batch_memories: bool = False, workers: int = 1, *,
+                 devices: int = 1,
                  retry: RetryPolicy = RetryPolicy(),
                  admission: AdmissionConfig = AdmissionConfig(),
                  breaker: BreakerConfig = BreakerConfig()):
+        # devices>1 shards the resident sweeper's batched serves over a
+        # 1-D case mesh; admission batching upstream feeds it full case
+        # groups, and rows stay bit-identical to the 1-device service
         self._sweeper = Sweeper(backend=backend,
                                 batch_memories=batch_memories,
-                                workers=workers)
+                                workers=workers, devices=devices)
         self.retry = retry
         self.admission = admission
         self.service_stats = ServiceStats()

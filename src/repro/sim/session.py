@@ -200,6 +200,7 @@ class SimSession:
             config=None, memory: MemoryLike = None,
             cache: CacheLike = None,
             backend: Optional[str] = None, variant: Optional[str] = None,
+            serve_backend: Optional[str] = None,
             root: int = 0, fixed_iters: Optional[int] = None,
             **overrides) -> SimReport:
         problem = _coerce_problem(problem)
@@ -212,6 +213,14 @@ class SimSession:
             # after variants: a dram-overriding variant (e.g. AccuGraph
             # "hbm") must not discard the requested on-chip cache
             cfg = spec.make_config(cfg, cache=cache_cfg)
+        if serve_backend is not None:
+            # serve_backend lives on the DRAMConfig and is timing-only
+            # (declared in TIMING_ONLY_FIELDS): pinning it never splits
+            # the session's geometry-keyed model/pack caches.
+            dram = (cfg.dram_config() if hasattr(cfg, "dram_config")
+                    else cfg.dram)
+            cfg = spec.make_config(cfg, memory=dataclasses.replace(
+                dram, serve_backend=serve_backend))
         run = self.algorithm_run(spec, problem, cfg, root, fixed_iters)
         return spec.simulate(self.graph, problem, cfg, backend=backend,
                              root=root, fixed_iters=fixed_iters, run=run,
@@ -222,6 +231,7 @@ def simulate(graph: GraphLike, problem, accelerator: str = "hitgraph", *,
              config=None, memory: MemoryLike = None,
              cache: CacheLike = None,
              backend: Optional[str] = None, variant: Optional[str] = None,
+             serve_backend: Optional[str] = None,
              root: int = 0, fixed_iters: Optional[int] = None,
              **overrides) -> SimReport:
     """Run one simulation through the spec registry.
@@ -253,8 +263,14 @@ def simulate(graph: GraphLike, problem, accelerator: str = "hitgraph", *,
                   the accelerator's preferred backend.
     variant:      named optimization variant of the accelerator
                   (``spec.variants()``), e.g. ``"prefetch_skip"``.
+    serve_backend: fused-scan serve implementation on the vectorized
+                  path: ``"auto"`` (Pallas kernel on TPU/GPU, XLA scan
+                  on CPU), ``"scan"``, or ``"pallas"`` — bit-identical
+                  results, execution speed only.  ``None`` keeps the
+                  memory point's own ``DRAMConfig.serve_backend``
+                  (default ``"auto"``).
     """
     return SimSession(graph).run(
         problem, accelerator, config=config, memory=memory, cache=cache,
-        backend=backend, variant=variant, root=root,
-        fixed_iters=fixed_iters, **overrides)
+        backend=backend, variant=variant, serve_backend=serve_backend,
+        root=root, fixed_iters=fixed_iters, **overrides)

@@ -176,7 +176,9 @@ class SweepStats:
     pack_cache_misses: int = 0
     batched_cases: int = 0
     batch_dispatches: int = 0
+    sharded_dispatches: int = 0
     workers: int = 1
+    devices: int = 1
 
 
 class Sweeper:
@@ -189,21 +191,39 @@ class Sweeper:
     whose packed programs share a compiled shape (same steps x channels x
     banks x ranks — e.g. one accelerator/graph across timing variants)
     are stacked and served by ONE ``vmap``-ed fused-scan dispatch;
-    remaining cases fall back to the per-case path.
+    remaining cases fall back to the per-case path.  ``devices=N``
+    additionally shards those stacked dispatches over a 1-D case mesh
+    (:func:`repro.launch.mesh.make_sweep_mesh`): each device serves its
+    slice of the batch with identical per-case math, so rows stay
+    bit-identical for ANY (workers, devices) combination.
     """
 
     def __init__(self, backend: Optional[str] = None,
-                 batch_memories: bool = False, workers: int = 1):
+                 batch_memories: bool = False, workers: int = 1,
+                 devices: int = 1):
         if workers < 1:
             raise ValueError(f"workers must be >= 1, got {workers}")
+        if devices < 1:
+            raise ValueError(f"devices must be >= 1, got {devices}")
         self.backend = backend
         self.batch_memories = batch_memories
         self.workers = workers
+        self.devices = devices
+        self._mesh = None  # built lazily on first sharded dispatch
         # race-instrumented under REPRO_ANALYSIS_LOCKS=1
         self._sessions_lock = locks.make_lock("sweeper-sessions")
         self._sessions: Dict[int, SimSession] = \
             locks.make_dict("Sweeper._sessions", self._sessions_lock)
-        self.stats = SweepStats(workers=workers)
+        self.stats = SweepStats(workers=workers, devices=devices)
+
+    def _sweep_mesh(self):
+        """Build (once) the 1-D case mesh for ``devices > 1``.  Lazy so
+        a single-device sweeper never imports the distributed stack nor
+        touches jax device state."""
+        if self._mesh is None:
+            from repro.launch.mesh import make_sweep_mesh
+            self._mesh = make_sweep_mesh(self.devices)
+        return self._mesh
 
     def _session(self, g: Graph) -> SimSession:
         # worker threads race here via _prepare_case; two sessions for
@@ -225,6 +245,7 @@ class Sweeper:
             sessions = list(self._sessions.values())
         s = self.stats
         s.workers = self.workers
+        s.devices = self.devices
         s.algo_runs = sum(x.algo_runs for x in sessions)
         s.algo_cache_hits = sum(x.algo_cache_hits for x in sessions)
         s.pack_cache_hits = sum(x.pack_cache_hits for x in sessions)
@@ -387,7 +408,9 @@ class Sweeper:
                             return ProgramStats([], 0, 0, 0, 0)
                         s, _ = serve_packed(
                             packed,
-                            timing=vec.timing_params(dram.timing))
+                            timing=vec.timing_params(dram.timing),
+                            serve_backend=getattr(
+                                dram, "serve_backend", "auto"))
                         return s
                     stats = self._guard(i, case, _serve)
                     stats.attach_cache(cstats)
@@ -434,22 +457,45 @@ class Sweeper:
                 [vec.timing_params(it[6].timing) for it in items])
             device = all(isinstance(p, DevicePackedProgram)
                          for p in packs)
+            # devices > 1: shard the case batch over the 1-D case mesh —
+            # same vmapped per-case math on each device's slice, so rows
+            # are bit-identical to the single-device dispatch
+            shard = self.devices > 1 and len(items) > 1
+            if shard:
+                from repro.distributed.sharding import (
+                    sharded_fused_scan_batch,
+                    sharded_fused_scan_batch_shared)
+                mesh = self._sweep_mesh()
+                self.stats.sharded_dispatches += 1
             if len({id(p) for p in packs}) == 1:
                 # one cached pack, many timing vectors: serve the
                 # resident program against the whole timing batch
                 # without replicating its streams
-                fins, _ = vec.fused_scan_batch_shared(
-                    packs[0].issue, packs[0].meta, packs[0].boundary,
-                    timings, packs[0].n_banks, packs[0].banks_per_rank,
-                    as_numpy=not device)
+                if shard:
+                    fins, _ = sharded_fused_scan_batch_shared(
+                        packs[0].issue, packs[0].meta,
+                        packs[0].boundary, timings, packs[0].n_banks,
+                        packs[0].banks_per_rank, mesh,
+                        as_numpy=not device)
+                else:
+                    fins, _ = vec.fused_scan_batch_shared(
+                        packs[0].issue, packs[0].meta,
+                        packs[0].boundary, timings, packs[0].n_banks,
+                        packs[0].banks_per_rank, as_numpy=not device)
             else:
                 stack = jnp.stack if device else np.stack
-                fins, _ = vec.fused_scan_batch(
-                    stack([p.issue for p in packs]),
-                    stack([p.meta for p in packs]),
-                    stack([p.boundary for p in packs]), timings,
-                    packs[0].n_banks, packs[0].banks_per_rank,
-                    as_numpy=not device)
+                streams = (stack([p.issue for p in packs]),
+                           stack([p.meta for p in packs]),
+                           stack([p.boundary for p in packs]))
+                if shard:
+                    fins, _ = sharded_fused_scan_batch(
+                        *streams, timings, packs[0].n_banks,
+                        packs[0].banks_per_rank, mesh,
+                        as_numpy=not device)
+                else:
+                    fins, _ = vec.fused_scan_batch(
+                        *streams, timings, packs[0].n_banks,
+                        packs[0].banks_per_rank, as_numpy=not device)
             share = (time.perf_counter() - t0) / len(items)
             for (i, case, model, run_, packed, cstats, _dram,
                  wall), m in zip(items, range(len(items))):
@@ -492,6 +538,7 @@ def sweep(graphs: Iterable[GraphLike] = (), problems: Iterable = (),
           backend: Optional[str] = None,
           cases: Optional[Sequence[SweepCase]] = None,
           batch_memories: bool = False, workers: int = 1,
+          devices: int = 1,
           graph_scale: float = 1.0, graph_seed: int = 0,
           sweeper: Optional[Sweeper] = None) -> List[SweepRow]:
     """Run a simulation grid; returns one row per grid point.
@@ -514,8 +561,10 @@ def sweep(graphs: Iterable[GraphLike] = (), problems: Iterable = (),
     case raises :class:`SweepError` naming it).  ``batch_memories=True``
     stacks cases whose packed programs share a compiled shape (typically
     the memory axis of one accelerator/graph point) into single
-    ``vmap``-ed fused-scan dispatches.  Pass a :class:`Sweeper` to share
-    its cache/stats across calls or to inspect ``sweeper.stats``
+    ``vmap``-ed fused-scan dispatches; ``devices=N`` shards those
+    stacked dispatches over a 1-D case mesh — rows are bit-identical for
+    any (workers, devices) combination.  Pass a :class:`Sweeper` to
+    share its cache/stats across calls or to inspect ``sweeper.stats``
     afterwards.
     """
     if cases is None:
@@ -531,7 +580,7 @@ def sweep(graphs: Iterable[GraphLike] = (), problems: Iterable = (),
         ]
     if sweeper is None:
         sweeper = Sweeper(backend=backend, batch_memories=batch_memories,
-                          workers=workers)
+                          workers=workers, devices=devices)
     else:
         if batch_memories and not sweeper.batch_memories:
             raise ValueError(
@@ -541,4 +590,8 @@ def sweep(graphs: Iterable[GraphLike] = (), problems: Iterable = (),
             raise ValueError(
                 "workers= conflicts with the provided sweeper "
                 f"(it was constructed with workers={sweeper.workers})")
+        if devices != 1 and devices != sweeper.devices:
+            raise ValueError(
+                "devices= conflicts with the provided sweeper "
+                f"(it was constructed with devices={sweeper.devices})")
     return sweeper.run(cases)

@@ -354,7 +354,8 @@ class TestKernelParity:
         out = lint(tmp_path, KERNEL, rel="kernels/scan/kernel.py",
                    extra={"kernels/scan/ref.py": "def other_ref(x):\n"
                                                  "    return x\n",
-                          "tests/test_kernels.py": "# exercises scan\n"})
+                          "tests/test_kernels.py":
+                          "# exercises scan via other_ref\n"})
         assert rules_of(out) == ["kernel-parity"]
         assert out[0].symbol == "scan_kernel"
 
@@ -362,7 +363,8 @@ class TestKernelParity:
         out = lint(tmp_path, KERNEL, rel="kernels/scan/kernel.py",
                    extra={"kernels/scan/ref.py":
                           "def scan_ref(x, extra_knob):\n    return x\n",
-                          "tests/test_kernels.py": "# exercises scan\n"})
+                          "tests/test_kernels.py":
+                          "# exercises scan_ref\n"})
         assert rules_of(out) == ["kernel-parity"]
         assert "extra_knob" in out[0].message
 
@@ -371,14 +373,43 @@ class TestKernelParity:
                    extra={"kernels/scan/ref.py":
                           "def scan_ref(x):\n    return x\n",
                           "tests/test_kernels.py": "# nothing here\n"})
-        assert rules_of(out) == ["kernel-parity"]
-        assert "coverage" in out[0].message
+        # both directions fire: the package isn't referenced
+        # (kernel-parity) and its oracle is never exercised
+        # (kernel-parity-coverage)
+        assert rules_of(out) == ["kernel-parity",
+                                 "kernel-parity-coverage"]
+        assert any("coverage is missing" in f.message for f in out)
 
     def test_paired_kernel_passes(self, tmp_path):
         out = lint(tmp_path, KERNEL, rel="kernels/scan/kernel.py",
                    extra={"kernels/scan/ref.py":
                           "def scan_ref(x, block=128):\n    return x\n",
-                          "tests/test_kernels.py": "# exercises scan\n"})
+                          "tests/test_kernels.py":
+                          "# exercises scan_ref\n"})
+        assert out == []
+
+
+class TestKernelParityCoverage:
+    def test_unexercised_ref_flagged(self, tmp_path):
+        out = lint(tmp_path, KERNEL, rel="kernels/scan/kernel.py",
+                   extra={"kernels/scan/ref.py":
+                          "def scan_ref(x, block=128):\n    return x\n"
+                          "def extra_ref(x):\n    return x\n",
+                          "tests/test_kernels.py":
+                          "# exercises scan_ref only\n"})
+        assert rules_of(out) == ["kernel-parity-coverage"]
+        (f,) = out
+        assert f.symbol == "extra_ref"
+        assert f.path == "kernels/scan/ref.py"
+
+    def test_private_and_non_ref_helpers_ignored(self, tmp_path):
+        out = lint(tmp_path, KERNEL, rel="kernels/scan/kernel.py",
+                   extra={"kernels/scan/ref.py":
+                          "def scan_ref(x, block=128):\n    return x\n"
+                          "def _loop_ref(x):\n    return x\n"
+                          "def unpack(x):\n    return x\n",
+                          "tests/test_kernels.py":
+                          "# exercises scan_ref\n"})
         assert out == []
 
 
