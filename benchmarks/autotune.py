@@ -1,0 +1,133 @@
+"""Design-space autotuner benchmark: halving search on a skewed graph.
+
+Runs a :class:`repro.tune.SearchDriver` over a restricted hitgraph
+space on the ``powerlaw-social`` corpus preset (Zipf-degree,
+live-journal-like skew — the topology where partition/cache geometry
+actually trades off) and CROSS-CHECKS the result against an exhaustive
+sweep of the same space at top fidelity:
+
+* every config the search reports is non-dominated in the FULL space
+  (not merely among the candidates the search happened to evaluate);
+* the front is bit-identical for repeated runs at one seed and for any
+  sweep worker count (the determinism contract of
+  ``src/repro/tune/README.md``).
+
+Both checks are **asserted**, so a regression in either the search
+ranking or the sweep engine's cross-worker determinism fails the
+benchmark, not just a dashboard.
+
+Emits ``bench="tune"`` rows; ``tune_cases_per_sec`` (search-side case
+evaluations per second, batching included) is the tracked perf figure —
+``benchmarks/run.py --only tune`` appends it to ``BENCH_tune.json`` and
+CI gates it via ``check_regression.py --keys tune_cases_per_sec``.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+from repro.sim.registry import get_accelerator
+from repro.sim.sweep import Sweeper
+from repro.tune import (HalvingBudget, SearchDriver, dominates,
+                        front_of_rows, objectives_of)
+
+GRAPH = "powerlaw-social"      # n=65536, m=1M at graph_scale=1.0
+PROBLEM = "pr"
+SEED = 7
+#: prep threads for the search-side sweeper (results are identical for
+#: any value; the invariance is asserted below)
+WORKERS = 2
+
+BUDGET = HalvingBudget(rungs=(2, 4), initial=8, keep=0.5,
+                       max_case_evals=16)
+
+
+def _space():
+    """A 16-point exhaustively-checkable slice of the default hitgraph
+    space (every point valid: <=4 PEs fits both devices' channels)."""
+    return get_accelerator("hitgraph").design_space().restrict(
+        n_pes=["1", "4"], pipelines=["8"],
+        partition_elements=["parts4", "parts16"],
+        memory=["ddr3", "hbm2"], cache=["none", "prefetch-8"])
+
+
+def _search(graph_scale: float, workers: int, sweeper=None):
+    driver = SearchDriver(
+        _space(), seed=SEED, budget=BUDGET,
+        sweeper=sweeper or Sweeper(workers=workers,
+                                   batch_memories=True))
+    t0 = time.perf_counter()
+    res = driver.search(_scenario_graph(graph_scale), PROBLEM)
+    return res, time.perf_counter() - t0
+
+
+def _scenario_graph(graph_scale: float):
+    from repro.sim import resolve_graph
+    return resolve_graph(GRAPH, scale=graph_scale)
+
+
+def run(scale: float = 0.02) -> List[Dict]:
+    rows: List[Dict] = []
+    space = _space()
+
+    res, search_wall = _search(scale, WORKERS)
+    assert res.front, "autotune search returned an empty front"
+
+    # ---- determinism: same seed, different worker count, same front
+    res2, _ = _search(scale, workers=1)
+    assert res.front_keys() == res2.front_keys(), (
+        "front differs across sweep worker counts:\n"
+        f"  workers={WORKERS}: {res.front_keys()}\n"
+        f"  workers=1: {res2.front_keys()}")
+    assert ([e.objectives for e in res.front]
+            == [e.objectives for e in res2.front])
+
+    # ---- optimality: exhaustive cross-check at top fidelity
+    sweeper = Sweeper(workers=WORKERS, batch_memories=True)
+    points = space.enumerate()
+    g = _scenario_graph(scale)
+    top = BUDGET.rungs[-1]
+    t0 = time.perf_counter()
+    full_rows = sweeper.run([p.to_case(g, PROBLEM, fixed_iters=top)
+                             for p in points])
+    exhaustive_wall = time.perf_counter() - t0
+    vectors = {p.key: objectives_of(r)
+               for p, r in zip(points, full_rows)}
+    for entry in res.front:
+        dominating = [k for k, v in vectors.items()
+                      if dominates(v, entry.objectives)]
+        assert not dominating, (
+            f"search-reported config {entry.key} is dominated in the "
+            f"full space by {dominating}")
+    true_front = front_of_rows(
+        {p.key: r for p, r in zip(points, full_rows)})
+
+    rows.append({
+        "bench": "tune", "variant": "tune", "graph": GRAPH,
+        "problem": PROBLEM, "graph_scale": scale, "seed": SEED,
+        "workers": WORKERS,
+        "cases": res.stats.case_evals, "wall_s": search_wall,
+        "cases_per_sec": res.stats.case_evals / search_wall,
+        "dispatches": res.stats.dispatches,
+        "front_size": len(res.front),
+        "space_points": len(points),
+        "budget_max_case_evals": BUDGET.max_case_evals,
+        "front": [e.key for e in res.front],
+    })
+    rows.append({
+        "bench": "tune", "variant": "exhaustive", "graph": GRAPH,
+        "problem": PROBLEM, "graph_scale": scale, "workers": WORKERS,
+        "cases": len(points), "wall_s": exhaustive_wall,
+        "cases_per_sec": len(points) / exhaustive_wall,
+        "front_size": len(true_front),
+        "search_front_on_true_front": sum(
+            1 for e in res.front
+            if e.key in {t.key for t in true_front}),
+    })
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(row)

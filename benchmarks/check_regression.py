@@ -43,14 +43,31 @@ from pathlib import Path
 GATED_KEYS = ("warm_cases_per_sec", "batched_timing_cases_per_sec")
 
 
+class TrajectoryError(RuntimeError):
+    """A trajectory file exists but cannot be read as a row list.
+
+    This must FAIL the gate, not pass it: a corrupted committed
+    ``BENCH_*.json`` used to parse to ``[]``, which looked exactly like
+    "no comparable committed row" and let the perf gate pass silently
+    until someone noticed the history was gone."""
+
+
 def load_rows(path: Path):
     if not path.exists():
         return []
     try:
         rows = json.loads(path.read_text())
-    except json.JSONDecodeError:
-        return []
-    return rows if isinstance(rows, list) else []
+    except json.JSONDecodeError as e:
+        raise TrajectoryError(
+            f"{path} exists but is not valid JSON ({e}); refusing to "
+            "treat a corrupted trajectory as an empty one — fix or "
+            "regenerate the file") from e
+    if not isinstance(rows, list):
+        raise TrajectoryError(
+            f"{path} parsed to {type(rows).__name__}, expected a JSON "
+            "list of trajectory rows — the file is corrupted or has "
+            "the wrong schema")
+    return rows
 
 
 def comparable(row: dict, ref: dict) -> bool:
@@ -84,14 +101,18 @@ def main(argv=None) -> int:
                         if k.strip())
                   if args.keys else GATED_KEYS)
 
-    current_rows = load_rows(Path(args.current))
+    try:
+        current_rows = load_rows(Path(args.current))
+        baseline_rows = load_rows(Path(args.baseline))
+    except TrajectoryError as e:
+        print(f"::error::{e}")
+        return 1
     if not current_rows:
         print(f"::error::{args.current} is empty — did the sweep "
               "benchmark run?")
         return 1
     row = current_rows[-1]
 
-    baseline_rows = load_rows(Path(args.baseline))
     refs = [r for r in baseline_rows if comparable(row, r)]
     verdict = {"row": row, "gated": {}, "ok": True,
                "baseline_rows": len(baseline_rows)}

@@ -27,6 +27,7 @@ from repro.core.dram import ddr4_2400r
 from repro.core.hitgraph import CONTIGUOUS_ORDER
 from repro.graphs.corpus import GraphStore
 from repro.graphs.datasets import TABLE1, instantiate
+from repro.sim import policy
 
 # default benchmark scale: ~1% of the full datasets (seconds per sim)
 SCALE = 0.01
@@ -60,12 +61,12 @@ def graph(abbr: str, scale: float = SCALE, undirected: bool = False,
 
 
 def scaled_q(q_full: int, abbr: str, scale: float = SCALE) -> int:
-    """Preserve the paper's partition COUNT on scaled stand-ins."""
-    spec = TABLE1[abbr]
-    n_full = spec.vertices
-    g = graph(abbr, scale)
-    frac = g.n / n_full
-    return max(int(q_full * frac), 256)
+    """Preserve the paper's partition COUNT on scaled stand-ins (thin
+    wrapper over the library policy — see :mod:`repro.sim.policy`; use
+    ``PartitionPolicy(q_full=..., n_full=..., floor=256)`` directly in
+    sweep/search configs instead of hardcoding q per scale)."""
+    return policy.scaled_q(q_full, TABLE1[abbr].vertices,
+                           graph(abbr, scale).n, floor=256)
 
 
 def hitgraph_cfg(abbr: str, scale: float = SCALE) -> hitgraph.HitGraphConfig:

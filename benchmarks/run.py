@@ -24,6 +24,7 @@ from pathlib import Path
 REPO_ROOT = Path(__file__).resolve().parent.parent
 BENCH_SWEEP_PATH = REPO_ROOT / "BENCH_sweep.json"
 BENCH_SERVICE_PATH = REPO_ROOT / "BENCH_service.json"
+BENCH_TUNE_PATH = REPO_ROOT / "BENCH_tune.json"
 
 
 def append_sweep_trajectory(sweep_rows, scale: float,
@@ -95,25 +96,56 @@ def append_service_trajectory(service_rows, scale: float,
     return entry
 
 
+def append_tune_trajectory(tune_rows, scale: float,
+                           path: Path = BENCH_TUNE_PATH) -> dict:
+    """Append one {date, scale, tune_cases_per_sec, front_size...} row
+    to ``BENCH_tune.json`` (same append-style trajectory + host tagging
+    as the sweep figure; the CI gate compares ``tune_cases_per_sec``
+    like-for-like via ``check_regression.py --keys``)."""
+    entry = {
+        "date": datetime.date.today().isoformat(),
+        "scale": scale,
+    }
+    host = os.environ.get("REPRO_BENCH_HOST")
+    if host:
+        entry["host"] = host
+    for r in tune_rows:
+        if r.get("bench") != "tune":
+            continue
+        v = r["variant"]
+        entry[f"{v}_cases_per_sec"] = round(r["cases_per_sec"], 3)
+        entry[f"{v}_front_size"] = r["front_size"]
+        entry.setdefault("workers", r.get("workers"))
+    history = []
+    if path.exists():
+        try:
+            history = json.loads(path.read_text())
+        except json.JSONDecodeError:
+            history = []
+    history.append(entry)
+    path.write_text(json.dumps(history, indent=1) + "\n")
+    return entry
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--scale", type=float, default=0.01)
     ap.add_argument("--only", default=None,
                     help="comma list: fig09,fig10,fig11,fig12,fig13,"
                          "fig02,dram,kernels,sweep,cache,corpus,"
-                         "service")
+                         "service,tune")
     ap.add_argument("--json-out", default=None)
     ap.add_argument("--no-trajectory", action="store_true",
                     help="skip appending the sweep row to BENCH_sweep.json")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
-    from benchmarks import (cache_hierarchy, corpus_sweep, dram_types,
-                            fig02_repro_error, fig09_hitgraph,
-                            fig10_accugraph, fig11_degree,
-                            fig12_comparability, fig13_optimizations,
-                            kernel_bench, service_load,
-                            sweep_throughput)
+    from benchmarks import (autotune, cache_hierarchy, corpus_sweep,
+                            dram_types, fig02_repro_error,
+                            fig09_hitgraph, fig10_accugraph,
+                            fig11_degree, fig12_comparability,
+                            fig13_optimizations, kernel_bench,
+                            service_load, sweep_throughput)
 
     suites = {
         "fig09": lambda: fig09_hitgraph.run(args.scale),
@@ -128,6 +160,7 @@ def main() -> int:
         "cache": lambda: cache_hierarchy.run(args.scale),
         "corpus": lambda: corpus_sweep.run(args.scale),
         "service": lambda: service_load.run(args.scale),
+        "tune": lambda: autotune.run(args.scale),
     }
 
     all_rows = []
@@ -171,6 +204,10 @@ def main() -> int:
         entry = append_service_trajectory(rows_by_suite["service"],
                                           args.scale)
         print(f"# BENCH_service.json += {entry}", file=sys.stderr)
+    if "tune" in rows_by_suite and not args.no_trajectory:
+        entry = append_tune_trajectory(rows_by_suite["tune"],
+                                       args.scale)
+        print(f"# BENCH_tune.json += {entry}", file=sys.stderr)
     if args.json_out:
         with open(args.json_out, "w") as f:
             json.dump(all_rows, f, indent=1, default=str)

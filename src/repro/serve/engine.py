@@ -155,8 +155,10 @@ class RetryPolicy:
 @dataclasses.dataclass(frozen=True)
 class AdmissionConfig:
     """Admission-control budgets.  Costs are in *case-equivalents*:
-    ``1 + edges/1e6`` per case, scaled down for iteration-capped cases —
-    a coarse but monotone proxy for sweep time."""
+    ``(1 + edges/1e6) * fixed_iters/32`` per case (unscaled when
+    ``fixed_iters`` is None) — a coarse but monotone proxy for sweep
+    time.  The iteration factor is unclamped, so long fixed-iteration
+    jobs are charged proportionally instead of at flat cost."""
 
     max_inflight_jobs: int = 256     # queued + running, all tenants
     max_tenant_jobs: int = 64        # queued + running, one tenant
@@ -345,11 +347,17 @@ class SimService:
 
     # ---- client surface ----------------------------------------------
     def _estimate(self, cases: Sequence[SweepCase]) -> float:
+        # Proportional in fixed_iters with NO clamp: a 500-iteration job
+        # really is ~16x a 32-iteration one, and clamping at 32 used to
+        # admit long jobs at flat cost — they blew straight through
+        # max_queued_cost.  The degraded arm stays consistent for free:
+        # it caps fixed_iters at degraded_iter_cap and re-estimates, so
+        # its cost shrinks with the same proportional rule.
         cost = 0.0
         for c in cases:
             unit = 1.0 + c.graph.m / 1e6
             if c.fixed_iters is not None:
-                unit *= min(c.fixed_iters, 32) / 32.0
+                unit *= c.fixed_iters / 32.0
             cost += unit
         return cost
 

@@ -26,6 +26,8 @@ from repro.sim.memory import (CACHE_PRESETS, MEMORY_PRESETS, MemoryConfig,
                               cache_name, cache_variants, memory_name,
                               resolve_cache, resolve_memory,
                               timing_variants)
+from repro.sim.policy import (PartitionPolicy, resolve_partitioned_config,
+                              scaled_q)
 from repro.sim.reference_model import ReferenceConfig, ReferenceModel
 from repro.sim.registry import (AcceleratorSpec, get_accelerator,
                                 list_accelerators, register_accelerator)
@@ -48,6 +50,7 @@ __all__ = [
     "CacheConfig", "CacheStats", "CACHE_PRESETS", "resolve_cache",
     "cache_name", "cache_variants",
     "BACKENDS", "EventDRAM", "make_backend",
+    "PartitionPolicy", "resolve_partitioned_config", "scaled_q",
     "Sweeper", "SweepCase", "SweepRow", "SweepStats", "SweepError",
     "ReferenceConfig", "ReferenceModel",
     "HitGraphSpec", "AccuGraphSpec", "ReferenceSpec",

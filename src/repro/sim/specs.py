@@ -56,6 +56,38 @@ class HitGraphSpec(AcceleratorSpec):
             "no_skipping": {"partition_skipping": False},
         }
 
+    def design_space(self):
+        """Default searchable space (paper Tab. 4 geometry +/- a factor
+        of ~4 each way, the three memory grades, and the prefetch-depth
+        ladder).  Partition sizing is graph-relative
+        (:class:`~repro.sim.policy.PartitionPolicy` counts) so one space
+        serves every scenario scale.  The ``pes-within-channels``
+        constraint prunes points whose scatter/gather engines outnumber
+        the memory channels they are pinned to (paper Tab. 4 pairs one
+        PE per channel; more PEs than channels just serializes)."""
+        from repro.sim.memory import resolve_memory
+        from repro.sim.policy import PartitionPolicy
+        from repro.tune.space import Constraint, DesignSpace, Dimension
+
+        def pes_within_channels(a) -> bool:
+            return a["n_pes"] <= resolve_memory(a["memory"]).channels
+
+        return DesignSpace(
+            accelerator=self.name,
+            dimensions=(
+                Dimension("n_pes", (1, 2, 4, 8)),
+                Dimension("pipelines", (4, 8, 16)),
+                Dimension("partition_elements",
+                          tuple(PartitionPolicy(count=c)
+                                for c in (4, 16, 64))),
+                Dimension("memory", ("ddr3", "ddr4", "hbm2")),
+                Dimension("cache",
+                          ("none", "prefetch-4", "prefetch-8")),
+            ),
+            constraints=(
+                Constraint("pes-within-channels", pes_within_channels),
+            ))
+
     def default_cache(self):
         """HitGraph's on-chip story is *prefetching*, not caching: edge
         lists, update queues, and value regions stream sequentially, and
@@ -110,6 +142,47 @@ class AccuGraphSpec(AcceleratorSpec):
             # DDR4 (see optimizations.py).
             "hbm": {"dram": hbm2()},
         }
+
+    #: searchable BRAM budget: the original's 2 MiB of vertex storage
+    BRAM_BUDGET_BYTES = 2 * 1024 * 1024
+
+    def design_space(self):
+        """Default searchable space: pipeline widths around the paper
+        geometry, all-BRAM vs partitioned execution, the DDR4 grades
+        plus the §7 HBM2 stack, and a vertex-cache capacity ladder that
+        deliberately includes an over-budget 4 MiB point — the
+        ``bram-budget`` constraint prunes it, exercising the validity
+        machinery the way a real floorplan limit would."""
+        from repro.core.cache import CacheConfig
+        from repro.sim.memory import resolve_cache
+        from repro.sim.policy import PartitionPolicy
+        from repro.tune.space import Constraint, DesignSpace, Dimension
+
+        budget = self.BRAM_BUDGET_BYTES
+
+        def bram_within_budget(a) -> bool:
+            cache = resolve_cache(a["cache"], self)
+            return (cache is None
+                    or cache.capacity_bytes <= budget)
+
+        return DesignSpace(
+            accelerator=self.name,
+            dimensions=(
+                Dimension("edge_pipelines", (8, 16, 32)),
+                Dimension("vertex_pipelines", (4, 8)),
+                Dimension("partition_elements",
+                          (None,) + tuple(PartitionPolicy(count=c)
+                                          for c in (4, 16))),
+                Dimension("memory", ("ddr4", "ddr4-8gb", "hbm2")),
+                Dimension("cache",
+                          ("none", "vertex-256k", "vertex-1m",
+                           "vertex-2m",
+                           CacheConfig(lines=65536, ways=16,
+                                       name="vertex-4m"))),
+            ),
+            constraints=(
+                Constraint("bram-budget", bram_within_budget),
+            ))
 
     def default_cache(self):
         """AccuGraph's defining feature is the vertex BRAM: values (and

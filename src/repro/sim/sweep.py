@@ -49,6 +49,7 @@ from repro.graphs.corpus import GraphLike, resolve_graph
 from repro.graphs.formats import Graph
 from repro.sim.memory import (CacheLike, MemoryLike, cache_name,
                               memory_name, resolve_cache, resolve_memory)
+from repro.sim.policy import resolve_partitioned_config
 from repro.sim.registry import get_accelerator
 from repro.sim.session import SimSession, _coerce_problem
 from repro.serve import chaos
@@ -64,6 +65,12 @@ class SweepCase:
     construction through the memoized corpus resolver, so every case
     naming one scenario shares a single graph object (and therefore one
     per-graph session in the sweep engine).
+
+    ``config`` may carry a :class:`~repro.sim.policy.PartitionPolicy` in
+    its ``partition_elements`` field (a graph-relative partition count);
+    it resolves against the resolved graph here, so every downstream
+    consumer (sessions, the service, design-space search) only ever
+    sees concrete integer configs.
     """
 
     graph: GraphLike
@@ -85,6 +92,9 @@ class SweepCase:
             self, "graph",
             resolve_graph(self.graph, scale=self.graph_scale,
                           seed=self.graph_seed))
+        object.__setattr__(
+            self, "config",
+            resolve_partitioned_config(self.config, self.graph))
 
 
 def case_chaos_key(case: "SweepCase") -> str:
@@ -240,7 +250,15 @@ class Sweeper:
 
     def _sync_stats(self) -> None:
         """Cache counters live on the (thread-safe) sessions; mirror
-        their totals onto the stats surface."""
+        their totals onto the stats surface.
+
+        Called once per :meth:`run` at the drain/return boundary (in a
+        ``finally``, so interrupted sweeps surface their partial
+        counters too) — NOT per case: re-summing every session's
+        counters under the sessions lock after each of N cases is
+        O(N x sessions) lock traffic, which the autotuner's large
+        generated grids turned into a measurable serialization point.
+        """
         with self._sessions_lock:
             sessions = list(self._sessions.values())
         s = self.stats
@@ -265,7 +283,6 @@ class Sweeper:
             fixed_iters=case.fixed_iters)
         wall = time.perf_counter() - t0
         self.stats.cases += 1
-        self._sync_stats()
         return SweepRow(case=case, report=report, wall_s=wall)
 
     @staticmethod
@@ -306,22 +323,28 @@ class Sweeper:
         resident sweeper)."""
         cases = list(cases)
         backend = self.backend if backend is None else backend
-        if backend in (None, "vectorized"):
-            if self.batch_memories:
-                rows = self._run_batched(cases, control)
+        # one stats sync per run, at the drain boundary — the finally
+        # keeps interrupted/failed sweeps' partial counters visible
+        # without paying a per-case re-sum (see _sync_stats)
+        try:
+            if backend in (None, "vectorized"):
+                if self.batch_memories:
+                    rows = self._run_batched(cases, control)
+                else:
+                    rows = self._run_pipelined(cases, control)
             else:
-                rows = self._run_pipelined(cases, control)
-        else:
-            order = sorted(
-                range(len(cases)),
-                key=lambda i: (cases[i].accelerator, cases[i].graph.fingerprint))
-            rows = [None] * len(cases)
-            for i in order:
-                self._check_control(control, rows)
-                rows[i] = self._guard(
-                    i, cases[i],
-                    lambda: self.run_case(cases[i], backend=backend))
-        self._sync_stats()
+                order = sorted(
+                    range(len(cases)),
+                    key=lambda i: (cases[i].accelerator,
+                                   cases[i].graph.fingerprint))
+                rows = [None] * len(cases)
+                for i in order:
+                    self._check_control(control, rows)
+                    rows[i] = self._guard(
+                        i, cases[i],
+                        lambda: self.run_case(cases[i], backend=backend))
+        finally:
+            self._sync_stats()
         return rows
 
     def _prepare_case(self, case: SweepCase):

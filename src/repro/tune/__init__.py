@@ -1,0 +1,28 @@
+"""repro.tune — accelerator design-space search over the sweep engine.
+
+Declare a :class:`DesignSpace` (or take an accelerator's default via
+``get_accelerator(name).design_space()``), hand it to a
+:class:`SearchDriver` with a :class:`HalvingBudget`, and get back a
+seed-deterministic Pareto front (cycles vs DRAM requests vs BRAM bytes)
+per graph scenario.  See ``src/repro/tune/README.md``.
+"""
+
+from repro.tune.halving import (HalvingBudget, RungReport, SearchDriver,
+                                SearchResult, SearchStats)
+from repro.tune.pareto import (OBJECTIVES, FrontEntry, bram_bytes_of,
+                               dominates, front_of_rows, objectives_of,
+                               pareto_front)
+from repro.tune.sampler import (SampleStats, crossover, make_rng, mutate,
+                                sample)
+from repro.tune.space import (CASE_DIMS, Constraint, DesignPoint,
+                              DesignSpace, Dimension, InvalidPoint,
+                              value_label)
+
+__all__ = [
+    "CASE_DIMS", "Constraint", "DesignPoint", "DesignSpace",
+    "Dimension", "FrontEntry", "HalvingBudget", "InvalidPoint",
+    "OBJECTIVES", "RungReport", "SampleStats", "SearchDriver",
+    "SearchResult", "SearchStats", "bram_bytes_of", "crossover",
+    "dominates", "front_of_rows", "make_rng", "mutate",
+    "objectives_of", "pareto_front", "sample", "value_label",
+]

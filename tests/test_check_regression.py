@@ -1,0 +1,113 @@
+"""Tests for the benchmark regression gate
+(``benchmarks/check_regression.py``).
+
+The bug under regression test: ``load_rows`` used to swallow
+``json.JSONDecodeError`` and return ``[]``, so a CORRUPTED committed
+``BENCH_*.json`` looked exactly like "no comparable committed row" and
+the perf gate passed vacuously — green CI on a destroyed baseline.  The
+gate must now exit non-zero with a clear diagnostic whenever a
+trajectory file exists but cannot be parsed as a row list.
+"""
+
+import importlib.util
+import json
+import sys
+from pathlib import Path
+
+import pytest
+
+_SPEC = importlib.util.spec_from_file_location(
+    "check_regression",
+    Path(__file__).resolve().parent.parent / "benchmarks"
+    / "check_regression.py")
+check_regression = importlib.util.module_from_spec(_SPEC)
+sys.modules.setdefault("check_regression", check_regression)
+_SPEC.loader.exec_module(check_regression)
+
+
+ROW = {"scale": 0.002, "workers": 2, "host": "ci",
+       "warm_cases_per_sec": 100.0,
+       "batched_timing_cases_per_sec": 200.0}
+
+
+def write_rows(path: Path, rows) -> Path:
+    path.write_text(json.dumps(rows))
+    return path
+
+
+class TestLoadRows:
+    def test_missing_file_is_empty(self, tmp_path):
+        assert check_regression.load_rows(tmp_path / "absent.json") == []
+
+    def test_corrupt_json_raises_trajectory_error(self, tmp_path):
+        bad = tmp_path / "BENCH_sweep.json"
+        bad.write_text("[{\"scale\": 0.002,,,")
+        with pytest.raises(check_regression.TrajectoryError,
+                           match="not valid JSON"):
+            check_regression.load_rows(bad)
+
+    def test_non_list_schema_raises_trajectory_error(self, tmp_path):
+        bad = write_rows(tmp_path / "b.json", {"rows": []})
+        with pytest.raises(check_regression.TrajectoryError,
+                           match="expected a JSON list"):
+            check_regression.load_rows(bad)
+
+
+class TestGateExitCodes:
+    def _run(self, current: Path, baseline: Path, *extra) -> int:
+        return check_regression.main([
+            "--current", str(current), "--baseline", str(baseline),
+            *extra])
+
+    def test_corrupt_baseline_fails_the_gate(self, tmp_path, capsys):
+        """The regression: a corrupted committed trajectory must FAIL,
+        not pass as 'no comparable row' (pre-fix code returned 0)."""
+        current = write_rows(tmp_path / "cur.json", [ROW])
+        baseline = tmp_path / "base.json"
+        baseline.write_text("{corrupted — not json")
+        assert self._run(current, baseline) == 1
+        err = capsys.readouterr().out
+        assert "::error::" in err and "not valid JSON" in err
+
+    def test_corrupt_current_fails_the_gate(self, tmp_path, capsys):
+        current = tmp_path / "cur.json"
+        current.write_text("]]]")
+        baseline = write_rows(tmp_path / "base.json", [ROW])
+        assert self._run(current, baseline) == 1
+        assert "::error::" in capsys.readouterr().out
+
+    def test_missing_baseline_passes_vacuously(self, tmp_path, capsys):
+        """A genuinely ABSENT baseline (first run of a new config) is
+        still a pass — the fix distinguishes absent from corrupted."""
+        current = write_rows(tmp_path / "cur.json", [ROW])
+        assert self._run(current, tmp_path / "absent.json") == 0
+        assert "vacuously" in capsys.readouterr().out
+
+    def test_regression_detected(self, tmp_path, capsys):
+        slow = dict(ROW, warm_cases_per_sec=10.0)
+        current = write_rows(tmp_path / "cur.json", [slow])
+        baseline = write_rows(tmp_path / "base.json", [ROW])
+        assert self._run(current, baseline) == 1
+        assert "REGRESSED" in capsys.readouterr().out
+
+    def test_within_threshold_passes_and_writes_trend(self, tmp_path):
+        near = dict(ROW, warm_cases_per_sec=90.0,
+                    batched_timing_cases_per_sec=190.0)
+        current = write_rows(tmp_path / "cur.json", [ROW, near])
+        baseline = write_rows(tmp_path / "base.json", [ROW])
+        trend = tmp_path / "trend.json"
+        assert self._run(current, baseline, "--trend-out",
+                         str(trend)) == 0
+        verdict = json.loads(trend.read_text())["verdict"]
+        assert verdict["ok"] is True
+        assert verdict["gated"]["warm_cases_per_sec"]["ok"] is True
+
+    def test_custom_keys_gate_other_figures(self, tmp_path, capsys):
+        base_row = {"scale": 1.0, "workers": 1, "host": "ci",
+                    "tune_cases_per_sec": 50.0}
+        slow = dict(base_row, tune_cases_per_sec=5.0)
+        current = write_rows(tmp_path / "cur.json", [slow])
+        baseline = write_rows(tmp_path / "base.json", [base_row])
+        assert self._run(current, baseline,
+                         "--keys", "tune_cases_per_sec") == 1
+        assert "tune_cases_per_sec" in capsys.readouterr().out

@@ -258,6 +258,47 @@ class TestAdmission:
             assert rows[0].report.iterations <= 3
             assert svc.service_stats.degraded == 1
 
+    def test_cost_scales_with_iterations_unclamped(self):
+        """Admission-undercharge regression: the cost estimate used to
+        clamp ``fixed_iters`` at 32 (``min(fixed_iters, 32) / 32``), so
+        a 500-iteration job was charged like a 32-iteration one and
+        sailed through ``max_queued_cost``.  The estimate is now
+        proportional with no ceiling: at the same budget the 32-iter
+        job is admitted and the 500-iter job (~15.6 case-equivalents)
+        sheds — on the pre-fix code the shed assertion fails because
+        both cost ~1.0."""
+        admission = AdmissionConfig(max_queued_cost=2.0)
+        with SimService(workers=1, retry=FAST_RETRY,
+                        admission=admission) as svc:
+            # karate: m ~ 1.5e2 edges -> unit ~ 1.0 at 32 iters
+            ok = svc.submit([SweepCase("karate", "pr",
+                                       fixed_iters=32)])
+            svc.result(ok, timeout=120)
+            with pytest.raises(AdmissionError) as exc:
+                svc.submit([SweepCase("karate", "pr",
+                                      fixed_iters=500)])
+            assert "cost budget exceeded" in str(exc.value)
+            assert svc.service_stats.shed == 1
+
+    def test_degraded_arm_reprices_with_proportional_rule(self):
+        """The degraded arm stays consistent with the unclamped
+        estimate: capping ``fixed_iters`` shrinks the cost under the
+        same proportional rule, so the over-budget 500-iter job is
+        admitted degraded and runs at the cap."""
+        admission = AdmissionConfig(max_queued_cost=2.0,
+                                    degraded_iter_cap=4)
+        with SimService(workers=1, retry=FAST_RETRY,
+                        admission=admission) as svc:
+            job = svc.submit([SweepCase("karate", "pr",
+                                        fixed_iters=500)],
+                             allow_degraded=True)
+            rows = svc.result(job, timeout=120)
+            assert svc.info(job)["degraded"] is True
+            assert rows[0].case.fixed_iters == 4
+            assert rows[0].report.iterations <= 4
+            # the repriced estimate reflects 4/32 iters, not 500/32
+            assert svc._jobs[job].estimate < 0.5
+
     def test_load_snapshot_shape(self, svc):
         job = svc.submit([SweepCase("karate", "pr")])
         load = svc.load()

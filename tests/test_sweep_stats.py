@@ -1,0 +1,107 @@
+"""Stats-synchronization contract of the sweep engine.
+
+``Sweeper._sync_stats`` re-sums every resident session's cache counters
+under the sessions lock.  It used to run after EVERY case
+(``run_case`` called it inline), which made a sweep of N cases pay
+O(N x sessions) lock traffic — a measurable serialization point for the
+autotuner's generated grids.  The contract now under test:
+
+* ``run()`` syncs exactly ONCE, at the drain/return boundary;
+* the once-synced totals equal the sum over the resident sessions (no
+  counter updates are lost by deferring the sync);
+* an interrupted sweep still surfaces its partial counters (the sync
+  sits in a ``finally``);
+* bare ``run_case`` calls defer the sync entirely (callers composing
+  their own loops read ``stats`` after their own boundary).
+
+``test_stats_sync_runs_once_per_run`` fails on the pre-fix code (one
+sync per case) by construction.
+"""
+
+import pytest
+
+from repro.sim.sweep import (SweepCase, SweepInterrupted, Sweeper)
+
+CASES = [SweepCase("karate", "pr"), SweepCase("karate", "bfs"),
+         SweepCase("karate", "sssp"), SweepCase("karate", "pr", root=5)]
+
+
+@pytest.fixture()
+def counted(monkeypatch):
+    """A Sweeper whose ``_sync_stats`` invocations are counted."""
+    sweeper = Sweeper(batch_memories=True)
+    calls = []
+    orig = Sweeper._sync_stats
+
+    def counting(self):
+        calls.append(1)
+        return orig(self)
+
+    monkeypatch.setattr(Sweeper, "_sync_stats", counting)
+    return sweeper, calls
+
+
+class TestSyncBoundary:
+    def test_stats_sync_runs_once_per_run(self, counted):
+        sweeper, calls = counted
+        rows = sweeper.run(list(CASES))
+        assert len(rows) == len(CASES)
+        assert len(calls) == 1, (
+            f"_sync_stats ran {len(calls)} times for {len(CASES)} "
+            "cases; the drain-boundary contract is exactly one")
+        # a second run syncs exactly once more
+        sweeper.run(list(CASES))
+        assert len(calls) == 2
+
+    def test_sync_once_per_run_on_eventdriven_path_too(self, counted):
+        """The per-case (non-batchable) backend path shares the same
+        boundary."""
+        sweeper, calls = counted
+        sweeper.run([SweepCase("karate", "bfs",
+                               accelerator="reference"),
+                     SweepCase("karate", "pr",
+                               accelerator="reference")])
+        assert len(calls) == 1
+
+    def test_run_case_defers_sync_to_the_caller(self, counted):
+        sweeper, calls = counted
+        row = sweeper.run_case(CASES[0])
+        assert row.report.runtime_ns > 0
+        assert sweeper.stats.cases == 1
+        assert calls == []            # pre-fix: one sync per run_case
+
+    def test_totals_match_sessions_after_run(self):
+        sweeper = Sweeper(batch_memories=True)
+        sweeper.run(list(CASES))
+        sessions = list(sweeper._sessions.values())
+        assert sessions, "run left no resident sessions"
+        assert sweeper.stats.algo_runs == \
+            sum(s.algo_runs for s in sessions)
+        assert sweeper.stats.algo_cache_hits == \
+            sum(s.algo_cache_hits for s in sessions)
+        assert sweeper.stats.pack_cache_hits == \
+            sum(s.pack_cache_hits for s in sessions)
+        assert sweeper.stats.pack_cache_misses == \
+            sum(s.pack_cache_misses for s in sessions)
+        # the deferred sync lost nothing: the sweep did real work
+        assert sweeper.stats.algo_runs > 0
+        assert sweeper.stats.cases == len(CASES)
+
+    def test_interrupted_run_still_syncs(self, counted):
+        """The sync lives in a ``finally``: cancellation at a case
+        boundary must still surface the partial counters."""
+        sweeper, calls = counted
+        fired = []
+
+        def cancel_after_first():
+            if fired:
+                return "cancelled"
+            fired.append(1)
+            return None
+
+        with pytest.raises(SweepInterrupted) as exc:
+            sweeper.run(list(CASES), control=cancel_after_first)
+        assert exc.value.reason == "cancelled"
+        assert len(calls) == 1
+        # the partially-completed work is visible on the stats surface
+        assert sweeper.stats.algo_runs > 0

@@ -1,0 +1,348 @@
+"""Design-space autotuner tests (repro.tune).
+
+The contract under test (see ``src/repro/tune/README.md``):
+
+* the space grammar validates assignments against declared dimensions
+  and named constraints, and the built-in accelerators expose default
+  spaces;
+* candidate generation is seed-deterministic and uniform over the VALID
+  grid (rejection sampling, never silent repair);
+* the Pareto front is a pure, insertion-order-invariant function of the
+  evaluated rows, with ties kept and dominated points dropped;
+* a :class:`~repro.tune.SearchDriver` run is bit-identical across
+  repeats at one seed and across sweep worker counts, every reported
+  config is non-dominated against the EXHAUSTIVE space at top fidelity,
+  and the declared eval budget holds even when service-side chaos
+  retries re-run cases (budget counts dispatches, not attempts).
+"""
+
+import random
+
+import pytest
+
+from repro.serve import chaos
+from repro.serve.engine import (BreakerConfig, RetryPolicy, SimService)
+from repro.sim.policy import PartitionPolicy
+from repro.sim.registry import get_accelerator
+from repro.sim.sweep import Sweeper
+from repro.tune import (HalvingBudget, InvalidPoint, SearchDriver,
+                        bram_bytes_of, crossover, dominates,
+                        front_of_rows, make_rng, mutate, objectives_of,
+                        pareto_front, sample)
+
+FAST_RETRY = RetryPolicy(retries=6, backoff_base_s=0.001,
+                         backoff_cap_s=0.01)
+NO_TRIP = BreakerConfig(threshold=10_000)
+
+
+def small_space():
+    """A 16-point exhaustively-checkable slice of the hitgraph space."""
+    return get_accelerator("hitgraph").design_space().restrict(
+        n_pes=["1", "4"], pipelines=["8"],
+        partition_elements=["parts4", "parts16"],
+        memory=["ddr3", "hbm2"], cache=["none", "prefetch-8"])
+
+
+@pytest.fixture(autouse=True)
+def _no_leftover_chaos():
+    chaos.deactivate()
+    yield
+    chaos.deactivate()
+
+
+# ---------------------------------------------------------------------------
+# space grammar
+# ---------------------------------------------------------------------------
+
+class TestSpace:
+    def test_builtin_specs_declare_spaces(self):
+        for name in ("hitgraph", "accugraph"):
+            space = get_accelerator(name).design_space()
+            assert space is not None and space.accelerator == name
+            # the default constraints actually prune something
+            assert space.size() < space.grid_size
+        # the event-driven reference machine has no searchable structure
+        assert get_accelerator("reference").design_space() is None
+
+    def test_constraint_prunes_pes_beyond_channels(self):
+        space = get_accelerator("hitgraph").design_space()
+        bad = {d.name: d.values[0] for d in space.dimensions}
+        bad.update(n_pes=8, memory="ddr4")      # DDR4 preset: 1 channel
+        assert space.violated(bad) == ["pes-within-channels"]
+        with pytest.raises(InvalidPoint, match="pes-within-channels"):
+            space.point(**bad)
+        bad["memory"] = "hbm2"                  # 8 channels: now fine
+        assert space.valid(bad)
+
+    def test_accugraph_bram_budget_excludes_4m_cache(self):
+        space = get_accelerator("accugraph").design_space()
+        over = {d.name: d.values[0] for d in space.dimensions}
+        over["cache"] = space.dimension("cache").values[-1]  # vertex-4m
+        assert space.violated(over) == ["bram-budget"]
+        over["cache"] = "vertex-2m"             # exactly on budget
+        assert space.valid(over)
+
+    def test_point_rejects_unknown_dimensions_and_values(self):
+        space = small_space()
+        good = {d.name: d.values[0] for d in space.dimensions}
+        with pytest.raises(InvalidPoint):
+            space.point(**{**good, "bogus": 1})
+        with pytest.raises(InvalidPoint):
+            bad = dict(good)
+            bad.pop("memory")
+            space.point(**bad)
+        with pytest.raises(InvalidPoint):
+            space.point(**{**good, "memory": "hbm2e"})  # not declared
+
+    def test_enumerate_matches_grid_minus_constraints(self):
+        space = small_space()
+        pts = space.enumerate()
+        assert len(pts) == space.size() == 16
+        assert len({p.key for p in pts}) == len(pts)
+        # restrict() subsets further and validates labels
+        narrower = space.restrict(memory=["ddr3"])
+        assert narrower.size() == 8
+        with pytest.raises(KeyError):
+            space.restrict(memory=["no-such-device"])
+        with pytest.raises(KeyError):
+            space.restrict(bogus_dim=["x"])
+
+    def test_keys_are_canonical_and_graph_relative(self):
+        space = small_space()
+        p = space.point(n_pes=4, pipelines=8,
+                        partition_elements=PartitionPolicy(count=16),
+                        memory="hbm2", cache="prefetch-8")
+        assert p.key == ("hitgraph|n_pes=4|pipelines=8|"
+                         "partition_elements=parts16|memory=hbm2|"
+                         "cache=prefetch-8")
+        # the policy resolves per graph only at case-build time: the
+        # same point materializes different absolute q per scenario
+        c = p.to_case("karate", "bfs", fixed_iters=2)
+        assert c.config.partition_elements == -(-c.graph.n // 16)
+        assert c.config.n_pes == 4 and c.config.pipelines == 8
+
+    def test_duplicate_dimension_values_rejected(self):
+        from repro.tune import Dimension
+        with pytest.raises(ValueError, match="duplicate"):
+            Dimension("memory", ("ddr3", "ddr3"))
+
+
+# ---------------------------------------------------------------------------
+# sampler
+# ---------------------------------------------------------------------------
+
+class TestSampler:
+    def test_sampling_is_seed_deterministic(self):
+        space = get_accelerator("hitgraph").design_space()
+        a = [p.key for p in sample(space, 12, make_rng(42))]
+        b = [p.key for p in sample(space, 12, make_rng(42))]
+        assert a == b and len(set(a)) == 12
+        c = [p.key for p in sample(space, 12, make_rng(43))]
+        assert a != c
+
+    def test_samples_are_valid_and_dedup_respects_seen(self):
+        space = small_space()
+        seen = set()
+        first = sample(space, 10, make_rng(0), seen=seen)
+        second = sample(space, 10, make_rng(1), seen=seen)
+        keys = [p.key for p in first + second]
+        assert len(set(keys)) == len(keys)       # no dup across batches
+        assert len(keys) <= space.size()
+        for p in first + second:
+            assert space.valid(p.values)
+
+    def test_exhausting_a_tiny_space_returns_fewer(self):
+        space = small_space().restrict(n_pes=["1"], memory=["ddr3"],
+                                       cache=["none"])
+        pts = sample(space, 50, make_rng(0))
+        assert len(pts) == space.size() == 2
+
+    def test_mutate_changes_exactly_one_dimension(self):
+        space = small_space()
+        rng = make_rng(3)
+        parent = sample(space, 1, rng)[0]
+        child = mutate(parent, rng, seen={parent.key})
+        assert child is not None and child.key != parent.key
+        diffs = [n for n in space.names
+                 if space.dimension(n).values and
+                 str(child.values[n]) != str(parent.values[n])]
+        assert len(diffs) == 1
+        assert space.valid(child.values)
+
+    def test_crossover_mixes_parent_values(self):
+        space = small_space()
+        rng = make_rng(4)
+        pts = space.enumerate()
+        a, b = pts[0], pts[-1]     # differ in every varying dimension
+        child = crossover(a, b, rng, seen={a.key, b.key})
+        assert child is not None
+        for name in space.names:
+            lab = str(child.values[name])
+            assert lab in (str(a.values[name]), str(b.values[name]))
+
+
+# ---------------------------------------------------------------------------
+# pareto reduction
+# ---------------------------------------------------------------------------
+
+class TestPareto:
+    def test_dominates_is_strict(self):
+        assert dominates((1, 1, 1), (2, 2, 2))
+        assert dominates((1, 2, 2), (2, 2, 2))
+        assert not dominates((1, 1, 1), (1, 1, 1))       # equal: no
+        assert not dominates((1, 3, 1), (2, 2, 2))       # trade-off: no
+        with pytest.raises(ValueError):
+            dominates((1, 2), (1, 2, 3))
+
+    def test_front_drops_dominated_keeps_ties(self):
+        front = pareto_front({
+            "worse": (2.0, 2.0, 2.0),
+            "best-a": (1.0, 2.0, 2.0),
+            "best-a-twin": (1.0, 2.0, 2.0),   # exchangeable design
+            "tradeoff": (2.0, 1.0, 2.0),
+        })
+        assert front == ["best-a", "best-a-twin", "tradeoff"]
+
+    def test_front_is_insertion_order_invariant(self):
+        rnd = random.Random(1234)
+        vectors = {f"p{i}": (rnd.randint(0, 5), rnd.randint(0, 5),
+                             rnd.randint(0, 5)) for i in range(60)}
+        base = pareto_front(vectors)
+        for trial in range(10):
+            items = list(vectors.items())
+            rnd.shuffle(items)
+            assert pareto_front(dict(items)) == base
+        # brute-force cross-check of the sorted-scan implementation
+        for key in vectors:
+            dominated = any(dominates(v, vectors[key])
+                            for k, v in vectors.items() if k != key)
+            assert (key in base) == (not dominated)
+
+    def test_bram_objective_charges_cache_and_prefetch(self):
+        space = get_accelerator("accugraph").design_space().restrict(
+            edge_pipelines=["8"], vertex_pipelines=["4"],
+            partition_elements=["none"], memory=["ddr4"],
+            cache=["none", "vertex-256k"])
+        sw = Sweeper(batch_memories=True)
+        none_pt, cache_pt = space.enumerate()
+        rows = sw.run([none_pt.to_case("karate", "pr", fixed_iters=2),
+                       cache_pt.to_case("karate", "pr", fixed_iters=2)])
+        assert bram_bytes_of(rows[0]) == 0
+        assert bram_bytes_of(rows[1]) == 4096 * 64       # 256 KiB
+        assert objectives_of(rows[1])[2] == 4096 * 64
+
+
+# ---------------------------------------------------------------------------
+# search driver: determinism, optimality, budget
+# ---------------------------------------------------------------------------
+
+class TestSearch:
+    BUDGET = HalvingBudget(rungs=(1, 2), initial=6, keep=0.5)
+
+    def _search(self, workers, seed=7):
+        driver = SearchDriver(
+            small_space(), seed=seed, budget=self.BUDGET,
+            sweeper=Sweeper(workers=workers, batch_memories=True))
+        return driver.search("karate", "bfs")
+
+    def test_front_is_seed_deterministic_and_worker_invariant(self):
+        base = self._search(workers=1)
+        again = self._search(workers=1)
+        wide = self._search(workers=2)
+        for other in (again, wide):
+            assert other.front_keys() == base.front_keys()
+            assert ([e.objectives for e in other.front]
+                    == [e.objectives for e in base.front])
+        assert self._search(workers=1, seed=8).stats.sampled == 6
+
+    def test_front_only_contains_top_fidelity_rows(self):
+        res = self._search(workers=1)
+        top = self.BUDGET.rungs[-1]
+        assert res.front, "search produced an empty front"
+        for entry in res.front:
+            assert entry.row.case.fixed_iters == top
+
+    def test_front_nondominated_against_exhaustive_space(self):
+        space = small_space()
+        res = SearchDriver(space, seed=7, budget=self.BUDGET).search(
+            "karate", "bfs")
+        sw = Sweeper(batch_memories=True)
+        pts = space.enumerate()
+        rows = sw.run([p.to_case("karate", "bfs", fixed_iters=2)
+                       for p in pts])
+        vectors = {p.key: objectives_of(r) for p, r in zip(pts, rows)}
+        for entry in res.front:
+            assert not any(dominates(v, entry.objectives)
+                           for v in vectors.values()), entry.key
+        # and the exhaustive front agrees with the search's rows where
+        # they overlap (same row -> same objective vector)
+        for entry in res.front:
+            assert vectors[entry.key] == entry.objectives
+
+    def test_halving_promotes_survivor_fraction(self):
+        res = self._search(workers=1)
+        assert [r.fixed_iters for r in res.rungs] == [1, 2]
+        assert res.rungs[0].evaluated == 6
+        assert res.rungs[0].survivors == 3        # ceil(6 * 0.5)
+        assert res.rungs[1].evaluated == 3
+
+    def test_budget_truncates_dispatch_tail(self):
+        budget = HalvingBudget(rungs=(1, 2), initial=6, keep=0.5,
+                               max_case_evals=8)
+        res = SearchDriver(small_space(), seed=7,
+                           budget=budget).search("karate", "bfs")
+        assert res.stats.case_evals <= 8
+        assert res.stats.budget_truncations == 1
+        assert res.rungs[1].evaluated == 2        # 8 - 6 at the top rung
+
+    def test_budget_holds_under_service_retries(self):
+        """The eval budget counts DISPATCHES: transient chaos faults
+        that the service retries internally must not multiply the
+        spend."""
+        budget = HalvingBudget(rungs=(1, 2), initial=4, keep=0.5,
+                               max_case_evals=6)
+        cfg = chaos.ChaosConfig(seed=7, sites={
+            "dram.serve": chaos.SiteConfig(rate=1.0, max_attempts=2)})
+        with chaos.scope(cfg):
+            with SimService(workers=1, retry=FAST_RETRY,
+                            breaker=NO_TRIP) as svc:
+                res = SearchDriver(small_space(), seed=7,
+                                   budget=budget,
+                                   service=svc).search("karate", "bfs")
+                retries = svc.service_stats.retries
+        assert retries > 0, "chaos injected no retries — test is vacuous"
+        assert res.stats.case_evals <= budget.max_case_evals
+        assert res.stats.case_evals == sum(r.evaluated for r in res.rungs)
+        assert res.front                          # recovered, not empty
+
+    def test_service_quarantine_drops_candidate_not_search(self):
+        """A permanently-poisoned candidate is dropped from the
+        population; the rest of the generation survives."""
+        # fault decisions are a pure function of (chaos seed, case
+        # key); seed 3 poisons one (memory, cache) key-group of this
+        # population and spares the rest — exactly the partial-failure
+        # shape under test
+        cfg = chaos.ChaosConfig(seed=3, sites={
+            "dram.serve": chaos.SiteConfig(rate=0.3,
+                                           permanent_rate=1.0)})
+        budget = HalvingBudget(rungs=(1, 2), initial=5, keep=0.6)
+        with chaos.scope(cfg):
+            with SimService(workers=1, retry=FAST_RETRY,
+                            breaker=NO_TRIP) as svc:
+                res = SearchDriver(small_space(), seed=3,
+                                   budget=budget,
+                                   service=svc).search("karate", "bfs")
+        assert res.stats.failed_candidates > 0, "no case poisoned"
+        assert res.front                          # search still lands
+
+    def test_evolutionary_refinement_spends_same_budget(self):
+        budget = HalvingBudget(rungs=(1, 2), initial=4, keep=0.5,
+                               max_case_evals=10)
+        res = SearchDriver(small_space(), seed=11, budget=budget,
+                           evolve_rounds=3,
+                           evolve_children=3).search("karate", "bfs")
+        assert res.stats.case_evals <= 10
+        assert res.stats.evolved >= 1
+        top = budget.rungs[-1]
+        for entry in res.front:
+            assert entry.row.case.fixed_iters == top
