@@ -25,6 +25,7 @@ REPO_ROOT = Path(__file__).resolve().parent.parent
 BENCH_SWEEP_PATH = REPO_ROOT / "BENCH_sweep.json"
 BENCH_SERVICE_PATH = REPO_ROOT / "BENCH_service.json"
 BENCH_TUNE_PATH = REPO_ROOT / "BENCH_tune.json"
+BENCH_DYNAMIC_PATH = REPO_ROOT / "BENCH_dynamic.json"
 
 
 def append_sweep_trajectory(sweep_rows, scale: float,
@@ -127,13 +128,48 @@ def append_tune_trajectory(tune_rows, scale: float,
     return entry
 
 
+def append_dynamic_trajectory(dynamic_rows, scale: float,
+                              path: Path = BENCH_DYNAMIC_PATH) -> dict:
+    """Append one {date, scale, dynamic_epochs_per_sec,
+    locality_advantage...} row to ``BENCH_dynamic.json`` (same
+    append-style trajectory + host tagging as the sweep figure; the CI
+    gate compares ``dynamic_epochs_per_sec`` like-for-like)."""
+    entry = {
+        "date": datetime.date.today().isoformat(),
+        "scale": scale,
+    }
+    host = os.environ.get("REPRO_BENCH_HOST")
+    if host:
+        entry["host"] = host
+    for r in dynamic_rows:
+        if r.get("bench") != "dynamic":
+            continue
+        if r["variant"] == "sweep":
+            entry["dynamic_epochs_per_sec"] = round(
+                r["dynamic_epochs_per_sec"], 3)
+            entry["epochs"] = r["epochs"]
+            entry["cases"] = r["cases"]
+        elif r["variant"] == "locality":
+            entry["locality_advantage"] = round(
+                r["locality_advantage"], 4)
+    history = []
+    if path.exists():
+        try:
+            history = json.loads(path.read_text())
+        except json.JSONDecodeError:
+            history = []
+    history.append(entry)
+    path.write_text(json.dumps(history, indent=1) + "\n")
+    return entry
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--scale", type=float, default=0.01)
     ap.add_argument("--only", default=None,
                     help="comma list: fig09,fig10,fig11,fig12,fig13,"
                          "fig02,dram,kernels,sweep,cache,corpus,"
-                         "service,tune")
+                         "service,tune,dynamic")
     ap.add_argument("--json-out", default=None)
     ap.add_argument("--no-trajectory", action="store_true",
                     help="skip appending the sweep row to BENCH_sweep.json")
@@ -141,11 +177,12 @@ def main() -> int:
     only = set(args.only.split(",")) if args.only else None
 
     from benchmarks import (autotune, cache_hierarchy, corpus_sweep,
-                            dram_types, fig02_repro_error,
-                            fig09_hitgraph, fig10_accugraph,
-                            fig11_degree, fig12_comparability,
-                            fig13_optimizations, kernel_bench,
-                            service_load, sweep_throughput)
+                            dram_types, dynamic_sweep,
+                            fig02_repro_error, fig09_hitgraph,
+                            fig10_accugraph, fig11_degree,
+                            fig12_comparability, fig13_optimizations,
+                            kernel_bench, service_load,
+                            sweep_throughput)
 
     suites = {
         "fig09": lambda: fig09_hitgraph.run(args.scale),
@@ -161,6 +198,7 @@ def main() -> int:
         "corpus": lambda: corpus_sweep.run(args.scale),
         "service": lambda: service_load.run(args.scale),
         "tune": lambda: autotune.run(args.scale),
+        "dynamic": lambda: dynamic_sweep.run(args.scale),
     }
 
     all_rows = []
@@ -208,6 +246,10 @@ def main() -> int:
         entry = append_tune_trajectory(rows_by_suite["tune"],
                                        args.scale)
         print(f"# BENCH_tune.json += {entry}", file=sys.stderr)
+    if "dynamic" in rows_by_suite and not args.no_trajectory:
+        entry = append_dynamic_trajectory(rows_by_suite["dynamic"],
+                                          args.scale)
+        print(f"# BENCH_dynamic.json += {entry}", file=sys.stderr)
     if args.json_out:
         with open(args.json_out, "w") as f:
             json.dump(all_rows, f, indent=1, default=str)

@@ -112,8 +112,17 @@ def run(
     max_iters: int = 10_000,
     fixed_iters: Optional[int] = None,
     x0: Optional[np.ndarray] = None,
+    active0: Optional[np.ndarray] = None,
 ) -> RunResult:
-    """Run ``problem`` edge-centrically to convergence; collect stats."""
+    """Run ``problem`` edge-centrically to convergence; collect stats.
+
+    For the min-combine problems ``x0`` / ``active0`` warm-start the
+    relaxation (the incremental-update path): iteration proceeds from
+    the given labeling and frontier instead of the static init.
+    Correctness needs ``L <= x0 <= init`` pointwise (see
+    :mod:`repro.algorithms.incremental`), which the repair planner
+    guarantees.
+    """
     src = jnp.asarray(g.src, dtype=jnp.int32)
     dst = jnp.asarray(g.dst, dtype=jnp.int32)
     n = g.n
@@ -132,6 +141,13 @@ def run(
             values_np[root] = 0
             active = np.zeros(n, dtype=bool)
             active[root] = True
+        if x0 is not None:
+            if active0 is None:
+                raise ValueError(
+                    "a min-problem warm start (x0=) needs active0=")
+            values_np = np.asarray(x0, dtype=np.int32).copy()
+        if active0 is not None:
+            active = np.asarray(active0, dtype=bool).copy()
         if _numpy_min_step():
             return _min_run_numpy(g, problem, w_np, values_np, active,
                                   max_iters)

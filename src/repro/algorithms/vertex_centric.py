@@ -71,6 +71,8 @@ def run(
     max_iters: int = 10_000,
     fixed_iters: Optional[int] = None,
     block_skipping: bool = False,
+    x0: Optional[np.ndarray] = None,
+    active0: Optional[np.ndarray] = None,
 ) -> RunResult:
     """Run ``problem`` vertex-centrically (pull) with partition size q.
 
@@ -80,6 +82,12 @@ def run(
     (exact — a clean block admits no relaxation).  Skipped blocks are
     recorded as ``None`` in ``changed_per_block`` so the trace model emits
     no requests for them.
+
+    For the min-combine problems ``x0`` / ``active0`` warm-start the
+    relaxation (the incremental-update path): values start from ``x0``
+    and only blocks containing an ``active0`` vertex start dirty.
+    Correctness needs ``L <= x0 <= init`` pointwise (see
+    :mod:`repro.algorithms.incremental`).
     """
     n = g.n
     q = q if q is not None else n
@@ -92,6 +100,11 @@ def run(
             values = jnp.arange(n, dtype=jnp.int32)
         else:
             values = jnp.full(n, INF32, dtype=jnp.int32).at[root].set(0)
+        if x0 is not None:
+            if active0 is None:
+                raise ValueError(
+                    "a min-problem warm start (x0=) needs active0=")
+            values = jnp.asarray(np.asarray(x0, dtype=np.int32))
         block_arrays = []
         for k in range(parts.p):
             s, d = _block_edges(parts, k)
@@ -102,6 +115,10 @@ def run(
         intervals = parts.intervals
         dirty = np.ones(parts.p, dtype=bool)
         changed_prev = np.ones(n, dtype=bool)
+        if active0 is not None:
+            changed_prev = np.asarray(active0, dtype=bool).copy()
+            dirty[:] = False
+            dirty[np.unique(np.flatnonzero(changed_prev) // parts.q)] = True
         it = 0
         while it < max_iters:
             vals_before = np.asarray(values)

@@ -3,8 +3,8 @@ is what populates :data:`repro.analysis.framework.RULES`."""
 
 from repro.analysis.rules import (cache_keys, determinism, dtype_drift,
                                   exception_hygiene, jax_hazards,
-                                  kernel_parity, quarantine)
+                                  kernel_parity, quarantine, scenario)
 
 __all__ = ["cache_keys", "determinism", "dtype_drift",
            "exception_hygiene", "jax_hazards", "kernel_parity",
-           "quarantine"]
+           "quarantine", "scenario"]

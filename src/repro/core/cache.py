@@ -147,6 +147,38 @@ class CacheState:
     age: np.ndarray         # int64[sets, ways]
 
 
+def invalidate_lines(state: Optional[CacheState],
+                     cache: Optional[CacheConfig],
+                     line_ranges) -> int:
+    """Drop every cached line falling inside any ``(first_line,
+    n_lines)`` range — the dynamic-update hook: when the host rewrites a
+    partition's structural regions (edge / pointer / neighbor arrays),
+    the on-chip copies of exactly those lines are stale and must miss on
+    next access, while every other partition's residency survives.
+
+    Invalidated ways become the oldest in their set (they refill before
+    any surviving line is evicted); surviving ways keep their relative
+    recency, so ages stay a per-set permutation.  Returns the number of
+    lines dropped.
+    """
+    if state is None or cache is None or not cache.sets:
+        return 0
+    sets, W = state.tags.shape
+    lines = state.tags * sets + np.arange(sets, dtype=np.int64)[:, None]
+    mask = np.zeros_like(state.tags, dtype=bool)
+    for first, cnt in line_ranges:
+        if cnt > 0:
+            mask |= (lines >= first) & (lines < first + cnt)
+    mask &= state.tags >= 0
+    n = int(mask.sum())
+    if n:
+        state.tags[mask] = -1
+        key = state.age + W * mask
+        state.age = np.argsort(
+            np.argsort(key, axis=1, kind="stable"), axis=1, kind="stable")
+    return n
+
+
 def effective(cache: Optional[CacheConfig]) -> Optional[CacheConfig]:
     """Normalize a cache selection: a disabled config means "no cache"
     (the single coercion point the backends and config plumbing share)."""

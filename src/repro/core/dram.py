@@ -349,6 +349,12 @@ class MemoryLayout:
     def offset(self, name: str) -> int:
         return self._offsets[name][0]
 
+    def regions(self) -> Dict[str, Tuple[int, int]]:
+        """Every allocation as ``name -> (byte_start, nbytes)`` — the
+        surface the dynamic-update path diffs to find which regions an
+        epoch's layout rebuild moved or resized."""
+        return dict(self._offsets)
+
     def nbytes(self, name: str) -> int:
         return self._offsets[name][1]
 

@@ -342,5 +342,6 @@ def simulate(g: Graph, problem: Problem,
     ``accelerator="hitgraph"`` (single entry point for all accelerators,
     memory types, and backends)."""
     from repro import sim
-    return sim.simulate(g, problem, accelerator="hitgraph", config=cfg,
-                        root=root, fixed_iters=fixed_iters)
+    return sim.simulate(sim.ScenarioSpec(
+        g, problem, accelerator="hitgraph", config=cfg, root=root,
+        fixed_iters=fixed_iters))

@@ -38,6 +38,7 @@ from typing import Callable, Dict, Iterable, List, Optional, Union
 import numpy as np
 
 from repro.analysis import locks
+from repro.errors import UnknownPresetError
 from repro.graphs import generators as gen
 from repro.serve import chaos
 from repro.graphs.formats import (Graph, GraphParseError,
@@ -497,14 +498,10 @@ def resolve_graph(graph: GraphLike, scale: float = 1.0, seed: int = 0,
             f"{type(graph).__name__}")
     name, _, transform = graph.partition(":")
     if transform and transform not in TRANSFORMS:
-        raise KeyError(
-            f"unknown graph transform {transform!r}; available: "
-            f"{sorted(TRANSFORMS)}")
+        raise UnknownPresetError("graph transform", transform, TRANSFORMS)
     preset = GRAPH_PRESETS.get(name)
     if preset is None:
-        raise KeyError(
-            f"unknown graph preset {name!r}; available: "
-            f"{sorted(GRAPH_PRESETS)}")
+        raise UnknownPresetError("graph", name, GRAPH_PRESETS)
     memo_key = (name, transform, float(scale), int(seed))
     with _resolve_lock:
         g = _resolved.get(memo_key)

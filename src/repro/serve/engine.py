@@ -206,10 +206,18 @@ class SimJob:
     ``attempts`` counts observed transient failures per case.  All three
     survive a supervised worker replacement, so a continuation resumes
     with the crash history intact.
+
+    A *work job* (``work`` set, ``cases`` empty) runs one closure on the
+    same FIFO worker instead of a case grid — the resident-graph
+    open/update jobs; it shares admission accounting, deadlines,
+    cancellation, and transient retries, and ``result`` returns its
+    ``result_value``.
     """
 
     id: int
     cases: List[SweepCase]
+    work: Optional[Any] = None
+    result_value: Any = None
     tenant: str = "default"
     deadline: Optional[float] = None          # absolute time.monotonic()
     degraded: bool = False
@@ -239,6 +247,41 @@ class SimJob:
 
 def _geometry(case: SweepCase) -> Tuple[str, str]:
     return (case.graph.fingerprint, case.accelerator)
+
+
+@dataclasses.dataclass
+class _ResidentGraph:
+    """A long-lived dynamic graph resident in the service: the
+    :class:`~repro.sim.dynamic.DynamicTimeline` its update jobs mutate.
+    ``timeline`` is None until the epoch-0 build job runs (and again
+    after :meth:`SimService.close_graph`)."""
+
+    id: int
+    tenant: str
+    case: SweepCase
+    timeline: Optional[Any] = None
+    open_job_id: int = -1
+
+
+@dataclasses.dataclass
+class _SearchJob:
+    """One tenant design-space search: runs on its own thread (the FIFO
+    worker executes its rung jobs, so the driver must not occupy it),
+    sharing the sweep jobs' lifecycle states and id space."""
+
+    id: int
+    tenant: str
+    deadline: Optional[float] = None          # absolute time.monotonic()
+    status: str = QUEUED
+    result: Any = None
+    error: Optional[BaseException] = None
+    front: List[Any] = dataclasses.field(default_factory=list)
+    _cancel: threading.Event = dataclasses.field(
+        default_factory=threading.Event, repr=False)
+    _finished: threading.Event = dataclasses.field(
+        default_factory=threading.Event, repr=False)
+    _thread: Optional[threading.Thread] = dataclasses.field(
+        default=None, repr=False)
 
 
 class _CircuitBreaker:
@@ -324,6 +367,8 @@ class SimService:
         self._queued_cost = 0.0
         self._inflight_jobs = 0
         self._ids = itertools.count()
+        self._residents: Dict[int, _ResidentGraph] = {}
+        self._searches: Dict[int, _SearchJob] = {}
         self._closed = False
         self._active_job: Optional[SimJob] = None
         self._worker: Optional[threading.Thread] = None
@@ -358,6 +403,11 @@ class SimService:
             unit = 1.0 + c.graph.m / 1e6
             if c.fixed_iters is not None:
                 unit *= c.fixed_iters / 32.0
+            if c.updates is not None:
+                # a dynamic case serves its static prefix plus one
+                # (cheaper, but conservatively full-priced) phase per
+                # update epoch
+                unit *= 1 + c.updates.epochs
             cost += unit
         return cost
 
@@ -366,11 +416,16 @@ class SimService:
         return max(self.admission.min_retry_after_s,
                    self._queued_cost * per_case)
 
-    def submit(self, cases: Sequence[SweepCase], *,
+    def submit(self, cases, *,
                tenant: str = "default",
                deadline: Optional[float] = None,
                allow_degraded: bool = False) -> int:
         """Enqueue a batch of cases; returns the job id immediately.
+
+        ``cases`` is a sequence of :class:`SweepCase` and/or
+        :class:`~repro.sim.scenario.ScenarioSpec` values — or a single
+        one of either (a one-case job).  Dynamic scenarios
+        (``updates`` set) run their whole epoch timeline as one case.
 
         ``deadline`` is seconds from now: a job past its deadline stops
         at the next case boundary (state EXPIRED, partial rows kept).
@@ -379,7 +434,11 @@ class SimService:
         :class:`AdmissionError` when over budget and
         ``RuntimeError`` after :meth:`close`.
         """
-        cases = list(cases)
+        from repro.sim.scenario import ScenarioSpec
+        if isinstance(cases, (ScenarioSpec, SweepCase)):
+            cases = [cases]
+        cases = [c.to_case() if isinstance(c, ScenarioSpec) else c
+                 for c in cases]
         adm = self.admission
         with self._lock:
             if self._closed:
@@ -441,16 +500,284 @@ class SimService:
                 self._qcond.notify()
         return job.id
 
+    def _submit_work(self, work, *, tenant: str,
+                     deadline: Optional[float], estimate: float,
+                     kind: str) -> int:
+        """Admission-controlled enqueue of one closure job (the
+        resident-graph open/update path); same quota/cost budgets,
+        deadline, cancellation, and FIFO worker as case jobs."""
+        adm = self.admission
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("SimService is closed")
+            if (self._inflight_jobs >= adm.max_inflight_jobs
+                    or self._tenant_jobs.get(tenant, 0)
+                    >= adm.max_tenant_jobs):
+                self.service_stats.shed += 1
+                raise AdmissionError(
+                    f"job quota exceeded (service "
+                    f"{self._inflight_jobs}/{adm.max_inflight_jobs}, "
+                    f"tenant {tenant!r} "
+                    f"{self._tenant_jobs.get(tenant, 0)}"
+                    f"/{adm.max_tenant_jobs})", self._retry_after())
+            if self._queued_cost + estimate > adm.max_queued_cost:
+                self.service_stats.shed += 1
+                raise AdmissionError(
+                    f"cost budget exceeded (queued "
+                    f"{self._queued_cost:.1f} + job {estimate:.1f} "
+                    f"> {adm.max_queued_cost:.1f} case-equivalents)",
+                    self._retry_after())
+            now = time.monotonic()
+            job = SimJob(
+                id=next(self._ids), cases=[], work=work, tenant=tenant,
+                deadline=None if deadline is None else now + deadline,
+                estimate=estimate, created_s=now, note=kind)
+            self._jobs[job.id] = job
+            self._tenant_jobs[tenant] = \
+                self._tenant_jobs.get(tenant, 0) + 1
+            self._inflight_jobs += 1
+            self._queued_cost += estimate
+            self.service_stats.submitted += 1
+            with self._qcond:
+                self._queue.append(job)
+                self._qcond.notify()
+        return job.id
+
+    # ---- resident dynamic graphs -------------------------------------
+    def open_graph(self, scenario, *, tenant: str = "default",
+                   deadline: Optional[float] = None) -> int:
+        """Open a long-lived dynamic graph: one
+        :class:`~repro.sim.dynamic.DynamicTimeline` resident in the
+        service, against which clients submit update batches
+        (:meth:`submit_update`).  ``scenario`` is a
+        :class:`~repro.sim.scenario.ScenarioSpec` (its ``updates``
+        stream, if any, becomes the default batch source).
+
+        Returns the resident id immediately; the epoch-0 static build
+        runs as an admission-controlled work job on the FIFO worker, so
+        update jobs submitted right after queue behind it in order.
+        Await it via ``result(graph_job(rid))``."""
+        from repro.sim.scenario import ScenarioSpec
+        if not isinstance(scenario, ScenarioSpec):
+            raise TypeError(
+                "open_graph takes a ScenarioSpec (got "
+                f"{type(scenario).__name__}); wrap the axes in one")
+        case = scenario.to_case()      # axis names validate here
+        from repro.algorithms.incremental import INCREMENTAL_PROBLEMS
+        if case.problem not in INCREMENTAL_PROBLEMS:
+            raise ValueError(
+                "a resident graph exists to take update batches, which "
+                f"need an incremental algorithm variant; problem "
+                f"{case.problem.value!r} has none (supported: "
+                f"{[p.value for p in INCREMENTAL_PROBLEMS]})")
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("SimService is closed")
+            rid = next(self._ids)
+            resident = _ResidentGraph(id=rid, tenant=tenant, case=case)
+            self._residents[rid] = resident
+
+        def build():
+            from repro.sim.dynamic import DynamicTimeline
+            resident.timeline = DynamicTimeline(
+                case.graph, case.problem, updates=case.updates,
+                accelerator=case.accelerator, config=case.config,
+                memory=case.memory, cache=case.cache,
+                backend=self._sweeper.backend, variant=case.variant,
+                root=case.root, fixed_iters=case.fixed_iters)
+            return resident.timeline.epochs[0]
+
+        resident.open_job_id = self._submit_work(
+            build, tenant=tenant, deadline=deadline,
+            estimate=1.0 + case.graph.m / 1e6, kind=f"open_graph:{rid}")
+        return rid
+
+    def submit_update(self, resident_id: int, batch=None, *,
+                      tenant: Optional[str] = None,
+                      deadline: Optional[float] = None) -> int:
+        """Apply one update batch to a resident graph: an
+        admission-controlled job whose ``result`` is the epoch's
+        :class:`~repro.sim.dynamic.EpochReport`.  ``batch=None`` draws
+        the next seeded batch from the scenario's bound stream.  Jobs
+        run FIFO on the service worker, so concurrent clients' updates
+        serialize deterministically in submission order."""
+        resident = self._resident(resident_id)
+
+        def step():
+            if resident.timeline is None:
+                raise RuntimeError(
+                    f"resident graph #{resident_id} is not open "
+                    "(its epoch-0 job failed or was cancelled)")
+            return resident.timeline.step(batch)
+
+        return self._submit_work(
+            step, tenant=tenant or resident.tenant, deadline=deadline,
+            estimate=1.0 + resident.case.graph.m / 1e6,
+            kind=f"update:{resident_id}")
+
+    def graph_job(self, resident_id: int) -> int:
+        """Job id of a resident graph's epoch-0 build."""
+        return self._resident(resident_id).open_job_id
+
+    def graph_info(self, resident_id: int) -> Dict[str, Any]:
+        """Observability snapshot of one resident graph."""
+        r = self._resident(resident_id)
+        tl = r.timeline
+        return {
+            "id": r.id, "tenant": r.tenant, "open": tl is not None,
+            "graph": r.case.graph.name,
+            "problem": r.case.problem.value,
+            "accelerator": r.case.accelerator,
+            "epoch": tl.epoch if tl is not None else None,
+            "edges": tl.graph.m if tl is not None else r.case.graph.m,
+        }
+
+    def close_graph(self, resident_id: int) -> None:
+        """Drop a resident graph (queued update jobs against it fail
+        with the not-open error when they run)."""
+        with self._lock:
+            r = self._residents.pop(resident_id, None)
+        if r is not None:
+            r.timeline = None
+
+    def _resident(self, resident_id: int) -> "_ResidentGraph":
+        with self._lock:
+            try:
+                return self._residents[resident_id]
+            except KeyError:
+                raise KeyError(
+                    f"unknown resident graph id {resident_id}") from None
+
+    # ---- design-space search tenancy ---------------------------------
+    def submit_search(self, space, budget=None, *, scenario=None,
+                      graph=None, problem=None, tenant: str = "autotune",
+                      seed: int = 0, deadline: Optional[float] = None,
+                      evolve_rounds: int = 0) -> int:
+        """Run a design-space search as a tenant of this service: every
+        rung dispatch goes through :meth:`submit` (same admission
+        costing, retries, and quarantine as any sweep job), and the
+        search itself is a pollable/cancellable job — same lifecycle
+        states, observed via :meth:`poll` / :meth:`cancel` /
+        :meth:`search_result`, with :meth:`search_front` streaming the
+        best-known Pareto front while rungs are still running.
+
+        ``space`` is a :class:`~repro.tune.space.DesignSpace`,
+        ``budget`` a :class:`~repro.tune.halving.HalvingBudget`
+        (default ladder when ``None``); the scenario is a
+        :class:`~repro.sim.scenario.ScenarioSpec` (``scenario=``) or
+        legacy ``graph=``/``problem=``.  ``deadline``/:meth:`cancel`
+        stop the search at the next generation boundary, keeping the
+        front found so far."""
+        from repro.tune.halving import HalvingBudget, SearchDriver
+        target = scenario if scenario is not None else graph
+        if target is None:
+            raise TypeError("submit_search needs scenario= (or "
+                            "graph= and problem=)")
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("SimService is closed")
+            sid = next(self._ids)
+            sj = _SearchJob(
+                id=sid, tenant=tenant,
+                deadline=(None if deadline is None
+                          else time.monotonic() + deadline))
+            self._searches[sid] = sj
+
+        def control() -> Optional[str]:
+            if sj._cancel.is_set():
+                return "cancelled"
+            if (sj.deadline is not None
+                    and time.monotonic() >= sj.deadline):
+                return "expired"
+            return None
+
+        def on_front(front):
+            sj.front = list(front)
+
+        driver = SearchDriver(
+            space, seed=seed,
+            budget=budget if budget is not None else HalvingBudget(),
+            service=self, tenant=tenant, evolve_rounds=evolve_rounds,
+            control=control, front_cb=on_front)
+
+        def run():
+            sj.status = RUNNING
+            try:
+                res = driver.search(target, problem)
+                sj.result = res
+                sj.front = list(res.front)
+                reason = control()
+                sj.status = (CANCELLED if reason == "cancelled"
+                             else EXPIRED if reason == "expired"
+                             else DONE)
+            # search-thread supervisor: _finished MUST be set on any
+            # exit or search_result() blocks forever
+            except BaseException as e:  # repro: noqa[bare-base-exception]
+                sj.error = e
+                sj.status = FAILED
+            finally:
+                sj._finished.set()
+
+        sj._thread = threading.Thread(
+            target=run, name=f"sim-search-{sid}", daemon=True)
+        sj._thread.start()
+        return sid
+
+    def search_front(self, search_id: int) -> List[Any]:
+        """The streaming Pareto front of a search job: best known
+        top-fidelity front so far (non-raising, any state)."""
+        return list(self._search(search_id).front)
+
+    def search_result(self, search_id: int, timeout: Optional[float]
+                      = None):
+        """Block until a search job finishes; returns its
+        :class:`~repro.tune.halving.SearchResult`.  A cancelled/expired
+        search returns its partial result (the front found so far) when
+        one exists, else raises the matching typed error; FAILED raises
+        :class:`JobFailed`."""
+        sj = self._search(search_id)
+        if not sj._finished.wait(timeout):
+            raise TimeoutError(
+                f"search #{search_id} still {sj.status} "
+                f"after {timeout}s")
+        if sj.status == FAILED:
+            raise JobFailed(search_id, str(sj.error)) from sj.error
+        if sj.result is not None:
+            return sj.result
+        if sj.status == CANCELLED:
+            raise JobCancelled(search_id, "search cancelled")
+        raise JobExpired(search_id)
+
+    def _search(self, search_id: int) -> "_SearchJob":
+        with self._lock:
+            try:
+                return self._searches[search_id]
+            except KeyError:
+                raise KeyError(
+                    f"unknown search id {search_id}") from None
+
     def poll(self, job_id: int) -> str:
         """Non-blocking status: queued | running | done | failed |
-        cancelled | expired."""
+        cancelled | expired.  Search jobs share the same states."""
+        with self._lock:
+            sj = self._searches.get(job_id)
+        if sj is not None:
+            return sj.status
         return self._job(job_id).status
 
     def cancel(self, job_id: int) -> bool:
         """Cancel a job: a queued job finishes CANCELLED immediately; a
         running one stops cooperatively at its next case boundary,
         keeping the rows completed so far.  Returns False if the job had
-        already reached a terminal state."""
+        already reached a terminal state.  A search job stops at its
+        next generation boundary, keeping the front found so far."""
+        with self._lock:
+            sj = self._searches.get(job_id)
+        if sj is not None:
+            if sj.status in TERMINAL:
+                return False
+            sj._cancel.set()
+            return True
         job = self._job(job_id)
         with self._lock:
             if job.status in TERMINAL:
@@ -480,7 +807,7 @@ class SimService:
                 f"job #{job_id} still {job.status} after {timeout}s")
         rows = job.surviving_rows()
         if job.status == DONE:
-            return rows
+            return job.result_value if job.work is not None else rows
         if job.status == FAILED:
             raise JobFailed(job_id, str(job.error), rows) from job.error
         if job.status == CANCELLED:
@@ -540,8 +867,16 @@ class SimService:
                                     note="service closed")
             if self._active_job is not None:
                 self._active_job._cancel.set()
+            searches = list(self._searches.values())
+            self._residents.clear()
+        for sj in searches:
+            sj._cancel.set()
         deadline = (None if timeout is None
                     else time.monotonic() + timeout)
+        for sj in searches:
+            remaining = (None if deadline is None
+                         else max(0.0, deadline - time.monotonic()))
+            sj._finished.wait(remaining)
         while True:
             worker = self._worker
             if worker is None or not worker.is_alive():
@@ -678,6 +1013,9 @@ class SimService:
             job.status = RUNNING
             if job.started_s is None:
                 job.started_s = time.monotonic()
+        if job.work is not None:
+            self._execute_work(job, control)
+            return
         while True:
             active: List[Tuple[int, SweepCase]] = []
             for i, c in enumerate(job.cases):
@@ -733,6 +1071,36 @@ class SimService:
             self._finish(job, FAILED)
         else:
             self._finish(job, DONE)
+
+    def _execute_work(self, job: SimJob, control) -> None:
+        """Run one closure job with the same transient-retry contract
+        as a case grid (no quarantine arm — a single closure either
+        eventually succeeds or fails the job)."""
+        attempt = 0
+        while True:
+            reason = control()
+            if reason:
+                self._finish(job, CANCELLED if reason == "cancelled"
+                             else EXPIRED)
+                return
+            t0 = time.perf_counter()
+            try:
+                job.result_value = job.work()
+            except Exception as e:
+                attempt += 1
+                if chaos.is_transient(e) and attempt <= self.retry.retries:
+                    job.retries += 1
+                    with self._lock:
+                        self.service_stats.retries += 1
+                    job._cancel.wait(
+                        self.retry.delay(f"work:{job.id}", attempt))
+                    continue
+                job.error = e
+                self._finish(job, FAILED)
+                return
+            self._monitor.observe(job.id, time.perf_counter() - t0)
+            self._finish(job, DONE)
+            return
 
     def _finish(self, job: SimJob, status: str, note: str = "") -> None:
         with self._lock:

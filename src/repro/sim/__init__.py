@@ -21,7 +21,12 @@ from repro.core.cache import CacheConfig, CacheStats
 from repro.graphs.corpus import (GRAPH_PRESETS, GraphPreset, GraphStore,
                                  bfs_reorder, degree_sort, graph_name,
                                  graph_variants, resolve_graph)
+from repro.errors import UnknownPresetError
+from repro.graphs.updates import (UPDATE_PRESETS, UpdateBatch,
+                                  UpdateStream, apply_batch,
+                                  resolve_updates, updates_name)
 from repro.sim.backends import BACKENDS, EventDRAM, make_backend
+from repro.sim.dynamic import DynamicResult, EpochReport, run_dynamic
 from repro.sim.memory import (CACHE_PRESETS, MEMORY_PRESETS, MemoryConfig,
                               cache_name, cache_variants, memory_name,
                               resolve_cache, resolve_memory,
@@ -31,6 +36,7 @@ from repro.sim.policy import (PartitionPolicy, resolve_partitioned_config,
 from repro.sim.reference_model import ReferenceConfig, ReferenceModel
 from repro.sim.registry import (AcceleratorSpec, get_accelerator,
                                 list_accelerators, register_accelerator)
+from repro.sim.scenario import ScenarioSpec, coerce_scenario
 from repro.sim.session import SimSession, simulate
 from repro.sim.sweep import (SweepCase, SweepError, SweepRow, SweepStats,
                              Sweeper, sweep)
@@ -52,6 +58,11 @@ __all__ = [
     "BACKENDS", "EventDRAM", "make_backend",
     "PartitionPolicy", "resolve_partitioned_config", "scaled_q",
     "Sweeper", "SweepCase", "SweepRow", "SweepStats", "SweepError",
+    "ScenarioSpec", "coerce_scenario",
+    "UpdateStream", "UpdateBatch", "UPDATE_PRESETS", "apply_batch",
+    "resolve_updates", "updates_name",
+    "run_dynamic", "DynamicResult", "EpochReport",
+    "UnknownPresetError",
     "ReferenceConfig", "ReferenceModel",
     "HitGraphSpec", "AccuGraphSpec", "ReferenceSpec",
 ]

@@ -29,6 +29,7 @@ from repro.core.cache import CacheConfig, effective as _effective_cache
 from repro.core.dram import (CONTIGUOUS_ORDER, DEFAULT_ORDER, AddressOrder,
                              DRAMConfig, DRAMTiming, ddr3_1600k, ddr4_2400r,
                              hbm2, hbm2e)
+from repro.errors import UnknownPresetError
 
 _KINDS = ("ddr3", "ddr4", "hbm2", "hbm2e")
 
@@ -159,9 +160,8 @@ def resolve_memory(memory: MemoryLike) -> Optional[DRAMConfig]:
         try:
             return MEMORY_PRESETS[memory.lower()].resolve()
         except KeyError:
-            raise KeyError(
-                f"unknown memory preset {memory!r}; available: "
-                f"{sorted(MEMORY_PRESETS)}") from None
+            raise UnknownPresetError("memory", memory,
+                                     MEMORY_PRESETS) from None
     raise TypeError(
         f"memory must be None, a preset name, MemoryConfig, or "
         f"DRAMConfig; got {type(memory).__name__}")
@@ -230,9 +230,9 @@ def resolve_cache(cache: CacheLike, spec=None) -> Optional[CacheConfig]:
         try:
             return CACHE_PRESETS[cache.lower()]
         except KeyError:
-            raise KeyError(
-                f"unknown cache preset {cache!r}; available: "
-                f"{sorted(CACHE_PRESETS)} or 'default'") from None
+            raise UnknownPresetError(
+                "cache", cache,
+                list(CACHE_PRESETS) + ["default"]) from None
     raise TypeError(
         f"cache must be None, a preset name, 'default', or a "
         f"CacheConfig; got {type(cache).__name__}")

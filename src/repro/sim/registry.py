@@ -23,6 +23,7 @@ from typing import Any, Dict, Hashable, List, Optional, Type
 from repro.algorithms.common import Problem, RunResult
 from repro.core.accel import SimReport
 from repro.core.dram import DRAMConfig
+from repro.errors import UnknownPresetError
 from repro.graphs.formats import Graph
 
 VECTORIZED, EVENT = "vectorized", "event"
@@ -93,9 +94,7 @@ class AcceleratorSpec:
             return config
         table = self.variants()
         if variant not in table:
-            raise KeyError(
-                f"unknown variant {variant!r} for accelerator "
-                f"{self.name!r}; have {sorted(table)}")
+            raise UnknownPresetError("variant", variant, table)
         return dataclasses.replace(config, **table[variant])
 
     # -- model hooks ----------------------------------------------------
@@ -115,6 +114,20 @@ class AcceleratorSpec:
                       fixed_iters: Optional[int] = None) -> Hashable:
         """Cache key identifying :meth:`run_algorithm`'s inputs."""
         raise NotImplementedError
+
+    def incremental_run(self, g_old: Graph, g_new: Graph, batch,
+                        problem: Problem, old_values, config,
+                        root: int = 0, plan=None) -> RunResult:
+        """The accelerator's incremental algorithm variant: repair
+        ``old_values`` after ``batch`` took ``g_old`` to ``g_new``
+        (bit-identical to a static recompute on ``g_new``; see
+        :mod:`repro.algorithms.incremental`).  Registered alongside
+        :meth:`run_algorithm` by the specs that support the dynamic
+        update path; the default declares none."""
+        raise NotImplementedError(
+            f"accelerator {self.name!r} registers no incremental "
+            "algorithm variants; dynamic update streams are unsupported "
+            "for it")
 
     # -- simulation -----------------------------------------------------
     def preferred_backend(self) -> str:
@@ -170,9 +183,7 @@ def get_accelerator(name) -> AcceleratorSpec:
     try:
         return _REGISTRY[name]
     except KeyError:
-        raise KeyError(
-            f"unknown accelerator {name!r}; registered: "
-            f"{sorted(_REGISTRY)}") from None
+        raise UnknownPresetError("accelerator", name, _REGISTRY) from None
 
 
 def list_accelerators(verbose: bool = False) -> List:

@@ -46,6 +46,34 @@ def _coerce_problem(problem) -> Problem:
     return problem if isinstance(problem, Problem) else Problem(problem)
 
 
+def resolve_run_config(spec, config=None, memory: MemoryLike = None,
+                       cache: CacheLike = None,
+                       variant: Optional[str] = None,
+                       serve_backend: Optional[str] = None, **overrides):
+    """Resolve the effective accelerator config from the public axis
+    selectors — the single coercion point :meth:`SimSession.run`, the
+    sweep engine's case preparation, and the dynamic-update pipeline
+    share (defaults <- config <- overrides <- memory <- variant <-
+    cache <- serve_backend)."""
+    cfg = spec.make_config(config, memory=resolve_memory(memory),
+                           **overrides)
+    cfg = spec.apply_variant(cfg, variant)
+    cache_cfg = resolve_cache(cache, spec)
+    if cache_cfg is not None:
+        # after variants: a dram-overriding variant (e.g. AccuGraph
+        # "hbm") must not discard the requested on-chip cache
+        cfg = spec.make_config(cfg, cache=cache_cfg)
+    if serve_backend is not None:
+        # serve_backend lives on the DRAMConfig and is timing-only
+        # (declared in TIMING_ONLY_FIELDS): pinning it never splits
+        # the session's geometry-keyed model/pack caches.
+        dram = (cfg.dram_config() if hasattr(cfg, "dram_config")
+                else cfg.dram)
+        cfg = spec.make_config(cfg, memory=dataclasses.replace(
+            dram, serve_backend=serve_backend))
+    return cfg
+
+
 def _dram_cfg_key(spec_name: str, config, include_cache: bool):
     """Cache key for state that depends on the config and the DRAM
     *geometry + clock* but not its timing: the config with ``dram``
@@ -102,6 +130,8 @@ class SimSession:
         self.algo_cache_hits = 0
         self.pack_cache_hits = 0
         self.pack_cache_misses = 0
+        self.invalidations = 0
+        self.invalidation_skips = 0
 
     def _singleflight(self, cache: Dict[object, Future], key, build,
                       count=None):
@@ -196,6 +226,37 @@ class SimSession:
                 del self._packs[oldest]
         return packed
 
+    def invalidate(self, touched_partitions) -> int:
+        """Invalidate the session's run/model/pack caches after the bound
+        graph mutated, keyed by which partitions actually changed: an
+        empty ``touched_partitions`` is a guaranteed no-op (every cached
+        artifact stays hit — the static prefix of a dynamic run, and any
+        zero-impact batch, never repays warm state), a non-empty one
+        drops all entries (they are whole-graph artifacts).  The
+        per-partition granularity lives one level down, in
+        :func:`repro.core.cache.invalidate_lines` over the on-chip
+        state.  Returns the number of cache entries dropped."""
+        if len(touched_partitions) == 0:
+            with self._lock:
+                self.invalidation_skips += 1
+            return 0
+        with self._lock:
+            dropped = (len(self._runs) + len(self._models)
+                       + len(self._packs))
+            self._runs.clear()
+            self._models.clear()
+            self._packs.clear()
+            self.invalidations += 1
+        return dropped
+
+    def rebind(self, graph: GraphLike, touched_partitions) -> int:
+        """Swap the resident graph (the serve layer's update-batch jobs:
+        a long-lived session whose graph evolves in place) and invalidate
+        accordingly.  Returns the number of cache entries dropped."""
+        dropped = self.invalidate(touched_partitions)
+        self.graph = resolve_graph(graph)
+        return dropped
+
     def run(self, problem, accelerator: str = "hitgraph", *,
             config=None, memory: MemoryLike = None,
             cache: CacheLike = None,
@@ -205,42 +266,33 @@ class SimSession:
             **overrides) -> SimReport:
         problem = _coerce_problem(problem)
         spec = get_accelerator(accelerator)
-        cfg = spec.make_config(config, memory=resolve_memory(memory),
-                               **overrides)
-        cfg = spec.apply_variant(cfg, variant)
-        cache_cfg = resolve_cache(cache, spec)
-        if cache_cfg is not None:
-            # after variants: a dram-overriding variant (e.g. AccuGraph
-            # "hbm") must not discard the requested on-chip cache
-            cfg = spec.make_config(cfg, cache=cache_cfg)
-        if serve_backend is not None:
-            # serve_backend lives on the DRAMConfig and is timing-only
-            # (declared in TIMING_ONLY_FIELDS): pinning it never splits
-            # the session's geometry-keyed model/pack caches.
-            dram = (cfg.dram_config() if hasattr(cfg, "dram_config")
-                    else cfg.dram)
-            cfg = spec.make_config(cfg, memory=dataclasses.replace(
-                dram, serve_backend=serve_backend))
+        cfg = resolve_run_config(spec, config, memory=memory, cache=cache,
+                                 variant=variant,
+                                 serve_backend=serve_backend, **overrides)
         run = self.algorithm_run(spec, problem, cfg, root, fixed_iters)
         return spec.simulate(self.graph, problem, cfg, backend=backend,
                              root=root, fixed_iters=fixed_iters, run=run,
                              model=self.model_for(spec, cfg))
 
 
-def simulate(graph: GraphLike, problem, accelerator: str = "hitgraph", *,
+def simulate(graph: GraphLike, problem=None,
+             accelerator: str = "hitgraph", *,
              config=None, memory: MemoryLike = None,
              cache: CacheLike = None,
              backend: Optional[str] = None, variant: Optional[str] = None,
              serve_backend: Optional[str] = None,
              root: int = 0, fixed_iters: Optional[int] = None,
-             **overrides) -> SimReport:
+             updates=None, **overrides) -> SimReport:
     """Run one simulation through the spec registry.
 
     Parameters
     ----------
-    graph:        a :class:`Graph` instance or a corpus preset name
+    graph:        a :class:`Graph` instance, a corpus preset name
                   (``"karate"``, ``"powerlaw-social:degree"``, ... —
-                  see :data:`repro.graphs.corpus.GRAPH_PRESETS`).
+                  see :data:`repro.graphs.corpus.GRAPH_PRESETS`), or a
+                  :class:`~repro.sim.scenario.ScenarioSpec` bundling
+                  every scenario axis (the preferred form; the per-axis
+                  keywords below stay as a deprecated adapter).
     problem:      a :class:`Problem` or its string value (``"wcc"``...).
     accelerator:  registered name (see :func:`list_accelerators`) or an
                   :class:`AcceleratorSpec` instance.
@@ -269,8 +321,36 @@ def simulate(graph: GraphLike, problem, accelerator: str = "hitgraph", *,
                   results, execution speed only.  ``None`` keeps the
                   memory point's own ``DRAMConfig.serve_backend``
                   (default ``"auto"``).
+    updates:      dynamic-graph mutation stream (``None`` = static, or
+                  an :data:`~repro.graphs.updates.UPDATE_PRESETS` name /
+                  :class:`~repro.graphs.updates.UpdateStream`): the run
+                  goes through :func:`repro.sim.dynamic.run_dynamic`
+                  and returns its aggregate report over all epochs.
+
+    ``backend`` / ``serve_backend`` are execution knobs, not scenario
+    axes — they stay keywords even for the ``ScenarioSpec`` form.
     """
-    return SimSession(graph).run(
-        problem, accelerator, config=config, memory=memory, cache=cache,
-        backend=backend, variant=variant, serve_backend=serve_backend,
-        root=root, fixed_iters=fixed_iters, **overrides)
+    from repro.sim.policy import resolve_partitioned_config
+    from repro.sim.scenario import coerce_scenario
+    spec = coerce_scenario(
+        "simulate", graph, problem, accelerator=accelerator,
+        config=config, memory=memory, cache=cache, variant=variant,
+        updates=updates, root=root, fixed_iters=fixed_iters)
+    g = resolve_graph(spec.resolved_graph(), scale=spec.graph_scale,
+                      seed=spec.graph_seed)
+    cfg = resolve_partitioned_config(spec.resolved_config(), g)
+    if spec.updates is not None:
+        from repro.sim.dynamic import run_dynamic
+        return run_dynamic(
+            g, spec.problem, updates=spec.updates,
+            accelerator=spec.accelerator, config=cfg,
+            memory=spec.memory, cache=spec.cache, backend=backend,
+            variant=spec.variant, serve_backend=serve_backend,
+            root=spec.root, fixed_iters=spec.fixed_iters,
+            **overrides).report
+    return SimSession(g).run(
+        spec.problem, spec.accelerator, config=cfg,
+        memory=spec.memory, cache=spec.cache,
+        backend=backend, variant=spec.variant,
+        serve_backend=serve_backend, root=spec.root,
+        fixed_iters=spec.fixed_iters, **overrides)

@@ -48,6 +48,13 @@ class HitGraphSpec(AcceleratorSpec):
                       fixed_iters: Optional[int] = None):
         return ("edge", _graph_key(g), problem, root, fixed_iters)
 
+    def incremental_run(self, g_old, g_new, batch, problem: Problem,
+                        old_values, config, root: int = 0, plan=None):
+        from repro.algorithms import incremental
+        return incremental.run_incremental(
+            g_old, g_new, batch, problem, old_values, engine="edge",
+            root=root, plan=plan)
+
     def variants(self):
         return {
             "baseline": {},
@@ -125,6 +132,14 @@ class AccuGraphSpec(AcceleratorSpec):
                       fixed_iters: Optional[int] = None):
         return ("vertex", _graph_key(g), problem, self._q(g, config),
                 config.partition_skipping, root, fixed_iters)
+
+    def incremental_run(self, g_old, g_new, batch, problem: Problem,
+                        old_values, config, root: int = 0, plan=None):
+        from repro.algorithms import incremental
+        return incremental.run_incremental(
+            g_old, g_new, batch, problem, old_values, engine="vertex",
+            root=root, q=self._q(g_new, config),
+            block_skipping=config.partition_skipping, plan=plan)
 
     def variants(self):
         from repro.core.dram import hbm2

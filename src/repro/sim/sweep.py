@@ -47,10 +47,13 @@ from repro.core.accel import (DevicePackedProgram, ProgramStats, SimReport,
                               serve_packed)
 from repro.graphs.corpus import GraphLike, resolve_graph
 from repro.graphs.formats import Graph
+from repro.graphs.updates import (UpdatesLike, resolve_updates,
+                                  updates_name)
 from repro.sim.memory import (CacheLike, MemoryLike, cache_name,
                               memory_name, resolve_cache, resolve_memory)
 from repro.sim.policy import resolve_partitioned_config
 from repro.sim.registry import get_accelerator
+from repro.sim.scenario import ScenarioSpec
 from repro.sim.session import SimSession, _coerce_problem
 from repro.serve import chaos
 
@@ -71,6 +74,17 @@ class SweepCase:
     it resolves against the resolved graph here, so every downstream
     consumer (sessions, the service, design-space search) only ever
     sees concrete integer configs.
+
+    Every string axis validates at construction: an unknown accelerator,
+    memory, cache, variant, or updates preset raises
+    :class:`~repro.errors.UnknownPresetError` naming the axis and the
+    nearest valid name here, instead of surfacing later from deep inside
+    a worker thread.  ``updates`` names a mutation stream
+    (:data:`~repro.graphs.updates.UPDATE_PRESETS` or an
+    :class:`~repro.graphs.updates.UpdateStream`); a non-``None`` value
+    makes the case dynamic — it runs the epoch pipeline of
+    :func:`repro.sim.dynamic.run_dynamic` and yields one aggregate row
+    with per-epoch reports attached (:attr:`SweepRow.epochs`).
     """
 
     graph: GraphLike
@@ -84,6 +98,7 @@ class SweepCase:
     fixed_iters: Optional[int] = None
     graph_scale: float = 1.0
     graph_seed: int = 0
+    updates: UpdatesLike = None
 
     def __post_init__(self):
         object.__setattr__(self, "problem",
@@ -95,6 +110,18 @@ class SweepCase:
         object.__setattr__(
             self, "config",
             resolve_partitioned_config(self.config, self.graph))
+        # fail-fast axis validation (each resolver raises a typed
+        # UnknownPresetError naming the axis + nearest preset); the
+        # resolved products are rebuilt later where needed — only the
+        # updates stream is kept, so one case carries one stream object
+        spec = get_accelerator(self.accelerator)
+        if self.variant is not None and self.variant not in \
+                spec.variants():
+            spec.apply_variant(spec.make_config(None), self.variant)
+        resolve_memory(self.memory)
+        resolve_cache(self.cache, spec)
+        object.__setattr__(self, "updates",
+                           resolve_updates(self.updates))
 
 
 def case_chaos_key(case: "SweepCase") -> str:
@@ -104,7 +131,8 @@ def case_chaos_key(case: "SweepCase") -> str:
     return "|".join((case.graph.fingerprint, case.problem.value,
                      case.accelerator, memory_name(case.memory),
                      cache_name(case.cache), case.variant or "baseline",
-                     str(case.root), str(case.fixed_iters)))
+                     str(case.root), str(case.fixed_iters),
+                     updates_name(case.updates)))
 
 
 class SweepInterrupted(RuntimeError):
@@ -141,11 +169,16 @@ class SweepError(RuntimeError):
 
 @dataclasses.dataclass
 class SweepRow:
-    """One simulated grid point."""
+    """One simulated grid point.  A dynamic case (``case.updates``)
+    stays 1:1 with its grid point: ``report`` aggregates the whole
+    update timeline and ``epochs`` carries the per-epoch
+    :class:`~repro.sim.dynamic.EpochReport` rows (``None`` for static
+    cases)."""
 
     case: SweepCase
     report: SimReport
     wall_s: float
+    epochs: Optional[List] = None
 
     @property
     def graph_name(self) -> str:
@@ -163,18 +196,32 @@ class SweepRow:
     def variant(self) -> str:
         return self.case.variant or "baseline"
 
+    @property
+    def updates(self) -> str:
+        return updates_name(self.case.updates)
+
     def as_dict(self) -> Dict[str, Any]:
         r = self.report
-        return {
+        out = {
             "graph": self.graph_name, "problem": self.case.problem.value,
             "accelerator": r.system, "memory": self.memory,
             "cache": self.cache, "variant": self.variant,
+            "updates": self.updates,
             "runtime_ms": r.runtime_ms,
             "iterations": r.iterations, "reps": r.reps,
             "row_hit_rate": r.row_hit_rate,
             "cache_hit_rate": r.cache_hit_rate,
             "total_requests": r.total_requests, "wall_s": self.wall_s,
         }
+        if self.epochs is not None:
+            out["epochs"] = len(self.epochs)
+            out["edges_inserted"] = sum(e.inserted for e in self.epochs)
+            out["edges_deleted"] = sum(e.deleted for e in self.epochs)
+            out["cache_lines_invalidated"] = sum(
+                e.cache_lines_invalidated for e in self.epochs)
+            out["reset_vertices"] = sum(e.reset_vertices
+                                        for e in self.epochs)
+        return out
 
 
 @dataclasses.dataclass
@@ -275,6 +322,23 @@ class Sweeper:
         chaos.maybe_inject("dram.serve", case_chaos_key(case))
         sess = self._session(case.graph)
         t0 = time.perf_counter()
+        if case.updates is not None:
+            # dynamic case: one long-lived memory timeline over the
+            # update epochs.  A pure function of the case (the stream is
+            # seeded, the session only accelerates the static prefix),
+            # so rows stay bit-identical for any (workers, devices).
+            from repro.sim.dynamic import run_dynamic
+            result = run_dynamic(
+                case.graph, case.problem, updates=case.updates,
+                accelerator=case.accelerator, config=case.config,
+                memory=case.memory, cache=case.cache,
+                backend=self.backend if backend is None else backend,
+                variant=case.variant, root=case.root,
+                fixed_iters=case.fixed_iters, session=sess)
+            self.stats.cases += 1
+            return SweepRow(case=case, report=result.report,
+                            wall_s=time.perf_counter() - t0,
+                            epochs=result.epochs)
         report = sess.run(
             case.problem, case.accelerator, config=case.config,
             memory=case.memory, cache=case.cache,
@@ -354,6 +418,12 @@ class Sweeper:
         every expensive product goes through the session's single-flight
         caches, and the (cache-filtered) packed program comes from the
         geometry-keyed pack cache."""
+        if case.updates is not None:
+            # dynamic cases serialize through run_case on the serving
+            # thread in every mode: their epochs share one mutating
+            # memory timeline, which the stacked vmap dispatch cannot
+            # express (and must not reorder)
+            return None
         key = case_chaos_key(case)
         chaos.maybe_inject("worker.crash", key)
         chaos.maybe_inject("sweep.prepare", key)
@@ -556,10 +626,11 @@ def sweep(graphs: Iterable[GraphLike] = (), problems: Iterable = (),
           memories: Iterable[MemoryLike] = (None,),
           caches: Iterable[CacheLike] = (None,),
           variants: Iterable[Optional[str]] = (None,),
+          updates: Iterable[UpdatesLike] = (None,),
           configs: Optional[Dict[str, Any]] = None,
           root: int = 0, fixed_iters: Optional[int] = None,
           backend: Optional[str] = None,
-          cases: Optional[Sequence[SweepCase]] = None,
+          cases: Optional[Sequence] = None,
           batch_memories: bool = False, workers: int = 1,
           devices: int = 1,
           graph_scale: float = 1.0, graph_seed: int = 0,
@@ -567,9 +638,16 @@ def sweep(graphs: Iterable[GraphLike] = (), problems: Iterable = (),
     """Run a simulation grid; returns one row per grid point.
 
     Either pass the axes (``graphs x problems x accelerators x memories
-    x caches x variants``, expanded as an outer product in that order)
-    or an explicit ``cases`` list for irregular grids (e.g. a
-    per-dataset config).  ``graphs`` entries are :class:`Graph`
+    x caches x variants x updates``, expanded as an outer product in
+    that order) or an explicit ``cases`` list — of :class:`SweepCase`
+    and/or :class:`~repro.sim.scenario.ScenarioSpec` values — for
+    irregular grids (e.g. a per-dataset config); a single
+    ``ScenarioSpec`` as the first positional argument runs a one-case
+    sweep.  ``updates`` sweeps the dynamic-graph mutation axis
+    (``None`` = static, or :data:`~repro.graphs.updates.UPDATE_PRESETS`
+    names / :class:`~repro.graphs.updates.UpdateStream` values — one
+    aggregate row per dynamic case, per-epoch reports on
+    ``row.epochs``).  ``graphs`` entries are :class:`Graph`
     instances or corpus preset names (``"karate"``,
     ``"powerlaw-social:degree"``, ... — see
     :data:`~repro.graphs.corpus.GRAPH_PRESETS` and
@@ -590,17 +668,23 @@ def sweep(graphs: Iterable[GraphLike] = (), problems: Iterable = (),
     share its cache/stats across calls or to inspect ``sweeper.stats``
     afterwards.
     """
+    if cases is None and isinstance(graphs, ScenarioSpec):
+        cases = [graphs]
     if cases is None:
         configs = configs or {}
         cases = [
             SweepCase(graph=g, problem=p, accelerator=a, memory=m,
                       cache=c, variant=v, config=configs.get(a),
                       root=root, fixed_iters=fixed_iters,
-                      graph_scale=graph_scale, graph_seed=graph_seed)
-            for g, p, a, m, c, v in itertools.product(
+                      graph_scale=graph_scale, graph_seed=graph_seed,
+                      updates=u)
+            for g, p, a, m, c, v, u in itertools.product(
                 graphs, problems, accelerators, memories, caches,
-                variants)
+                variants, updates)
         ]
+    else:
+        cases = [c.to_case() if isinstance(c, ScenarioSpec) else c
+                 for c in cases]
     if sweeper is None:
         sweeper = Sweeper(backend=backend, batch_memories=batch_memories,
                           workers=workers, devices=devices)

@@ -158,7 +158,8 @@ class SearchDriver:
                  sweeper: Optional[Sweeper] = None,
                  service=None, tenant: str = "autotune",
                  evolve_rounds: int = 0, evolve_children: int = 4,
-                 result_timeout_s: float = 600.0):
+                 result_timeout_s: float = 600.0,
+                 control=None, front_cb=None):
         self.space = space
         self.seed = int(seed)
         self.budget = budget
@@ -173,6 +174,14 @@ class SearchDriver:
         self.evolve_rounds = evolve_rounds
         self.evolve_children = evolve_children
         self.result_timeout_s = result_timeout_s
+        #: cooperative stop probe (same contract as the sweep engine's
+        #: ``control``): returning a reason string stops the search at
+        #: the next generation boundary, keeping the front so far —
+        #: the service's submit_search wires cancel/deadline through it
+        self._control = control
+        #: streaming-front hook: called with the current top-fidelity
+        #: Pareto front after every generation that adds top-rung rows
+        self._front_cb = front_cb
 
     # ---- dispatch ----------------------------------------------------
     def _remaining(self, stats: SearchStats) -> Optional[int]:
@@ -194,7 +203,8 @@ class SearchDriver:
             points = list(points)[:remaining]
         if not points:
             return []
-        cases = [p.to_case(graph, problem, fixed_iters=fixed_iters)
+        cases = [p.to_case(graph, problem, fixed_iters=fixed_iters,
+                           **getattr(self, "_case_kw", {}))
                  for p in points]
         stats.case_evals += len(cases)
         stats.dispatches += 1
@@ -228,9 +238,35 @@ class SearchDriver:
             return [by_case.get(id(c)) for c in cases]
 
     # ---- search ------------------------------------------------------
-    def search(self, graph, problem) -> SearchResult:
+    def _stopped(self) -> Optional[str]:
+        return self._control() if self._control is not None else None
+
+    def search(self, graph, problem=None) -> SearchResult:
         """One scenario: sample, halve up the rung ladder, optionally
-        refine, reduce to the top-fidelity Pareto front."""
+        refine, reduce to the top-fidelity Pareto front.
+
+        The scenario is ``(graph, problem)`` — or a single
+        :class:`~repro.sim.scenario.ScenarioSpec` as the first argument,
+        whose graph/ordering/updates/root axes all apply (``fixed_iters``
+        is the search's own fidelity knob and is ignored; a dynamic
+        ``updates`` axis scores each candidate on the whole epoch
+        timeline's aggregate report)."""
+        from repro.sim.scenario import ScenarioSpec
+        case_kw = {}
+        if isinstance(graph, ScenarioSpec):
+            if problem is not None:
+                raise ValueError(
+                    "search() got a ScenarioSpec plus a problem; put "
+                    "the problem inside the spec")
+            spec = graph
+            graph, problem = spec.resolved_graph(), spec.problem
+            case_kw = dict(root=spec.root, graph_scale=spec.graph_scale,
+                           graph_seed=spec.graph_seed,
+                           updates=spec.updates)
+        elif problem is None:
+            raise TypeError("search() needs a problem (or a "
+                            "ScenarioSpec as its first argument)")
+        self._case_kw = case_kw
         budget = self.budget
         stats = SearchStats()
         t0 = time.perf_counter()
@@ -246,12 +282,16 @@ class SearchDriver:
         rung_reports: List[RungReport] = []
 
         for fixed_iters in budget.rungs:
+            if self._stopped():
+                break
             rows: Dict[str, SweepRow] = {}
             evaluated = self._evaluate(population, graph, problem,
                                        fixed_iters, stats, rows)
             stats.generations += 1
             if fixed_iters == top_iters:
                 top_rows.update(rows)
+                if self._front_cb is not None and top_rows:
+                    self._front_cb(front_of_rows(top_rows))
             ranked = _rank([(p.key, objectives_of(rows[p.key]))
                             for p in evaluated])
             n_keep = (len(evaluated)
@@ -266,6 +306,8 @@ class SearchDriver:
                 break
 
         for _ in range(self.evolve_rounds if population else 0):
+            if self._stopped():
+                break
             children: List[DesignPoint] = []
             parents = population
             for i in range(self.evolve_children):
@@ -291,6 +333,8 @@ class SearchDriver:
             stats.generations += 1
             stats.evolved += len(evaluated)
             top_rows.update(rows)
+            if self._front_cb is not None and top_rows:
+                self._front_cb(front_of_rows(top_rows))
             # refreshed parent pool: best of everything at top fidelity
             ranked = _rank([(k, objectives_of(r))
                             for k, r in top_rows.items()])

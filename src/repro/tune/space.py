@@ -282,7 +282,7 @@ class DesignPoint:
     def to_case(self, graph, problem, *, root: int = 0,
                 fixed_iters: Optional[int] = None,
                 graph_scale: float = 1.0,
-                graph_seed: int = 0) -> SweepCase:
+                graph_seed: int = 0, updates=None) -> SweepCase:
         """Materialize as a :class:`SweepCase` for one (graph, problem)
         scenario.  Config-level dimensions become field overrides on the
         accelerator's config dataclass (``PartitionPolicy`` values
@@ -300,4 +300,5 @@ class DesignPoint:
             cache=values.get("cache"),
             variant=values.get("variant"),
             config=config, root=root, fixed_iters=fixed_iters,
-            graph_scale=graph_scale, graph_seed=graph_seed)
+            graph_scale=graph_scale, graph_seed=graph_seed,
+            updates=updates)

@@ -15,10 +15,12 @@ from concurrent.futures import ThreadPoolExecutor
 import pytest
 
 from repro.analysis import locks
+from repro.errors import UnknownPresetError
 from repro.graphs.corpus import load_graph_binary, save_graph_binary
 from repro.graphs.generators import rmat
 from repro.sim.session import SimSession
 from repro.sim.sweep import Sweeper, SweepCase
+from repro.serve import chaos
 from repro.serve.engine import DONE, SimService
 
 THREADS = 8
@@ -247,11 +249,19 @@ class TestSimServiceStress:
         locks.assert_clean()
 
     def test_failure_isolated_per_job(self):
+        # Preset typos now fail eagerly at SweepCase construction (typed
+        # UnknownPresetError), so a *runtime* failure needs an injected
+        # permanent fault; one quarantine stays below the breaker
+        # threshold, so the good job on the same geometry still runs.
+        with pytest.raises(UnknownPresetError):
+            SweepCase("karate", "pr", accelerator="no-such")
+        cfg = chaos.ChaosConfig(seed=2, sites={
+            "dram.serve": chaos.SiteConfig(rate=1.0, permanent_rate=1.0)})
         with SimService() as svc:
-            bad = svc.submit([SweepCase("karate", "pr",
-                                        accelerator="no-such")])
+            with chaos.scope(cfg):
+                bad = svc.submit([SweepCase("karate", "pr")])
+                with pytest.raises(Exception):
+                    svc.result(bad, timeout=300)
             good = svc.submit([SweepCase("karate", "pr")])
-            with pytest.raises(Exception):
-                svc.result(bad, timeout=300)
             assert len(svc.result(good, timeout=300)) == 1
         locks.assert_clean()

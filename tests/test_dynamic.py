@@ -1,0 +1,207 @@
+"""Dynamic-graph update streams: the incremental==recompute oracle,
+static-prefix bit-identity, per-epoch accounting, cache-invalidation
+soundness, and sweep determinism across (workers, devices)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.algorithms.incremental import INCREMENTAL_PROBLEMS
+from repro.core.cache import (CacheConfig, init_state, invalidate_lines,
+                              lookup_reads)
+from repro.graphs.generators import rmat
+from repro.graphs.updates import (UPDATE_PRESETS, UpdateBatch,
+                                  UpdateStream, apply_batch,
+                                  resolve_updates)
+from repro.sim import (ScenarioSpec, SimSession, SweepCase, simulate,
+                       sweep)
+from repro.sim.dynamic import DynamicTimeline, run_dynamic
+
+
+@pytest.fixture(scope="module")
+def g():
+    return rmat(9, 6, seed=7).undirected_view()
+
+
+def _report_key(report):
+    return (report.runtime_ns, report.total_requests,
+            report.row_hit_rate, report.cache_hits, report.iterations)
+
+
+class TestStreams:
+    def test_presets_resolve(self):
+        for name in UPDATE_PRESETS:
+            s = resolve_updates(name)
+            assert isinstance(s, UpdateStream) and s.name == name
+
+    def test_batches_deterministic(self, g):
+        s = UpdateStream("t", "churn", epochs=2, rate=0.05, seed=11)
+        b1, b2 = s.batch(g, 1), s.batch(g, 1)
+        assert np.array_equal(b1.insert_src, b2.insert_src)
+        assert np.array_equal(b1.delete_idx, b2.delete_idx)
+
+    def test_apply_batch_counts(self, g):
+        b = UpdateStream("t", "window", rate=0.04, seed=2).batch(g, 1)
+        g2 = apply_batch(g, b)
+        assert g2.m == g.m + b.n_inserted - b.n_deleted
+        assert g2.n == g.n
+
+    def test_bad_delete_index_raises(self, g):
+        bad = UpdateBatch(epoch=1, insert_src=[], insert_dst=[],
+                          delete_idx=[g.m + 5])
+        with pytest.raises(IndexError, match="delete_idx"):
+            apply_batch(g, bad)
+
+
+class TestIncrementalOracle:
+    """The tentpole guarantee: incremental repair is bit-identical to a
+    static recompute on the mutated graph — across accelerators,
+    problems, and stream families (``verify=True`` asserts
+    ``np.array_equal`` internally)."""
+
+    @pytest.mark.parametrize("accelerator", ["hitgraph", "accugraph"])
+    @pytest.mark.parametrize("problem",
+                             [p.value for p in INCREMENTAL_PROBLEMS])
+    @pytest.mark.parametrize("preset", sorted(UPDATE_PRESETS))
+    def test_matches_recompute(self, g, accelerator, problem, preset):
+        stream = UPDATE_PRESETS[preset]
+        res = run_dynamic(g, problem, updates=stream,
+                          accelerator=accelerator, verify=True)
+        assert res.n_epochs == stream.epochs + 1
+        assert np.array_equal(res.checkpoint, res.final_values)
+
+    def test_non_incremental_problem_rejected(self, g):
+        with pytest.raises(ValueError, match="incremental"):
+            run_dynamic(g, "pr", updates="pa-growth")
+
+
+class TestTimeline:
+    def test_epoch0_matches_static_simulate(self, g):
+        """The static prefix of a dynamic run is bit-identical to a
+        plain ``simulate()`` of the same case."""
+        tl = DynamicTimeline(g, "wcc", updates="pa-growth",
+                             accelerator="accugraph", cache="default")
+        static = simulate(ScenarioSpec(g, "wcc",
+                                       accelerator="accugraph",
+                                       cache="default"))
+        assert _report_key(tl.epochs[0].report) == _report_key(static)
+
+    def test_step_accounting(self, g):
+        tl = DynamicTimeline(g, "wcc", updates="uniform-churn")
+        ep = tl.step()
+        assert ep.epoch == 1 and tl.epoch == 1
+        assert ep.inserted > 0 and ep.deleted > 0
+        assert 0 < ep.touched_partitions <= ep.total_partitions
+        assert tl.graph.m == g.m + ep.inserted - ep.deleted
+
+    def test_owned_session_rebinds(self, g):
+        tl = DynamicTimeline(g, "wcc", updates="uniform-churn")
+        sess = tl._session
+        assert sess.graph is g
+        tl.step()
+        assert sess.graph is tl.graph and sess.graph is not g
+        assert sess.invalidations == 1
+
+    def test_shared_session_untouched(self, g):
+        sess = SimSession(g)
+        res = run_dynamic(g, "wcc", updates="uniform-churn",
+                          session=sess)
+        assert sess.graph is g
+        assert sess.invalidations == 0
+        assert res.final_graph is not g
+
+    def test_timeline_persists_across_epochs(self, g):
+        """One memory timeline: each epoch's report starts where the
+        previous clock stopped (runtime strictly grows)."""
+        tl = DynamicTimeline(g, "bfs", updates="pa-growth")
+        t0 = tl.aggregate_report().runtime_ns
+        tl.step()
+        t1 = tl.aggregate_report().runtime_ns
+        assert t1 > t0
+        assert tl.aggregate_report().iterations == sum(
+            ep.iterations for ep in tl.epochs)
+
+    def test_empty_batch_is_invalidation_noop(self, g):
+        tl = DynamicTimeline(g, "wcc", updates="pa-growth")
+        before = tl.values.copy()
+        empty = UpdateBatch(epoch=1, insert_src=[], insert_dst=[],
+                            delete_idx=[])
+        ep = tl.step(empty)
+        assert ep.touched_partitions == 0
+        assert ep.cache_lines_invalidated == 0
+        assert tl._session.invalidation_skips == 1
+        assert np.array_equal(tl.values, before)
+
+
+class TestCacheInvalidation:
+    def test_untouched_partitions_keep_residency(self, g):
+        """Soundness: after an update epoch the vertex cache still hits
+        (residency survives for untouched lines) — and correctness is
+        pinned by the oracle above, so surviving hits are safe hits."""
+        res = run_dynamic(g, "wcc", updates="uniform-churn",
+                          accelerator="accugraph", cache="default",
+                          verify=True)
+        for ep in res.epochs[1:]:
+            assert ep.cache_lines_invalidated > 0
+        assert res.epochs[-1].report.cache_hits > 0
+
+    def test_invalidate_lines_drops_exact_ranges(self):
+        cfg = CacheConfig(lines=32, ways=4)
+
+        def serve(state, lines):
+            lines = np.asarray(lines, dtype=np.int64)
+            return lookup_reads(state, lines % cfg.sets,
+                                lines // cfg.sets, backend="host")
+
+        state = init_state(cfg)
+        warm = np.arange(32)                 # exactly fills capacity
+        serve(state, warm)
+        assert serve(state, warm).all()
+        dropped = invalidate_lines(state, cfg, [(8, 8)])
+        assert dropped == 8
+        hits = serve(state, warm)
+        assert not hits[8:16].any()          # stale lines must miss
+        assert hits[:8].all() and hits[16:].all()   # residency survives
+
+
+class TestDynamicSweep:
+    def test_grid_axis_and_row_schema(self, g):
+        rows = sweep(graphs=[g], problems=["wcc"],
+                     accelerators=["hitgraph"],
+                     updates=[None, "pa-growth"])
+        assert len(rows) == 2
+        static, dyn = rows
+        assert static.updates == "static" and static.epochs is None
+        assert dyn.updates == "pa-growth"
+        d = dyn.as_dict()
+        assert d["epochs"] == UPDATE_PRESETS["pa-growth"].epochs + 1
+        assert d["edges_inserted"] > 0
+        assert "cache_lines_invalidated" in d
+
+    @pytest.mark.parametrize("workers,devices", [(1, 1), (4, 1), (2, 2)])
+    def test_bit_identical_across_placement(self, g, workers, devices):
+        rows = sweep(graphs=[g], problems=["wcc"],
+                     accelerators=["hitgraph", "accugraph"],
+                     updates=["uniform-churn"], workers=workers,
+                     devices=devices)
+        keys = [_report_key(r.report) for r in rows]
+        base = sweep(graphs=[g], problems=["wcc"],
+                     accelerators=["hitgraph", "accugraph"],
+                     updates=["uniform-churn"])
+        assert keys == [_report_key(r.report) for r in base]
+
+
+class TestPropertyOracle:
+    @settings(max_examples=8, deadline=None)
+    @given(seed=st.integers(min_value=0, max_value=2**16),
+           kind=st.sampled_from(["pa", "window", "churn"]),
+           rate=st.floats(min_value=0.01, max_value=0.15),
+           problem=st.sampled_from(["wcc", "bfs"]))
+    def test_incremental_equals_recompute(self, seed, kind, rate,
+                                          problem):
+        g = rmat(8, 5, seed=13).undirected_view()
+        stream = UpdateStream(f"prop-{kind}", kind, epochs=2,
+                              rate=rate, seed=seed)
+        res = run_dynamic(g, problem, updates=stream, verify=True)
+        assert np.array_equal(res.checkpoint, res.final_values)

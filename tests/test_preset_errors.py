@@ -1,0 +1,77 @@
+"""Regression tests for satellite "typed preset errors": every string
+axis must fail at *case construction* with an error naming the axis and
+suggesting the nearest valid preset — never deep inside a worker, and
+never silently (SweepCase used to accept unknown memory/cache/variant
+strings and only blow up, obscurely, at run time)."""
+
+import pytest
+
+from repro.errors import UnknownPresetError
+from repro.graphs.corpus import resolve_graph
+from repro.graphs.updates import resolve_updates
+from repro.sim.memory import resolve_cache, resolve_memory
+from repro.sim.registry import get_accelerator
+from repro.sim.sweep import SweepCase
+
+
+def test_unknown_preset_error_is_keyerror():
+    err = UnknownPresetError("memory", "ddr5", ["ddr3", "ddr4"])
+    assert isinstance(err, KeyError)
+    assert err.axis == "memory"
+    assert err.available == ["ddr3", "ddr4"]
+
+
+@pytest.mark.parametrize("resolver, axis, bad, near", [
+    (resolve_memory, "memory", "dddr4", "ddr4"),
+    (resolve_cache, "cache", "vetrex-64k", "vertex-64k"),
+    (resolve_graph, "graph", "karatee", "karate"),
+    (resolve_updates, "updates", "pa-growht", "pa-growth"),
+    (get_accelerator, "accelerator", "hitgrpah", "hitgraph"),
+])
+def test_resolvers_raise_typed_error(resolver, axis, bad, near):
+    with pytest.raises(UnknownPresetError) as ei:
+        resolver(bad)
+    assert ei.value.axis == axis
+    assert ei.value.suggestion == near
+    assert axis in str(ei.value) and near in str(ei.value)
+
+
+def test_unknown_graph_transform_is_typed():
+    with pytest.raises(UnknownPresetError) as ei:
+        resolve_graph("karate:degre")
+    assert ei.value.axis == "graph transform"
+    assert ei.value.suggestion == "degree"
+
+
+def test_unknown_variant_is_typed():
+    spec = get_accelerator("hitgraph")
+    with pytest.raises(UnknownPresetError) as ei:
+        spec.apply_variant(spec.make_config(None), "no_mergin")
+    assert ei.value.axis == "variant"
+    assert ei.value.suggestion == "no_merging"
+
+
+@pytest.mark.parametrize("kwargs, axis", [
+    (dict(memory="dddr4"), "memory"),
+    (dict(cache="vertex-63k"), "cache"),
+    (dict(variant="no_mergin"), "variant"),
+    (dict(accelerator="hitgrpah"), "accelerator"),
+    (dict(updates="pa-growht"), "updates"),
+])
+def test_sweepcase_validates_axes_at_construction(kwargs, axis):
+    """The regression: these used to construct fine and fail later (or
+    not at all on paths that never resolved the name)."""
+    with pytest.raises(UnknownPresetError) as ei:
+        SweepCase(graph="karate", problem="wcc", **kwargs)
+    assert ei.value.axis == axis
+
+
+def test_sweepcase_still_accepts_valid_names():
+    case = SweepCase(graph="karate", problem="wcc", memory="ddr4",
+                     cache="vertex-64k", variant="no_merging")
+    assert case.memory == "ddr4"
+
+
+def test_sweepcase_accepts_default_cache_sentinel():
+    case = SweepCase(graph="karate", problem="wcc", cache="default")
+    assert case.cache == "default"

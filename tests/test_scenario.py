@@ -1,0 +1,230 @@
+"""The unified ``ScenarioSpec`` API: all four entry points accept one
+spec, the legacy-keyword shim warns with the migration spelled out, and
+the serve layer's resident-graph / tenant-search surfaces ride it."""
+
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.errors import UnknownPresetError
+from repro.graphs.generators import rmat
+from repro.serve import (CANCELLED, DONE, JobFailed, SimService)
+from repro.sim import ScenarioSpec, SweepCase, simulate, sweep
+from repro.sim.registry import get_accelerator
+from repro.sim.scenario import DEPRECATION_THRESHOLD, coerce_scenario
+from repro.tune.halving import HalvingBudget, SearchDriver
+
+
+@pytest.fixture(scope="module")
+def g():
+    return rmat(9, 6, seed=7).undirected_view()
+
+
+def _key(report):
+    return (report.runtime_ns, report.total_requests,
+            report.row_hit_rate, report.cache_hits)
+
+
+class TestSpec:
+    def test_to_case_round_trip(self, g):
+        spec = ScenarioSpec(g, "wcc", accelerator="accugraph",
+                            memory="hbm2", cache="default", root=3)
+        case = spec.to_case()
+        assert isinstance(case, SweepCase)
+        assert case.accelerator == "accugraph" and case.root == 3
+
+    def test_axis_typos_raise_named_axis(self, g):
+        with pytest.raises(UnknownPresetError, match="accelerator"):
+            ScenarioSpec(g, "wcc", accelerator="hitgrpah").to_case()
+        with pytest.raises(UnknownPresetError, match="updates"):
+            ScenarioSpec(g, "wcc", updates="pa-growht").to_case()
+
+    def test_ordering_folds_into_preset_name(self):
+        spec = ScenarioSpec("powerlaw-social", "wcc", ordering="degree")
+        assert spec.resolved_graph() == "powerlaw-social:degree"
+
+    def test_ordering_on_materialized_graph_rejected(self, g):
+        with pytest.raises(ValueError, match="materialized"):
+            ScenarioSpec(g, "wcc", ordering="degree").resolved_graph()
+
+    def test_replace(self, g):
+        spec = ScenarioSpec(g, "wcc")
+        dyn = spec.replace(updates="pa-growth")
+        assert spec.updates is None and dyn.updates == "pa-growth"
+
+
+class TestSimulateEntryPoint:
+    def test_spec_equals_kwargs(self, g):
+        by_spec = simulate(ScenarioSpec(g, "wcc",
+                                        accelerator="accugraph",
+                                        cache="default"))
+        by_kw = simulate(g, "wcc", accelerator="accugraph",
+                         cache="default")
+        assert _key(by_spec) == _key(by_kw)
+
+    def test_spec_plus_axes_rejected(self, g):
+        with pytest.raises(ValueError, match="spec.replace"):
+            simulate(ScenarioSpec(g, "wcc"), memory="hbm2")
+        with pytest.raises(ValueError, match="problem"):
+            simulate(ScenarioSpec(g, "wcc"), "bfs")
+
+    def test_legacy_kwargs_deprecation_warning(self, g):
+        with warnings.catch_warnings(record=True) as caught:
+            warnings.simplefilter("always")
+            simulate(g, "wcc", accelerator="accugraph",
+                     memory="hbm2", cache="default")
+        deps = [w for w in caught
+                if issubclass(w.category, DeprecationWarning)]
+        assert len(deps) == 1
+        assert "ScenarioSpec" in str(deps[0].message)
+
+    def test_below_threshold_no_warning(self, g):
+        with warnings.catch_warnings(record=True) as caught:
+            warnings.simplefilter("always")
+            simulate(g, "wcc", accelerator="accugraph")
+        assert not [w for w in caught
+                    if issubclass(w.category, DeprecationWarning)]
+
+    def test_coerce_counts_non_default_axes_only(self, g):
+        with warnings.catch_warnings(record=True) as caught:
+            warnings.simplefilter("always")
+            spec = coerce_scenario(
+                "simulate", g, "wcc", accelerator="hitgraph",
+                memory=None, cache="default", root=0)
+        assert spec.cache == "default"
+        assert not caught    # only one axis is away from its default
+        assert DEPRECATION_THRESHOLD == 3
+
+    def test_dynamic_spec_routes_to_timeline(self, g):
+        report = simulate(ScenarioSpec(g, "wcc", updates="pa-growth"))
+        assert report.graph.endswith("+pa-growth")
+
+
+class TestSweepEntryPoint:
+    def test_single_spec_positional(self, g):
+        rows = sweep(ScenarioSpec(g, "wcc", accelerator="hitgraph"))
+        assert len(rows) == 1
+        grid = sweep(graphs=[g], problems=["wcc"],
+                     accelerators=["hitgraph"])
+        assert _key(rows[0].report) == _key(grid[0].report)
+
+    def test_cases_mixes_specs_and_sweepcases(self, g):
+        rows = sweep(cases=[
+            ScenarioSpec(g, "wcc", accelerator="hitgraph"),
+            SweepCase(g, "wcc", accelerator="accugraph"),
+        ])
+        assert [r.case.accelerator for r in rows] == ["hitgraph",
+                                                      "accugraph"]
+
+
+class TestServeEntryPoint:
+    def test_submit_accepts_bare_spec(self, g):
+        with SimService() as svc:
+            job = svc.submit(ScenarioSpec(g, "wcc"))
+            rows = svc.result(job, timeout=60)
+            assert len(rows) == 1
+            assert svc.poll(job) == DONE
+
+    def test_resident_graph_lifecycle(self, g):
+        spec = ScenarioSpec(g, "wcc", updates="uniform-churn")
+        with SimService() as svc:
+            rid = svc.open_graph(spec, tenant="dyn")
+            ep0 = svc.result(svc.graph_job(rid), timeout=60)
+            assert ep0.epoch == 0
+            r1 = svc.result(svc.submit_update(rid), timeout=60)
+            r2 = svc.result(svc.submit_update(rid), timeout=60)
+            assert (r1.epoch, r2.epoch) == (1, 2)
+            info = svc.graph_info(rid)
+            assert info["epoch"] == 2 and info["open"]
+            svc.close_graph(rid)
+            with pytest.raises(KeyError, match="resident"):
+                svc.graph_info(rid)
+
+    def test_update_jobs_serialize_fifo(self, g):
+        """Two clients' updates apply in submission order — epochs come
+        back strictly sequential regardless of submission timing."""
+        spec = ScenarioSpec(g, "wcc", updates="pa-growth")
+        with SimService() as svc:
+            rid = svc.open_graph(spec)
+            jobs = [svc.submit_update(rid) for _ in range(3)]
+            epochs = [svc.result(j, timeout=60).epoch for j in jobs]
+            assert epochs == [1, 2, 3]
+
+    def test_update_against_failed_open_fails(self, g):
+        bad = ScenarioSpec(g, "pr", updates="pa-growth")  # no incr. pr
+        with SimService() as svc:
+            with pytest.raises(ValueError, match="incremental"):
+                svc.open_graph(bad)
+
+    def test_resident_matches_run_dynamic(self, g):
+        """Serve-side stepping is bit-identical to the in-process
+        timeline over the same stream."""
+        from repro.sim.dynamic import run_dynamic
+        spec = ScenarioSpec(g, "wcc", updates="uniform-churn")
+        with SimService() as svc:
+            rid = svc.open_graph(spec)
+            stream = spec.to_case().updates
+            eps = [svc.result(svc.graph_job(rid), timeout=60)]
+            for _ in range(stream.epochs):
+                eps.append(svc.result(svc.submit_update(rid),
+                                      timeout=60))
+        local = run_dynamic(g, "wcc", updates="uniform-churn")
+        assert [_key(e.report) for e in eps] == \
+            [_key(e.report) for e in local.epochs]
+
+
+class TestSearchEntryPoint:
+    def _space(self):
+        return get_accelerator("hitgraph").design_space().restrict(
+            memory=["ddr4"], cache=["none"])
+
+    def test_driver_accepts_spec(self, g):
+        driver = SearchDriver(self._space(), seed=1,
+                              budget=HalvingBudget(rungs=(4,),
+                                                   initial=4))
+        res = driver.search(ScenarioSpec(g, "wcc"))
+        assert res.front
+
+    def test_driver_spec_plus_problem_rejected(self, g):
+        driver = SearchDriver(self._space())
+        with pytest.raises(ValueError, match="inside the spec"):
+            driver.search(ScenarioSpec(g, "wcc"), "bfs")
+
+    def test_submit_search_streams_front(self, g):
+        with SimService() as svc:
+            sid = svc.submit_search(
+                self._space(), HalvingBudget(rungs=(4,), initial=4),
+                scenario=ScenarioSpec(g, "wcc"), seed=1)
+            res = svc.search_result(sid, timeout=180)
+            assert svc.poll(sid) == DONE
+            assert res.front
+            assert [e.key for e in svc.search_front(sid)] == \
+                [e.key for e in res.front]
+
+    def test_submit_search_cancel_keeps_partial(self, g):
+        with SimService() as svc:
+            sid = svc.submit_search(
+                self._space(),
+                HalvingBudget(rungs=(2, 4, 8), initial=8),
+                scenario=ScenarioSpec(g, "wcc"))
+            assert svc.cancel(sid)
+            try:
+                svc.search_result(sid, timeout=180)
+            except Exception:
+                pass       # raced to the first boundary with no front
+            assert svc.poll(sid) in (CANCELLED, DONE)
+
+    def test_search_matches_direct_driver(self, g):
+        """Service tenancy does not change what the search finds."""
+        budget = HalvingBudget(rungs=(4,), initial=4)
+        direct = SearchDriver(self._space(), seed=3,
+                              budget=budget).search(
+            ScenarioSpec(g, "wcc"))
+        with SimService() as svc:
+            sid = svc.submit_search(self._space(), budget,
+                                    scenario=ScenarioSpec(g, "wcc"),
+                                    seed=3)
+            served = svc.search_result(sid, timeout=180)
+        assert [e.key for e in served.front] == \
+            [e.key for e in direct.front]

@@ -27,6 +27,16 @@ FAST_RETRY = RetryPolicy(retries=2, backoff_base_s=0.001,
                          backoff_cap_s=0.01)
 
 
+def _poisoned(problem):
+    """A case that passes eager construction-time validation but fails
+    in the worker (unknown presets now raise at `SweepCase(...)`, so
+    forge the accelerator string after construction — models a registry
+    entry vanishing between admission and execution)."""
+    case = SweepCase("karate", problem)
+    object.__setattr__(case, "accelerator", "no-such-accel")
+    return case
+
+
 @pytest.fixture()
 def svc():
     s = SimService(workers=2, retry=FAST_RETRY)
@@ -60,8 +70,7 @@ class TestLifecycle:
         assert svc.poll(job) == DONE
 
     def test_failed_job_raises_fresh_jobfailed_with_cause(self, svc):
-        job = svc.submit([SweepCase("karate", "pr",
-                                    accelerator="no-such-accel")])
+        job = svc.submit([_poisoned("pr")])
         with pytest.raises(JobFailed) as e1:
             svc.result(job, timeout=120)
         with pytest.raises(JobFailed) as e2:
@@ -76,7 +85,7 @@ class TestLifecycle:
 
     def test_partial_failure_keeps_surviving_rows(self, svc):
         cases = [SweepCase("karate", "pr"),
-                 SweepCase("karate", "pr", accelerator="no-such-accel"),
+                 _poisoned("pr"),
                  SweepCase("karate", "bfs")]
         job = svc.submit(cases)
         with pytest.raises(JobFailed) as exc:

@@ -10,10 +10,11 @@ from repro.algorithms.common import Problem
 from repro.core import accugraph, hitgraph
 from repro.core.dram import CONTIGUOUS_ORDER, DRAMConfig, ddr4_2400r
 from repro.graphs.generators import rmat
-from repro.sim import (AcceleratorSpec, MemoryConfig, SimSession,
-                       SweepCase, SweepError, Sweeper, get_accelerator,
-                       list_accelerators, register_accelerator,
-                       resolve_memory, simulate, sweep)
+from repro.sim import (AcceleratorSpec, MemoryConfig, ScenarioSpec,
+                       SimSession, SweepCase, SweepError, Sweeper,
+                       get_accelerator, list_accelerators,
+                       register_accelerator, resolve_memory, simulate,
+                       sweep)
 from repro.sim.registry import _REGISTRY
 
 
@@ -241,8 +242,12 @@ class TestSweepErrors:
 
     def _cases(self, g):
         good = SweepCase(graph=g, problem="wcc", accelerator="accugraph")
+        # Unknown presets now fail eagerly at construction, so forge a
+        # case that passes admission but dies in the worker (models a
+        # registry entry vanishing between construction and execution).
         poisoned = SweepCase(graph=g, problem="wcc",
-                             accelerator="graphicionado")   # unregistered
+                             accelerator="accugraph")
+        object.__setattr__(poisoned, "accelerator", "graphicionado")
         return [good, poisoned, good]
 
     @pytest.mark.parametrize("workers", [1, 2, 4])
@@ -287,8 +292,8 @@ class TestCacheAxis:
         """AccuGraph's "hbm" variant replaces the whole DRAM device; the
         requested on-chip cache must still apply (it is attached after
         variants)."""
-        r = simulate(g_small, "wcc", accelerator="accugraph",
-                     cache="default", variant="hbm")
+        r = simulate(ScenarioSpec(g_small, "wcc", accelerator="accugraph",
+                                  cache="default", variant="hbm"))
         assert r.cache_hits > 0
         no_cache = simulate(g_small, "wcc", accelerator="accugraph",
                             variant="hbm")
